@@ -1,0 +1,128 @@
+//! END-TO-END DRIVER: exercises every layer on a real workload.
+//!
+//! 1. assemble + PXE-boot the paper's Table-1 Gridlan (L3 substrates);
+//! 2. reproduce Table 2 (ping) and the §3.3 MPI cross-check;
+//! 3. reproduce the Fig. 3 speed-up series and its headline numbers;
+//! 4. run NPB-EP **class S for real** through the resource manager: the
+//!    job is split into 26 per-core slices exactly as Fig. 3's protocol
+//!    scatters processes, each slice executes the AOT Pallas/JAX HLO via
+//!    PJRT (L1+L2+runtime), the tallies merge, and the result is checked
+//!    against the official NPB class-S verification sums;
+//! 5. report the measured host throughput and the model's extrapolation
+//!    to the paper's class-D scale.
+//!
+//! Run: `make artifacts && cargo run --release --example end_to_end`
+//! Results are recorded in EXPERIMENTS.md.
+
+use gridlan::bench::{fig3, mpilat, table1, table2};
+use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::perf::calibrate::Calibration;
+use gridlan::perf::speedmodel::GridlanPool;
+use gridlan::rm::queue::NodePool;
+use gridlan::rm::script::PbsScript;
+use gridlan::runtime::engine::EpEngine;
+use gridlan::sim::clock::DUR_SEC;
+use gridlan::util::table::secs;
+use gridlan::workload::ep::{EpClass, EpJob, EpTally};
+
+fn main() {
+    println!("=================================================================");
+    println!(" Gridlan end-to-end driver (paper: Rodrigues & Costa, 2016)");
+    println!("=================================================================\n");
+
+    // ---- 1. assemble + boot -------------------------------------------
+    let mut g = Gridlan::table1();
+    print!("{}", table1::render_inventory(&g.config));
+    let slowest = g.boot_all(0);
+    println!("\nall nodes PXE-booted; slowest {}", secs(slowest as f64 / 1e9));
+    for name in ["n01", "n02", "n03", "n04"] {
+        let plan = g.boot_plan(name);
+        println!("  {name}: boot {}", secs(plan.total() as f64 / 1e9));
+    }
+
+    // ---- 2. Table 2 + MPI ---------------------------------------------
+    println!();
+    let t2 = table2::table2_rows(&mut g, 200);
+    print!("{}", table2::render(&t2));
+    let overhead: f64 = t2.iter().map(|r| r.overhead_us()).sum::<f64>() / t2.len() as f64;
+    println!("mean Gridlan overhead: {overhead:.0} µs (paper: \"roughly 900 µs\")\n");
+    let m1 = mpilat::mpi_latency_rows(&mut g, 200);
+    print!("{}", mpilat::render(&m1));
+
+    // ---- 3. Fig 3 (model) ---------------------------------------------
+    println!();
+    let pool = GridlanPool { clients: g.clients.clone() };
+    let series = fig3::fig3_series(&pool, EpClass::D, 30, g.config.seed);
+    print!("{}", fig3::render(&series));
+    let checks = fig3::shape_checks(&series);
+    for (name, ok) in &checks {
+        println!("  [{}] {name}", if *ok { "ok" } else { "FAIL" });
+    }
+    assert!(checks.iter().all(|(_, ok)| *ok), "Fig 3 shape check failed");
+
+    // ---- 4. REAL compute: class S through the RM + PJRT ----------------
+    println!("\n== real NPB-EP class S through resource manager + PJRT ==");
+    let mut engine = match EpEngine::load_default() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("PJRT engine unavailable ({e}); run `make artifacts`");
+            std::process::exit(2);
+        }
+    };
+    println!("artifacts loaded: {:?}", engine.chunk_names());
+
+    // Submit one job per Gridlan core, each owning one Fig.3-style slice.
+    let job = EpJob::new(EpClass::S, 26);
+    let slices = job.slices();
+    let mut ids = Vec::new();
+    for s in &slices {
+        let script = PbsScript::parse(&format!(
+            "#PBS -N ep-s-{:02}\n#PBS -q gridlan\n#PBS -l nodes=1:ppn=1\n./ep.S.x\n",
+            s.proc
+        ))
+        .unwrap();
+        let payload = format!("ep:{}:{}", s.pair_offset, s.pair_count);
+        ids.push(g.pbs.qsub(&script, "attila", &payload, 0).expect("qsub"));
+    }
+    let sched = g.scheduler();
+    let started = g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), DUR_SEC);
+    assert_eq!(started.len(), 26, "all 26 single-core slices start at once");
+
+    let t0 = std::time::Instant::now();
+    let mut total = EpTally::default();
+    for id in &ids {
+        let payload = g.pbs.job(*id).unwrap().payload.clone();
+        let mut parts = payload.split(':').skip(1);
+        let offset: u64 = parts.next().unwrap().parse().unwrap();
+        let count: u64 = parts.next().unwrap().parse().unwrap();
+        let tally = engine.run_pairs(offset, count).expect("pjrt slice");
+        total.merge(&tally);
+        g.pbs.complete(*id, 0, 200 * DUR_SEC);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("class S ({} pairs) in {}:", total.pairs, secs(wall));
+    println!("  sx = {:.12e}", total.sx);
+    println!("  sy = {:.12e}", total.sy);
+    println!("  gaussian pairs = {}", total.nacc);
+    let verified = total.verify(EpClass::S).unwrap();
+    println!("  NPB class-S verification: {}", if verified { "PASS" } else { "FAIL" });
+    assert!(verified, "class S sums drifted");
+    assert_eq!(total.pairs, EpClass::S.pairs());
+    let rate = engine.measured_rate_mpairs().unwrap();
+    println!("  measured PJRT throughput: {rate:.1} Mpairs/s ({} pairs via PJRT)", engine.pjrt_pairs);
+
+    // ---- 5. extrapolate to the paper's scale ---------------------------
+    let cal = Calibration::new(rate);
+    println!("\n== extrapolation to class D (the paper's Fig. 3 workload) ==");
+    println!(
+        "  this host, 1 core:        {}",
+        secs(cal.secs_for(EpClass::D.pairs()))
+    );
+    println!("  model, 26 Gridlan cores:  {:.0} s (paper: ~212 s)", series.full_pool_secs);
+    println!(
+        "  model, comparison server: {} cores to match (paper: ~38)",
+        series.server_cores_to_match.map(|n| n.to_string()).unwrap_or(">64".into())
+    );
+
+    println!("\nEND-TO-END: all layers composed; all checks passed.");
+}

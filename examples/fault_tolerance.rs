@@ -1,0 +1,48 @@
+//! Fault tolerance demo (paper §2.6 + §4): clients get powered off, VMs
+//! crash, the network drops — and the monitor/watchdog/script-folder loop
+//! still drives every job to completion.
+//!
+//! Run: `cargo run --release --example fault_tolerance`
+
+use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::coordinator::scenario::{run_trace, Scenario};
+use gridlan::host::faults::FaultPlan;
+use gridlan::rm::alloc::ResourceRequest;
+use gridlan::sim::clock::DUR_SEC;
+use gridlan::util::table::secs;
+use gridlan::workload::trace::TraceJob;
+
+fn main() {
+    // 20 medium jobs over the first hour.
+    let trace: Vec<TraceJob> = (0..20)
+        .map(|i| TraceJob {
+            at: i as u64 * 180 * DUR_SEC,
+            owner: format!("user{:02}", i % 3),
+            request: ResourceRequest { nodes: 1, ppn: 2 + (i % 3) as u32 },
+            compute: (600 + 60 * (i % 5) as u64) * DUR_SEC,
+            walltime: 3600 * DUR_SEC,
+        })
+        .collect();
+
+    println!("{:<22} {:>9} {:>9} {:>8} {:>11} {:>9} {:>9}",
+        "fault profile", "completed", "requeued", "faults", "wd-restarts", "goodput", "makespan");
+    for (label, scale) in [("clean", 0.0), ("lab (1x)", 1.0), ("hostile (8x)", 8.0), ("brutal (20x)", 20.0)] {
+        let faults = if scale > 0.0 { FaultPlan::lab_default().scaled(scale) } else { FaultPlan::none() };
+        let scenario = Scenario { horizon: 8 * 3600 * DUR_SEC, faults, ..Default::default() };
+        let report = run_trace(Gridlan::table1(), trace.clone(), &scenario);
+        let m = &report.metrics;
+        println!(
+            "{label:<22} {:>6}/20 {:>9} {:>8} {:>11} {:>8.1}% {:>9}",
+            m.jobs_completed,
+            m.jobs_requeued,
+            m.faults,
+            m.watchdog_restarts,
+            100.0 * m.goodput(),
+            secs(m.makespan as f64 / 1e9),
+        );
+        // The §2.6/§4 claim: resilience machinery completes the work even
+        // under heavy churn (it just takes longer and wastes some cycles).
+        assert_eq!(m.jobs_completed, 20, "lost jobs under '{label}'");
+    }
+    println!("\nevery profile completed all 20 jobs — requeue + watchdog recovery held.");
+}

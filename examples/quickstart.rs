@@ -1,0 +1,64 @@
+//! Quickstart: assemble the paper's Table-1 Gridlan, boot it, and submit a
+//! job exactly the way the paper's users do (SSH → script → qsub → qstat).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::rm::queue::NodePool;
+use gridlan::rm::script::PbsScript;
+use gridlan::sim::clock::DUR_SEC;
+use gridlan::util::table::secs;
+
+fn main() {
+    // 1. The administrator assembled the Gridlan from its config
+    //    (defaults = the paper's exact testbed).
+    let mut g = Gridlan::table1();
+    println!("Gridlan with {} clients / {} cores", g.clients.len(), g.config.total_gridlan_cores());
+
+    // 2. Clients connect the VPN at OS start-up and their VMs PXE-boot
+    //    off the server (DHCP → TFTP kernel+initrd → nfsroot).
+    let boot = g.boot_all(0);
+    println!("slowest node boot: {}", secs(boot as f64 / 1e9));
+    for node in g.nodes.values() {
+        println!(
+            "  {}: {:?} (boot took {})",
+            node.name,
+            node.state,
+            secs(node.last_boot_duration().unwrap_or(0) as f64 / 1e9)
+        );
+    }
+
+    // 3. A user submits a job script to the gridlan queue.
+    let script = PbsScript::parse(
+        "#!/bin/bash\n\
+         #PBS -N my-simulation\n\
+         #PBS -q gridlan\n\
+         #PBS -l nodes=1:ppn=4\n\
+         #PBS -l walltime=00:30:00\n\
+         cd $PBS_O_WORKDIR\n\
+         ./simulate --input data.json\n",
+    )
+    .expect("valid script");
+    let id = g.pbs.qsub(&script, "student", "", 0).expect("accepted");
+    println!("\nqsub -> {id}");
+
+    // 4. The scheduler places it; qstat shows it running.
+    let sched = g.scheduler();
+    g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), DUR_SEC);
+    for (id, name, owner, state, queue) in g.pbs.qstat() {
+        println!("qstat: {id:<14} {name:<16} {owner:<8} {state}  {queue}");
+    }
+    let job = g.pbs.job(id).unwrap();
+    println!("allocated on: {:?}", job.allocation.as_ref().unwrap().cores);
+
+    // 5. ... compute happens (see examples/end_to_end.rs for real PJRT
+    //    compute) ... and the job completes.
+    g.pbs.complete(id, 0, 1800 * DUR_SEC);
+    let job = g.pbs.job(id).unwrap();
+    println!(
+        "completed: waited {}, ran {}",
+        secs(job.wait_time().unwrap() as f64 / 1e9),
+        secs(job.run_time().unwrap() as f64 / 1e9)
+    );
+    assert!(job.succeeded());
+}

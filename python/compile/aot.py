@@ -1,0 +1,81 @@
+"""AOT export: lower the L2 EP chunk graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published ``xla`` 0.1.6
+rust crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Also writes ``manifest.json`` describing each artifact (chunk geometry,
+input/output shapes) — the rust runtime reads this instead of hardcoding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.ep_kernel import GRID, LANES
+from .model import CHUNK_GEOMETRY, make_chunk_fn
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        # Default geometry (TPU-shaped); per-artifact geometry below wins.
+        "grid": GRID,
+        "lanes": LANES,
+        "outputs": ["sx", "sy"] + [f"q{i}" for i in range(10)] + ["nacc"],
+        "artifacts": {},
+    }
+    for name, (grid, lanes, ppl) in CHUNK_GEOMETRY.items():
+        spec = jax.ShapeDtypeStruct((grid, lanes), jnp.uint64)
+        fn = make_chunk_fn(ppl)
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        total = grid * lanes * ppl
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "grid": grid,
+            "lanes": lanes,
+            "pairs_per_lane": ppl,
+            "total_pairs": total,
+            "hlo_chars": len(text),
+        }
+        print(f"wrote {path}: grid={grid} lanes={lanes} -> {total} pairs/exec, {len(text)} chars")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    export_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

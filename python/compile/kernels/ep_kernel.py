@@ -1,0 +1,131 @@
+"""Layer-1 Pallas kernel: the NPB-EP hot loop.
+
+The EP benchmark is pure ALU work: per pair, two 46-bit LCG steps
+(u64 multiply + mask), the Marsaglia polar acceptance test, two f64
+transcendentals on accepted pairs, and a 10-bin histogram update.
+
+TPU formulation (see DESIGN.md §Hardware-Adaptation): the global random
+stream is split into ``grid * LANES`` independent sub-streams via LCG
+jump-ahead (done host-side).  Each Pallas program instance owns one
+``(LANES,)`` tile of seeds resident in VMEM and loops ``pairs_per_lane``
+times with a ``fori_loop`` whose carry (seed vector + tallies) also lives in
+VMEM/registers.  All work is element-wise VPU work — no gathers, no MXU —
+so the kernel's roofline is the vector ALU, exactly like the CPU original.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO which the rust runtime
+executes natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import A, MASK, NQ, R46
+
+jax.config.update("jax_enable_x64", True)
+
+# Default tile geometry.  LANES=128 matches the TPU VPU lane width; GRID
+# programs run sequentially in interpret mode but map to parallel cores on
+# a real device.
+LANES = 128
+GRID = 8
+
+
+def _ep_kernel_body(seed_ref, sx_ref, sy_ref, q_ref, nacc_ref, *, pairs_per_lane: int):
+    """One program instance: EP over a (LANES,) seed tile.
+
+    Outputs are per-block tallies; the L2 graph reduces over blocks.
+
+    Perf (EXPERIMENTS.md §Perf, L1 iteration 2): the histogram and the
+    acceptance counter accumulate in **int32** when the per-block pair
+    count provably fits (lanes * pairs_per_lane < 2^31) — int32 compare+add
+    vectorizes 2x wider than int64 on both the CPU backend and the TPU VPU.
+    Outputs stay int64.
+    """
+    a = jnp.uint64(A)
+    mask = jnp.uint64(MASK)
+    # Block shape is (1, LANES); flatten to a lane vector.
+    seeds = seed_ref[...].reshape(-1)
+    lanes = seeds.shape[0]
+    narrow = lanes * pairs_per_lane < 2**31
+    cdt = jnp.int32 if narrow else jnp.int64
+
+    def body(_, carry):
+        s, sx, sy, q, nacc = carry
+        s = (s * a) & mask
+        x = 2.0 * (s.astype(jnp.float64) * R46) - 1.0
+        s = (s * a) & mask
+        y = 2.0 * (s.astype(jnp.float64) * R46) - 1.0
+        t = x * x + y * y
+        acc = t <= 1.0
+        tsafe = jnp.where(acc, t, 1.0)
+        f = jnp.sqrt(-2.0 * jnp.log(tsafe) / tsafe)
+        gx = jnp.where(acc, x * f, 0.0)
+        gy = jnp.where(acc, y * f, 0.0)
+        l = jnp.maximum(jnp.abs(gx), jnp.abs(gy)).astype(jnp.int32)
+        # Predicated histogram: one-hot compare against the annulus index.
+        onehot = (l[:, None] == jnp.arange(NQ, dtype=jnp.int32)[None, :]) & acc[:, None]
+        q = q + onehot.sum(axis=0, dtype=cdt)
+        sx = sx + gx.sum()
+        sy = sy + gy.sum()
+        nacc = nacc + acc.sum(dtype=cdt)
+        return (s, sx, sy, q, nacc)
+
+    init = (
+        seeds,
+        jnp.float64(0.0),
+        jnp.float64(0.0),
+        jnp.zeros((NQ,), cdt),
+        cdt(0),
+    )
+    _, sx, sy, q, nacc = jax.lax.fori_loop(0, pairs_per_lane, body, init)
+    sx_ref[...] = sx[None]
+    sy_ref[...] = sy[None]
+    q_ref[...] = q.astype(jnp.int64)[None, :]
+    nacc_ref[...] = nacc.astype(jnp.int64)[None]
+
+
+def ep_pallas(seeds: jnp.ndarray, pairs_per_lane: int):
+    """EP tallies over a (grid, LANES) uint64 seed array.
+
+    Returns per-block partials: (sx[grid], sy[grid], q[grid, NQ],
+    nacc[grid]).  Lane g = block*LANES + lane must be seeded (host-side)
+    with the LCG state after ``g * 2 * pairs_per_lane`` steps so the union
+    of lanes reproduces the canonical single LCG stream.
+    """
+    grid, lanes = seeds.shape
+    kernel = functools.partial(_ep_kernel_body, pairs_per_lane=pairs_per_lane)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1, lanes), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1, NQ), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid,), jnp.float64),
+            jax.ShapeDtypeStruct((grid,), jnp.float64),
+            jax.ShapeDtypeStruct((grid, NQ), jnp.int64),
+            jax.ShapeDtypeStruct((grid,), jnp.int64),
+        ],
+        interpret=True,
+    )(seeds)
+
+
+def vmem_bytes(lanes: int = LANES) -> int:
+    """Estimated VMEM residency of one program instance (perf model).
+
+    Live per-lane arrays in the loop body: seed (u64), x, y, t, tsafe, f,
+    gx, gy (f64), l (i32), acc (bool/i8), one-hot (NQ x i8 compare) plus the
+    (NQ,) i64 tally. 8 x 8B + 4B + 1B + NQ B per lane, + block outputs.
+    """
+    per_lane = 8 * 8 + 4 + 1 + NQ
+    return lanes * per_lane + NQ * 8 + 3 * 8

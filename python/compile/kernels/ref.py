@@ -1,0 +1,146 @@
+"""Pure-jnp (and pure-python) correctness oracles for the NPB-EP kernel.
+
+Two oracles at different trust levels:
+
+* ``ep_gold_scalar`` — exact-integer, single-stream Python implementation of
+  the NPB "EP" (embarrassingly parallel) benchmark inner loop, following the
+  published pseudo-random scheme: a 46-bit multiplicative LCG
+
+      x_{k+1} = a * x_k  mod 2**46,      a = 5**13,  x_0 = seed
+
+  The j-th random of the stream (1-based) is ``r_j = a**j * seed mod 2**46``
+  normalised by 2**-46; pair j consumes (r_{2j-1}, r_{2j}).  This is the
+  ground truth the lane decomposition is validated against.
+
+* ``ep_ref_lanes`` — vectorised jnp implementation over per-lane seeds with
+  the exact layout the Pallas kernel uses (grid x lanes x pairs-per-lane).
+  The Pallas kernel must match this bit-for-bit on the integer stream and to
+  ~1e-12 on the float tallies.
+
+Both compute the EP observables:
+  sx, sy  : sums of the accepted Gaussian deviates
+  q[0..9] : annulus counts, l = floor(max(|X|,|Y|))
+  nacc    : number of accepted pairs (t = x^2+y^2 <= 1)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+# NPB EP constants.
+A = 5**13  # 1220703125
+MOD_BITS = 46
+MOD = 1 << MOD_BITS
+MASK = MOD - 1
+SEED = 271828183
+R46 = 2.0**-46
+NQ = 10
+
+
+def lcg_pow(exp: int, mult: int = A) -> int:
+    """a**exp mod 2**46 by binary exponentiation (exact python ints)."""
+    result = 1
+    base = mult & MASK
+    e = exp
+    while e > 0:
+        if e & 1:
+            result = (result * base) & MASK
+        base = (base * base) & MASK
+        e >>= 1
+    return result
+
+
+def lcg_jump(seed: int, nsteps: int) -> int:
+    """State after nsteps LCG applications starting from ``seed``."""
+    return (seed * lcg_pow(nsteps)) & MASK
+
+
+def lane_seeds(n_lanes: int, pairs_per_lane: int, seed: int = SEED) -> list[int]:
+    """Starting state for each lane so that lane g covers global pairs
+    [g*pairs_per_lane, (g+1)*pairs_per_lane).  Lane state is the stream state
+    *before* its first random, i.e. after g*2*pairs_per_lane steps."""
+    return [lcg_jump(seed, g * 2 * pairs_per_lane) for g in range(n_lanes)]
+
+
+def ep_gold_scalar(n_pairs: int, seed: int = SEED):
+    """Exact-integer scalar EP over ``n_pairs`` pairs. Slow; for small n."""
+    s = seed
+    sx = 0.0
+    sy = 0.0
+    q = [0] * NQ
+    nacc = 0
+    for _ in range(n_pairs):
+        s = (s * A) & MASK
+        x = 2.0 * (s * R46) - 1.0
+        s = (s * A) & MASK
+        y = 2.0 * (s * R46) - 1.0
+        t = x * x + y * y
+        if t <= 1.0:
+            f = math.sqrt(-2.0 * math.log(t) / t)
+            gx = x * f
+            gy = y * f
+            l = int(max(abs(gx), abs(gy)))
+            if l < NQ:
+                q[l] += 1
+            sx += gx
+            sy += gy
+            nacc += 1
+    return sx, sy, q, nacc
+
+
+def _lane_body(seeds: jnp.ndarray, pairs_per_lane: int):
+    """Vectorised EP over a vector of lane seeds; returns per-call tallies."""
+    a = jnp.uint64(A)
+    mask = jnp.uint64(MASK)
+
+    def step(carry, _):
+        s, sx, sy, q, nacc = carry
+        s = (s * a) & mask
+        x = 2.0 * (s.astype(jnp.float64) * R46) - 1.0
+        s = (s * a) & mask
+        y = 2.0 * (s.astype(jnp.float64) * R46) - 1.0
+        t = x * x + y * y
+        acc = t <= 1.0
+        # Guard log(0)/div0 on rejected pairs.
+        tsafe = jnp.where(acc, t, 1.0)
+        f = jnp.sqrt(-2.0 * jnp.log(tsafe) / tsafe)
+        gx = jnp.where(acc, x * f, 0.0)
+        gy = jnp.where(acc, y * f, 0.0)
+        l = jnp.maximum(jnp.abs(gx), jnp.abs(gy)).astype(jnp.int32)
+        onehot = (l[:, None] == jnp.arange(NQ)[None, :]) & acc[:, None]
+        q = q + onehot.sum(axis=0).astype(jnp.int64)
+        sx = sx + gx.sum()
+        sy = sy + gy.sum()
+        nacc = nacc + acc.sum().astype(jnp.int64)
+        return (s, sx, sy, q, nacc), None
+
+    init = (
+        seeds,
+        jnp.float64(0.0),
+        jnp.float64(0.0),
+        jnp.zeros((NQ,), jnp.int64),
+        jnp.int64(0),
+    )
+    (s, sx, sy, q, nacc), _ = jax.lax.scan(step, init, None, length=pairs_per_lane)
+    return sx, sy, q, nacc
+
+
+def ep_ref_lanes(seeds, pairs_per_lane: int):
+    """Reference EP over per-lane seeds, shape (n_lanes,) uint64.
+
+    Returns (sx, sy, q[10] int64, nacc int64) summed over all lanes.
+    """
+    seeds = jnp.asarray(seeds, dtype=jnp.uint64)
+    return _lane_body(seeds, pairs_per_lane)
+
+
+def ep_ref_grid(seeds, pairs_per_lane: int):
+    """Reference with the kernel's (grid, lanes) seed layout."""
+    seeds = jnp.asarray(seeds, dtype=jnp.uint64)
+    g, l = seeds.shape
+    return ep_ref_lanes(seeds.reshape(g * l), pairs_per_lane)

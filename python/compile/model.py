@@ -1,0 +1,81 @@
+"""Layer-2 JAX compute graph for the EP workload.
+
+The unit the rust runtime executes is an *EP chunk*: a fixed-geometry batch
+of ``GRID * LANES * pairs_per_lane`` pairs whose lane seeds are provided by
+the caller (the rust coordinator does the LCG jump-ahead when it splits a
+job across simulated Gridlan cores).
+
+The graph is just: pallas kernel over blocks -> reduce partials.  One HLO
+artifact is exported per chunk size; the rust side picks the largest chunk
+that divides the remaining work and iterates.
+
+Outputs are packed into f64 so the rust side deals with one dtype:
+  out[0]      = sx
+  out[1]      = sy
+  out[2..12]  = q[0..9]   (exact: counts < 2^53)
+  out[12]     = nacc
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ep_kernel import GRID, LANES, ep_pallas
+from .kernels.ref import NQ
+
+jax.config.update("jax_enable_x64", True)
+
+
+def ep_chunk(seeds: jnp.ndarray, pairs_per_lane: int) -> jnp.ndarray:
+    """EP tallies for one chunk.  seeds: (GRID, LANES) uint64.
+
+    Returns f64[13] = [sx, sy, q0..q9, nacc].
+    """
+    sx, sy, q, nacc = ep_pallas(seeds, pairs_per_lane)
+    return jnp.concatenate(
+        [
+            sx.sum()[None],
+            sy.sum()[None],
+            q.sum(axis=0).astype(jnp.float64),
+            nacc.sum().astype(jnp.float64)[None],
+        ]
+    )
+
+
+def chunk_pairs(pairs_per_lane: int, grid: int = GRID, lanes: int = LANES) -> int:
+    """Total pairs consumed by one chunk execution."""
+    return grid * lanes * pairs_per_lane
+
+
+# Chunk geometries exported as AOT artifacts: name -> (grid, lanes,
+# pairs_per_lane).  Two families (EXPERIMENTS.md §Perf, L1 iteration 1):
+#
+# * CPU-optimized (grid=1, wide lanes): one fat block amortizes the scan
+#   step over 4096 f64 lanes — ~+14% on the CPU PJRT backend, which is
+#   what the rust runtime executes;
+# * TPU-shaped (grid=8, lanes=128): the production TPU geometry (one block
+#   per core, 128-lane VPU tiles) kept as an exported artifact so the HLO
+#   the paper's "real" deployment would ship is built and tested too.
+CHUNK_GEOMETRY = {
+    "ep_c22": (1, 4096, 1024),  # 4_194_304 pairs, CPU bulk
+    "ep_c20": (1, 4096, 256),   # 1_048_576 pairs, CPU bulk
+    "ep_c16": (8, 128, 64),     # 65_536 pairs, TPU-shaped
+    "ep_c10": (1, 1024, 1),     # 1_024 pairs, remainder mop-up
+}
+
+# Back-compat view: name -> pairs_per_lane (tests use it with GRID/LANES).
+CHUNK_SIZES = {"ep_c10": 1, "ep_c16": 64, "ep_c18": 256, "ep_c20": 1024}
+
+
+def make_chunk_fn(pairs_per_lane: int):
+    """A jit-able fn of one (grid, lanes) u64 input, returning a 1-tuple
+    (the AOT interchange contract lowers with return_tuple=True)."""
+
+    def fn(seeds):
+        return (ep_chunk(seeds, pairs_per_lane),)
+
+    return fn
+
+
+assert NQ == 10, "output packing assumes 10 annuli"

@@ -1,0 +1,195 @@
+//! Fig. 3: the EP class-D speed-up experiment.
+//!
+//! Reproduces the paper's methodology exactly: for each run, draw a random
+//! core count n ∈ [1, 26], scatter n processes randomly over the clients
+//! (respecting core counts), record the elapsed time; plot against the
+//! comparison server's curve and the ideal t1/n line.
+
+use crate::perf::amdahl;
+use crate::perf::speedmodel::{ComparisonServer, GridlanPool};
+use crate::util::rng::SplitMix64;
+use crate::util::table::{Align, Table};
+use crate::workload::ep::EpClass;
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct Fig3Point {
+    pub cores: u32,
+    pub gridlan_secs: f64,
+    pub server_secs: f64,
+    pub ideal_secs: f64,
+}
+
+/// The whole series.
+#[derive(Debug, Clone)]
+pub struct Fig3Series {
+    pub class: EpClass,
+    pub points: Vec<Fig3Point>,
+    /// Measured single-core time used for the ideal line.
+    pub t1_secs: f64,
+    /// Elapsed with all 26 Gridlan cores.
+    pub full_pool_secs: f64,
+    /// Cores the comparison server needs to match the full pool.
+    pub server_cores_to_match: Option<u32>,
+}
+
+/// Run the experiment: `runs` random core counts (the paper's protocol),
+/// plus the deterministic 1..max sweep for the curve.
+pub fn fig3_series(pool: &GridlanPool, class: EpClass, runs: usize, seed: u64) -> Fig3Series {
+    let mut rng = SplitMix64::new(seed);
+    let server = ComparisonServer::opteron();
+    let max = pool.total_cores();
+    let pairs = class.pairs();
+
+    // t1: measured single-core run (random client — the paper's t1 is one
+    // draw; we use the median of a few draws for stability).
+    let mut t1s: Vec<f64> = (0..5)
+        .map(|_| pool.elapsed_secs(pairs, &pool.random_placement(1, &mut rng)))
+        .collect();
+    t1s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let t1 = t1s[t1s.len() / 2];
+
+    let mut points = Vec::new();
+    for run in 0..runs {
+        // Paper: "a random number of Gridlan cores ... from 1 to 26".
+        let n = 1 + (rng.gen_range(max as u64) as u32);
+        let placement = pool.random_placement(n, &mut rng);
+        let g = pool.elapsed_secs(pairs, &placement);
+        let s = server.elapsed_secs(pairs, n.min(server.cpu.cores));
+        points.push(Fig3Point {
+            cores: n,
+            gridlan_secs: g,
+            server_secs: s,
+            ideal_secs: t1 / n as f64,
+        });
+        let _ = run;
+    }
+    points.sort_by_key(|p| p.cores);
+
+    // Full-pool reference + crossover.
+    let full_placement = {
+        let mut rng2 = SplitMix64::new(seed ^ 0xFFFF);
+        pool.random_placement(max, &mut rng2)
+    };
+    let full = pool.elapsed_secs(pairs, &full_placement);
+    let need = server.cores_to_match(pairs, full);
+    Fig3Series {
+        class,
+        points,
+        t1_secs: t1,
+        full_pool_secs: full,
+        server_cores_to_match: need,
+    }
+}
+
+/// Paper-style rendering: the series plus the headline facts.
+pub fn render(series: &Fig3Series) -> String {
+    let mut t = Table::new(&["cores", "Gridlan t(s)", "Server t(s)", "ideal t1/n", "dev vs ideal"])
+        .title(&format!(
+            "FIG 3 — NPB-EP class {} speed-up (t1 = {:.0}s)",
+            series.class.name(),
+            series.t1_secs
+        ))
+        .align(&[Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for p in &series.points {
+        t.row(&[
+            p.cores.to_string(),
+            format!("{:.1}", p.gridlan_secs),
+            format!("{:.1}", p.server_secs),
+            format!("{:.1}", p.ideal_secs),
+            format!("{:+.1}%", 100.0 * (p.gridlan_secs - p.ideal_secs) / p.ideal_secs),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\nfull pool ({} cores): {:.0}s   (paper: ~212s)\n",
+        26,
+        series.full_pool_secs
+    ));
+    out.push_str(&format!(
+        "comparison server cores to match: {}   (paper: ~38)\n",
+        series
+            .server_cores_to_match
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| ">64".into())
+    ));
+    out
+}
+
+/// The Fig-3 qualitative checks as data (used by tests and EXPERIMENTS.md).
+pub fn shape_checks(series: &Fig3Series) -> Vec<(String, bool)> {
+    let mut checks = Vec::new();
+    // 1. Gridlan beats the server at every sampled core count.
+    checks.push((
+        "gridlan outperforms server at equal cores (all samples)".into(),
+        series.points.iter().all(|p| p.gridlan_secs < p.server_secs),
+    ));
+    // 2. Points sit on/above the ideal line (Turbo effect), tolerantly.
+    let above = series
+        .points
+        .iter()
+        .filter(|p| p.cores > 2)
+        .filter(|p| p.gridlan_secs >= p.ideal_secs * 0.98)
+        .count();
+    let total = series.points.iter().filter(|p| p.cores > 2).count().max(1);
+    checks.push((
+        "multi-core points at/above ideal t1/n".into(),
+        above as f64 / total as f64 > 0.9,
+    ));
+    // 3. Full pool lands near the paper's 212 s.
+    checks.push((
+        "26-core elapsed within 190..235s".into(),
+        (190.0..235.0).contains(&series.full_pool_secs),
+    ));
+    // 4. Crossover near 38 server cores.
+    checks.push((
+        "server needs 34..42 cores to match".into(),
+        series.server_cores_to_match.map(|n| (34..=42).contains(&n)).unwrap_or(false),
+    ));
+    // 5. Deviation grows with core count (heterogeneity + turbo).
+    let fit = amdahl::fit_ideal(
+        &series.points.iter().map(|p| (p.cores, p.gridlan_secs)).collect::<Vec<_>>(),
+    );
+    checks.push(("mean deviation from fitted ideal >= 0".into(), fit.mean_rel_deviation >= -0.02));
+    checks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_shape_checks_pass() {
+        let pool = GridlanPool::table1();
+        let series = fig3_series(&pool, EpClass::D, 40, 7);
+        for (name, ok) in shape_checks(&series) {
+            assert!(ok, "shape check failed: {name}");
+        }
+    }
+
+    #[test]
+    fn series_is_deterministic() {
+        let pool = GridlanPool::table1();
+        let a = fig3_series(&pool, EpClass::D, 10, 3);
+        let b = fig3_series(&pool, EpClass::D, 10, 3);
+        assert_eq!(a.points.len(), b.points.len());
+        assert_eq!(a.full_pool_secs, b.full_pool_secs);
+    }
+
+    #[test]
+    fn render_mentions_headlines() {
+        let pool = GridlanPool::table1();
+        let s = render(&fig3_series(&pool, EpClass::D, 5, 1));
+        assert!(s.contains("FIG 3"));
+        assert!(s.contains("paper: ~212s"));
+        assert!(s.contains("paper: ~38"));
+    }
+
+    #[test]
+    fn smaller_classes_scale_down() {
+        let pool = GridlanPool::table1();
+        let d = fig3_series(&pool, EpClass::D, 5, 2);
+        let a = fig3_series(&pool, EpClass::A, 5, 2);
+        assert!(a.full_pool_secs < d.full_pool_secs / 100.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Benchmark harnesses: one per paper table/figure (DESIGN.md §4).
+//!
+//! Each harness returns structured rows AND renders the paper-style table,
+//! so `cargo bench` targets, the CLI (`gridlan bench ...`), and the
+//! integration tests all share one implementation.
+
+pub mod fig3;
+pub mod mpilat;
+pub mod table1;
+pub mod table2;
+
+pub use fig3::{fig3_series, Fig3Point, Fig3Series};
+pub use mpilat::{mpi_latency_rows, MpiLatRow};
+pub use table1::{inventory_rows, render_inventory};
+pub use table2::{table2_rows, Table2Row};

@@ -1,0 +1,91 @@
+//! M1: the §3.3 MPI latency cross-check.
+//!
+//! Paper: "The results for the latency in node n01 are 1200(80) µs for the
+//! MPI latency test and 550(20) µs for the [host] ping test" — i.e. the
+//! MPI RTT to the *node* is consistent with the node's ICMP ping (1250(30))
+//! and the host ping stays much lower.
+
+use crate::coordinator::gridlan::Gridlan;
+use crate::mpi::comm::{Communicator, RankLoc};
+use crate::mpi::latency::mpi_latency_test;
+use crate::util::table::{Align, Table};
+
+/// One node's cross-check row.
+#[derive(Debug, Clone)]
+pub struct MpiLatRow {
+    pub node: String,
+    pub mpi_mean_us: f64,
+    pub mpi_std_us: f64,
+    pub icmp_node_mean_us: f64,
+    pub icmp_host_mean_us: f64,
+}
+
+/// Measure MPI ping-pong (server rank ↔ node rank) next to the ICMP pings.
+pub fn mpi_latency_rows(g: &mut Gridlan, iters: usize) -> Vec<MpiLatRow> {
+    let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
+    names
+        .iter()
+        .map(|n| {
+            let vnet = g.client(n).unwrap().hypervisor.vnet_one_way_us;
+            let comm = Communicator::new(vec![
+                RankLoc::Server,
+                RankLoc::Node { client: n.clone(), vnet_us: vnet },
+            ]);
+            let mut rng = g.rng.fork();
+            let s = mpi_latency_test(&comm, &g.net, &g.hub, 0, 1, 56, iters, &mut rng)
+                .expect("node reachable");
+            let icmp_node = g.ping_node(n, iters).unwrap().mean_us();
+            let icmp_host = g.ping_host(n, iters).unwrap().mean_us();
+            MpiLatRow {
+                node: n.clone(),
+                mpi_mean_us: s.mean(),
+                mpi_std_us: s.std(),
+                icmp_node_mean_us: icmp_node,
+                icmp_host_mean_us: icmp_host,
+            }
+        })
+        .collect()
+}
+
+pub fn render(rows: &[MpiLatRow]) -> String {
+    let mut t = Table::new(&["Node", "MPI 56B RTT", "ICMP node RTT", "ICMP host RTT"])
+        .title("M1 — MPI latency vs ICMP ping (µs); paper: n01 MPI 1200(80) vs node ICMP 1250(30)")
+        .align(&[Align::Left, Align::Right, Align::Right, Align::Right]);
+    for r in rows {
+        t.row(&[
+            r.node.clone(),
+            format!("{:.0}({:.0})", r.mpi_mean_us, r.mpi_std_us),
+            format!("{:.0}", r.icmp_node_mean_us),
+            format!("{:.0}", r.icmp_host_mean_us),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mpi_consistent_with_node_icmp() {
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        for r in mpi_latency_rows(&mut g, 100) {
+            // The paper's claim: MPI RTT ~ node ICMP RTT (within ~10%),
+            // both far above host ICMP.
+            let ratio = r.mpi_mean_us / r.icmp_node_mean_us;
+            assert!((0.85..1.15).contains(&ratio), "{}: ratio={ratio}", r.node);
+            assert!(r.mpi_mean_us > 1.5 * r.icmp_host_mean_us);
+        }
+    }
+
+    #[test]
+    fn n01_matches_paper_numbers() {
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        let rows = mpi_latency_rows(&mut g, 200);
+        let n01 = rows.iter().find(|r| r.node == "n01").unwrap();
+        // Paper: 1200(80) µs MPI.  Allow 10%.
+        assert!((n01.mpi_mean_us - 1200.0).abs() < 140.0, "mpi={}", n01.mpi_mean_us);
+    }
+}

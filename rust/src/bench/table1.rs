@@ -1,0 +1,57 @@
+//! Table 1: "Gridlan clients in the experiment."
+
+use crate::config::Config;
+use crate::host::client::ClientOs;
+use crate::util::table::Table;
+
+/// Rows: (node, processor, cores, client OS).
+pub fn inventory_rows(cfg: &Config) -> Vec<(String, String, u32, String)> {
+    cfg.clients
+        .iter()
+        .map(|c| {
+            let os = match c.os {
+                ClientOs::Linux => "GNU/Linux (Debian 8.1)".to_string(),
+                ClientOs::Windows => "Windows".to_string(),
+            };
+            (c.name.clone(), c.cpu.name.clone(), c.cpu.cores, os)
+        })
+        .collect()
+}
+
+/// The paper-style rendering.
+pub fn render_inventory(cfg: &Config) -> String {
+    let mut t = Table::new(&["Node", "Processor", "No. of cores", "Client OS"])
+        .title(&format!(
+            "TABLE 1 — Gridlan clients. Total cores: {}",
+            cfg.total_gridlan_cores()
+        ));
+    for (node, cpu, cores, os) in inventory_rows(cfg) {
+        t.row(&[node, cpu, cores.to_string(), os]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_rows_reproduced() {
+        let rows = inventory_rows(&Config::table1());
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].1, "Xeon E5-2630");
+        assert_eq!(rows[0].2, 12);
+        assert_eq!(rows[1].1, "Core i7-3930K");
+        assert_eq!(rows[2].1, "Core i7-2920XM");
+        assert_eq!(rows[3].1, "Core i7 960");
+    }
+
+    #[test]
+    fn render_contains_all_nodes() {
+        let s = render_inventory(&Config::table1());
+        for n in ["n01", "n02", "n03", "n04"] {
+            assert!(s.contains(n));
+        }
+        assert!(s.contains("26"));
+    }
+}

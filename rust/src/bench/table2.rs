@@ -1,0 +1,114 @@
+//! Table 2: "Ping from Gridlan server" — host vs node (VM) RTTs.
+
+use crate::coordinator::gridlan::Gridlan;
+use crate::util::table::{Align, Table};
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub node: String,
+    pub host_mean_us: f64,
+    pub host_std_us: f64,
+    pub node_mean_us: f64,
+    pub node_std_us: f64,
+}
+
+impl Table2Row {
+    pub fn overhead_us(&self) -> f64 {
+        self.node_mean_us - self.host_mean_us
+    }
+}
+
+/// The paper's reference values for shape checking: (node, host, vm).
+pub const PAPER_TABLE2: [(&str, f64, f64); 4] = [
+    ("n01", 550.0, 1250.0),
+    ("n02", 660.0, 1500.0),
+    ("n03", 750.0, 1650.0),
+    ("n04", 610.0, 1400.0),
+];
+
+/// Run the Table-2 measurement on a booted Gridlan.
+pub fn table2_rows(g: &mut Gridlan, probes: usize) -> Vec<Table2Row> {
+    let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
+    names
+        .iter()
+        .map(|n| {
+            let host = g.ping_host(n, probes).expect("host reachable");
+            let node = g.ping_node(n, probes).expect("node reachable");
+            Table2Row {
+                node: n.clone(),
+                host_mean_us: host.mean_us(),
+                host_std_us: host.std_us(),
+                node_mean_us: node.mean_us(),
+                node_std_us: node.std_us(),
+            }
+        })
+        .collect()
+}
+
+/// Paper-style rendering with paper reference columns.
+pub fn render(rows: &[Table2Row]) -> String {
+    let mut t = Table::new(&[
+        "Node",
+        "Client ping (host)",
+        "Node ping (VM)",
+        "Overhead",
+        "Paper host",
+        "Paper VM",
+    ])
+    .title("TABLE 2 — Ping from Gridlan server (mean(std) µs)")
+    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
+    for r in rows {
+        let paper = PAPER_TABLE2.iter().find(|p| p.0 == r.node);
+        t.row(&[
+            r.node.clone(),
+            format!("{:.0}({:.0})", r.host_mean_us, r.host_std_us),
+            format!("{:.0}({:.0})", r.node_mean_us, r.node_std_us),
+            format!("+{:.0}", r.overhead_us()),
+            paper.map(|p| format!("{:.0}", p.1)).unwrap_or_default(),
+            paper.map(|p| format!("{:.0}", p.2)).unwrap_or_default(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_track_paper_within_tolerance() {
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        let rows = table2_rows(&mut g, 100);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            let (_, ph, pv) = *PAPER_TABLE2.iter().find(|p| p.0 == r.node).unwrap();
+            assert!((r.host_mean_us - ph).abs() / ph < 0.06, "{}: {} vs {}", r.node, r.host_mean_us, ph);
+            assert!((r.node_mean_us - pv).abs() / pv < 0.09, "{}: {} vs {}", r.node, r.node_mean_us, pv);
+            assert!(r.host_std_us > 0.0 && r.node_std_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn ordering_preserved() {
+        // The paper's ordering facts: n03 has the slowest host ping, n01
+        // the fastest; VM overhead is positive everywhere.
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        let rows = table2_rows(&mut g, 100);
+        let host = |n: &str| rows.iter().find(|r| r.node == n).unwrap().host_mean_us;
+        assert!(host("n03") > host("n02"));
+        assert!(host("n02") > host("n04"));
+        assert!(host("n04") > host("n01"));
+        assert!(rows.iter().all(|r| r.overhead_us() > 500.0));
+    }
+
+    #[test]
+    fn render_is_complete() {
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        let s = render(&table2_rows(&mut g, 50));
+        assert!(s.contains("n01") && s.contains("TABLE 2"));
+    }
+}

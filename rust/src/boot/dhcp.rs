@@ -1,0 +1,131 @@
+//! DHCP on the VPN subnet (paper §2.5 step 3–4: "The virtual machine sends
+//! the DHCP requests through the VPN's tunnel ... The cluster server
+//! responds ... and sends the appropriate files").
+//!
+//! Lease bookkeeping plus the DORA (Discover/Offer/Request/Ack) timing
+//! model: four messages, i.e. two round trips through the tunnel.
+
+use std::collections::HashMap;
+
+/// A granted lease.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lease {
+    pub mac: String,
+    pub ip: String,
+    /// Lease duration in seconds (bookkeeping only).
+    pub lease_secs: u64,
+}
+
+/// The server-side DHCP service bound to the VPN subnet.
+#[derive(Debug, Clone)]
+pub struct DhcpServer {
+    subnet_prefix: String,
+    pool_start: u8,
+    pool_end: u8,
+    next: u8,
+    by_mac: HashMap<String, Lease>,
+    taken: HashMap<String, String>, // ip -> mac
+}
+
+impl DhcpServer {
+    /// Pool `prefix.start ..= prefix.end`, e.g. ("10.8.1", 10, 250).
+    pub fn new(subnet_prefix: &str, start: u8, end: u8) -> Self {
+        assert!(start <= end);
+        Self {
+            subnet_prefix: subnet_prefix.to_string(),
+            pool_start: start,
+            pool_end: end,
+            next: start,
+            by_mac: HashMap::new(),
+            taken: HashMap::new(),
+        }
+    }
+
+    /// Full DORA for `mac`. Re-requests return the same lease (DHCP
+    /// affinity — nodes keep their address across reboots).
+    pub fn dora(&mut self, mac: &str) -> Option<Lease> {
+        if let Some(l) = self.by_mac.get(mac) {
+            return Some(l.clone());
+        }
+        // Find a free address starting from `next`.
+        let span = (self.pool_end - self.pool_start + 1) as usize;
+        for _ in 0..span {
+            let candidate = format!("{}.{}", self.subnet_prefix, self.next);
+            let cur = self.next;
+            self.next = if cur >= self.pool_end { self.pool_start } else { cur + 1 };
+            if !self.taken.contains_key(&candidate) {
+                let lease = Lease { mac: mac.to_string(), ip: candidate.clone(), lease_secs: 86_400 };
+                self.taken.insert(candidate, mac.to_string());
+                self.by_mac.insert(mac.to_string(), lease.clone());
+                return Some(lease);
+            }
+        }
+        None // pool exhausted
+    }
+
+    /// Release a lease (VM destroyed).
+    pub fn release(&mut self, mac: &str) {
+        if let Some(l) = self.by_mac.remove(mac) {
+            self.taken.remove(&l.ip);
+        }
+    }
+
+    pub fn active_leases(&self) -> usize {
+        self.by_mac.len()
+    }
+
+    /// DORA wall time given one-way tunnel delay (µs): 4 messages = 2 RTT,
+    /// plus server-side processing per exchange.
+    pub fn dora_duration_us(one_way_us: f64) -> f64 {
+        const SERVER_PROC_US: f64 = 120.0; // lease lookup + config render
+        4.0 * one_way_us + 2.0 * SERVER_PROC_US
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leases_are_unique() {
+        let mut d = DhcpServer::new("10.8.1", 10, 20);
+        let a = d.dora("aa:00").unwrap();
+        let b = d.dora("bb:00").unwrap();
+        assert_ne!(a.ip, b.ip);
+        assert_eq!(d.active_leases(), 2);
+    }
+
+    #[test]
+    fn rerequest_returns_same_ip() {
+        let mut d = DhcpServer::new("10.8.1", 10, 20);
+        let a1 = d.dora("aa:00").unwrap();
+        let a2 = d.dora("aa:00").unwrap();
+        assert_eq!(a1.ip, a2.ip);
+        assert_eq!(d.active_leases(), 1);
+    }
+
+    #[test]
+    fn pool_exhaustion_returns_none() {
+        let mut d = DhcpServer::new("10.8.1", 10, 12);
+        assert!(d.dora("a").is_some());
+        assert!(d.dora("b").is_some());
+        assert!(d.dora("c").is_some());
+        assert!(d.dora("d").is_none());
+    }
+
+    #[test]
+    fn release_recycles_address() {
+        let mut d = DhcpServer::new("10.8.1", 10, 10);
+        let a = d.dora("a").unwrap();
+        assert!(d.dora("b").is_none());
+        d.release("a");
+        let b = d.dora("b").unwrap();
+        assert_eq!(a.ip, b.ip);
+    }
+
+    #[test]
+    fn dora_timing_is_two_rtts_plus_processing() {
+        let t = DhcpServer::dora_duration_us(500.0);
+        assert!((t - (2000.0 + 240.0)).abs() < 1e-9);
+    }
+}

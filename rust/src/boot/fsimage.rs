@@ -1,0 +1,233 @@
+//! In-memory filesystem image: the server's `/nfsroot` and `/srv/tftp`.
+//!
+//! Paper §2.3: "All virtualized computing nodes share the same root
+//! filesystem ... To install new software in the nodes, the administrator
+//! must change the nodes' system in the folder /nfsroot, with the command
+//! `chroot /nfsroot apt-get install package`".
+//!
+//! The image tracks paths and sizes (contents are irrelevant to timing);
+//! `chroot_install` models the admin operation and makes the new software
+//! instantly visible to every node — the centralized-maintenance property.
+
+use std::collections::BTreeMap;
+
+/// One entry in the image.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Entry {
+    Dir,
+    File { bytes: u64 },
+}
+
+/// A filesystem tree keyed by absolute path ("/" separated).
+#[derive(Debug, Clone, Default)]
+pub struct FsImage {
+    entries: BTreeMap<String, Entry>,
+}
+
+impl FsImage {
+    pub fn new() -> Self {
+        let mut fs = Self::default();
+        fs.mkdir_p("/");
+        fs
+    }
+
+    /// A Debian-8-ish nfsroot: enough structure for the boot model and the
+    /// admin workflows. Sizes approximate a minimal netboot install.
+    pub fn debian_nfsroot() -> Self {
+        let mut fs = Self::new();
+        for d in ["/bin", "/etc", "/lib", "/usr", "/usr/bin", "/usr/lib", "/var", "/home", "/opt"] {
+            fs.mkdir_p(d);
+        }
+        fs.write("/bin/busybox", 1_100_000);
+        fs.write("/etc/fstab", 400);
+        fs.write("/etc/hostname", 8);
+        fs.write("/lib/libc-2.19.so", 1_700_000);
+        fs.write("/usr/lib/base.bundle", 380_000_000); // aggregate userland
+        fs
+    }
+
+    /// TFTP directory with the netboot artifacts (paper: kernel updates =
+    /// copy a new kernel into the TFTP directory).
+    pub fn tftp_dir() -> Self {
+        let mut fs = Self::new();
+        fs.mkdir_p("/srv/tftp");
+        fs.write("/srv/tftp/vmlinuz", 5_200_000);
+        fs.write("/srv/tftp/initrd.img", 18_500_000);
+        fs.write("/srv/tftp/pxelinux.0", 42_000);
+        fs
+    }
+
+    fn normalize(path: &str) -> String {
+        let p = path.trim_end_matches('/');
+        if p.is_empty() {
+            "/".to_string()
+        } else {
+            p.to_string()
+        }
+    }
+
+    pub fn mkdir_p(&mut self, path: &str) {
+        let path = Self::normalize(path);
+        let mut cur = String::new();
+        for seg in path.split('/').filter(|s| !s.is_empty()) {
+            cur.push('/');
+            cur.push_str(seg);
+            self.entries.entry(cur.clone()).or_insert(Entry::Dir);
+        }
+        self.entries.entry("/".to_string()).or_insert(Entry::Dir);
+    }
+
+    /// Create/overwrite a file; parents are created.
+    pub fn write(&mut self, path: &str, bytes: u64) {
+        let path = Self::normalize(path);
+        if let Some(parent) = path.rfind('/') {
+            if parent > 0 {
+                self.mkdir_p(&path[..parent]);
+            }
+        }
+        self.entries.insert(path, Entry::File { bytes });
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Entry> {
+        self.entries.get(&Self::normalize(path))
+    }
+
+    pub fn file_size(&self, path: &str) -> Option<u64> {
+        match self.get(path)? {
+            Entry::File { bytes } => Some(*bytes),
+            Entry::Dir => None,
+        }
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.get(path).is_some()
+    }
+
+    pub fn remove(&mut self, path: &str) -> bool {
+        let path = Self::normalize(path);
+        // Remove the subtree.
+        let keys: Vec<String> = self
+            .entries
+            .range(path.clone()..)
+            .take_while(|(k, _)| **k == path || k.starts_with(&format!("{path}/")))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &keys {
+            self.entries.remove(k);
+        }
+        !keys.is_empty()
+    }
+
+    /// List direct children of a directory.
+    pub fn ls(&self, dir: &str) -> Vec<String> {
+        let dir = Self::normalize(dir);
+        let prefix = if dir == "/" { "/".to_string() } else { format!("{dir}/") };
+        self.entries
+            .keys()
+            .filter(|k| {
+                k.starts_with(&prefix)
+                    && *k != &dir
+                    && !k[prefix.len()..].contains('/')
+                    && !k[prefix.len()..].is_empty()
+            })
+            .cloned()
+            .collect()
+    }
+
+    /// Total bytes under a path.
+    pub fn du(&self, path: &str) -> u64 {
+        let path = Self::normalize(path);
+        self.entries
+            .iter()
+            .filter(|(k, _)| **k == path || k.starts_with(&format!("{path}/")) || path == "/")
+            .map(|(_, e)| match e {
+                Entry::File { bytes } => *bytes,
+                Entry::Dir => 0,
+            })
+            .sum()
+    }
+
+    /// The paper's admin operation: `chroot /nfsroot apt-get install pkg`.
+    /// Adds the package payload under /usr; every node sees it immediately
+    /// because they share this image.
+    pub fn chroot_install(&mut self, package: &str, bytes: u64) {
+        self.write(&format!("/usr/lib/{package}.pkg"), bytes);
+        self.write(&format!("/usr/bin/{package}"), bytes / 50 + 1024);
+        self.write(&format!("/var/lib/dpkg/info/{package}.list"), 2_000);
+    }
+
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_creates_parents() {
+        let mut fs = FsImage::new();
+        fs.write("/a/b/c.txt", 10);
+        assert_eq!(fs.get("/a"), Some(&Entry::Dir));
+        assert_eq!(fs.get("/a/b"), Some(&Entry::Dir));
+        assert_eq!(fs.file_size("/a/b/c.txt"), Some(10));
+    }
+
+    #[test]
+    fn ls_lists_direct_children_only() {
+        let mut fs = FsImage::new();
+        fs.write("/x/one", 1);
+        fs.write("/x/two", 2);
+        fs.write("/x/sub/three", 3);
+        let ls = fs.ls("/x");
+        assert_eq!(ls, vec!["/x/one", "/x/sub", "/x/two"]);
+    }
+
+    #[test]
+    fn du_sums_subtree() {
+        let mut fs = FsImage::new();
+        fs.write("/x/a", 100);
+        fs.write("/x/s/b", 50);
+        fs.write("/y/c", 7);
+        assert_eq!(fs.du("/x"), 150);
+        assert_eq!(fs.du("/"), 157);
+    }
+
+    #[test]
+    fn remove_subtree() {
+        let mut fs = FsImage::new();
+        fs.write("/x/a", 1);
+        fs.write("/x/b/c", 2);
+        assert!(fs.remove("/x"));
+        assert!(!fs.exists("/x/a"));
+        assert!(!fs.exists("/x"));
+        assert!(!fs.remove("/x"));
+    }
+
+    #[test]
+    fn chroot_install_visible_in_shared_root() {
+        let mut fs = FsImage::debian_nfsroot();
+        let before = fs.du("/");
+        fs.chroot_install("gromacs", 85_000_000);
+        assert!(fs.exists("/usr/bin/gromacs"));
+        assert!(fs.du("/") > before + 85_000_000);
+    }
+
+    #[test]
+    fn tftp_dir_has_boot_artifacts() {
+        let fs = FsImage::tftp_dir();
+        assert!(fs.file_size("/srv/tftp/vmlinuz").unwrap() > 1_000_000);
+        assert!(fs.file_size("/srv/tftp/initrd.img").unwrap() > 10_000_000);
+    }
+
+    #[test]
+    fn kernel_update_is_a_copy_into_tftp() {
+        // Paper: "To update a kernel, a new one must be compiled and copied
+        // to the TFTP directory."
+        let mut fs = FsImage::tftp_dir();
+        let old = fs.file_size("/srv/tftp/vmlinuz").unwrap();
+        fs.write("/srv/tftp/vmlinuz", old + 300_000);
+        assert_eq!(fs.file_size("/srv/tftp/vmlinuz").unwrap(), old + 300_000);
+    }
+}

@@ -1,0 +1,28 @@
+//! Remote boot substrate (paper §2.3): PXE → DHCP → TFTP → nfsroot.
+//!
+//! "the node will request (using a DHCP request from the PXE) the necessary
+//! files from the Gridlan server to boot.  After booting the Linux kernel
+//! and the initramfs, the virtual machine will mount the root filesystem
+//! via NFS."
+//!
+//! * [`fsimage`] — the server's `/nfsroot` shared root filesystem and the
+//!   TFTP directory; centralized admin (`chroot apt-get install`) operates
+//!   on it;
+//! * [`dhcp`] — lease management on the VPN subnet + the DORA exchange;
+//! * [`tftp`] — lock-step block transfer timing (kernel + initramfs);
+//! * [`nfs`] — mount + RPC read model for the root filesystem;
+//! * [`pxe`] — composes the above into a per-node [`pxe::BootPlan`].
+
+pub mod dhcp;
+pub mod fsimage;
+pub mod ipxe;
+pub mod nfs;
+pub mod pxe;
+pub mod tftp;
+
+pub use dhcp::DhcpServer;
+pub use ipxe::IpxeServer;
+pub use fsimage::FsImage;
+pub use nfs::NfsExport;
+pub use pxe::{BootParams, BootPlan};
+pub use tftp::TftpServer;

@@ -1,0 +1,104 @@
+//! NFSv3 root-filesystem model (paper §2.3 "nfsroot").
+//!
+//! Unlike TFTP, NFS reads pipeline: the client keeps several READ RPCs in
+//! flight (Linux nfsroot default wsize/rsize 32 KiB, up to `slots`
+//! concurrent slots), so effective throughput ≈ slots × rsize / RTT,
+//! capped by link bandwidth.
+
+use super::fsimage::FsImage;
+
+/// An NFS export backed by a shared [`FsImage`].
+#[derive(Debug, Clone)]
+pub struct NfsExport {
+    pub root: FsImage,
+    /// READ/WRITE RPC payload size (bytes).
+    pub rsize: u32,
+    /// Concurrent RPC slots the client keeps in flight.
+    pub slots: u32,
+    /// Server-side per-RPC cost, µs.
+    pub per_rpc_server_us: f64,
+}
+
+impl NfsExport {
+    pub fn debian() -> Self {
+        Self {
+            root: FsImage::debian_nfsroot(),
+            rsize: 32 * 1024,
+            slots: 16,
+            per_rpc_server_us: 35.0,
+        }
+    }
+
+    /// MOUNT + PORTMAP + FSINFO handshake duration (µs): 3 round trips.
+    pub fn mount_duration_us(&self, one_way_us: f64) -> f64 {
+        3.0 * (2.0 * one_way_us + self.per_rpc_server_us)
+    }
+
+    /// Time (µs) to read `bytes` sequentially with pipelining, given the
+    /// per-packet one-way delay and per-byte serialization (µs/byte).
+    pub fn read_duration_us(&self, bytes: u64, one_way_us: f64, us_per_byte: f64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let rpcs = (bytes + self.rsize as u64 - 1) / self.rsize as u64;
+        let rtt = 2.0 * one_way_us + self.per_rpc_server_us;
+        // With `slots` RPCs pipelined, the RTT cost is amortized slots-fold;
+        // serialization of the payload is not parallelizable on one link.
+        let latency_cost = rpcs as f64 * rtt / self.slots as f64;
+        let wire_cost = bytes as f64 * us_per_byte;
+        latency_cost.max(wire_cost) + rtt // + first-RPC fill
+    }
+
+    /// Boot-time read volume: kernel userland working set, not the whole
+    /// image (page cache reads on demand). ~1/3 of the base bundle.
+    pub fn boot_read_bytes(&self) -> u64 {
+        self.root.du("/") / 3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mount_is_three_round_trips() {
+        let nfs = NfsExport::debian();
+        let d = nfs.mount_duration_us(500.0);
+        assert!((d - 3.0 * (1000.0 + 35.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelining_beats_lockstep() {
+        let nfs = NfsExport::debian();
+        let bytes = 10_000_000u64;
+        // Gigabit serialization (0.008 µs/B) so latency, not wire, is the
+        // contended resource.
+        let pipelined = nfs.read_duration_us(bytes, 700.0, 0.008);
+        // Lock-step equivalent: every RPC pays full RTT.
+        let rpcs = (bytes / nfs.rsize as u64 + 1) as f64;
+        let lockstep = rpcs * (1400.0 + nfs.per_rpc_server_us);
+        assert!(pipelined < lockstep / 4.0, "pipelined={pipelined} lockstep={lockstep}");
+    }
+
+    #[test]
+    fn zero_read_is_free() {
+        assert_eq!(NfsExport::debian().read_duration_us(0, 500.0, 0.1), 0.0);
+    }
+
+    #[test]
+    fn wire_bandwidth_caps_throughput() {
+        let nfs = NfsExport::debian();
+        // Very low latency: wire cost dominates.
+        let bytes = 100_000_000u64;
+        let d = nfs.read_duration_us(bytes, 10.0, 0.08);
+        assert!(d >= bytes as f64 * 0.08);
+    }
+
+    #[test]
+    fn shared_root_install_changes_boot_volume() {
+        let mut nfs = NfsExport::debian();
+        let before = nfs.boot_read_bytes();
+        nfs.root.chroot_install("openfoam", 300_000_000);
+        assert!(nfs.boot_read_bytes() > before);
+    }
+}

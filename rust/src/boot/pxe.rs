@@ -1,0 +1,157 @@
+//! PXE boot orchestration: compose hypervisor power-on, DHCP, TFTP, kernel
+//! init and nfsroot mount into a per-node [`BootPlan`] (paper §2.5).
+//!
+//! The plan is computed analytically from the node's tunnel latency and
+//! link profile, then applied on the event engine by the coordinator; this
+//! keeps the protocol models decoupled from the world type.
+
+use super::dhcp::DhcpServer;
+use super::nfs::NfsExport;
+use super::tftp::TftpServer;
+use crate::sim::clock::{from_us_f64, SimTime};
+use crate::vm::hypervisor::Hypervisor;
+use crate::vm::node::NodeState;
+
+/// Per-node inputs to the boot time model.
+#[derive(Debug, Clone, Copy)]
+pub struct BootParams {
+    /// One-way packet delay node↔server through VPN+virtio, µs.
+    pub one_way_us: f64,
+    /// Serialization cost on the bottleneck link, µs per byte.
+    pub us_per_byte: f64,
+    /// Kernel + initramfs decompress/init time, guest side, ms — scaled by
+    /// hypervisor cpu efficiency.
+    pub kernel_init_ms: f64,
+}
+
+impl Default for BootParams {
+    fn default() -> Self {
+        Self { one_way_us: 700.0, us_per_byte: 0.008, kernel_init_ms: 2_800.0 }
+    }
+}
+
+/// The phases of one node boot, with durations.
+#[derive(Debug, Clone)]
+pub struct BootPlan {
+    /// (state entered, phase duration) in order; the node is Up after the
+    /// last phase completes.
+    pub phases: Vec<(NodeState, SimTime)>,
+}
+
+impl BootPlan {
+    /// Compute the plan for one node.
+    pub fn compute(
+        hv: &Hypervisor,
+        tftp: &TftpServer,
+        nfs: &NfsExport,
+        params: &BootParams,
+    ) -> Self {
+        let power_on = from_us_f64(hv.power_on_ms * 1e3);
+
+        let dhcp = from_us_f64(DhcpServer::dora_duration_us(params.one_way_us));
+
+        let kernel = tftp
+            .transfer_duration_us("/srv/tftp/vmlinuz", params.one_way_us, params.us_per_byte)
+            .expect("kernel in tftp dir");
+        let initrd = tftp
+            .transfer_duration_us("/srv/tftp/initrd.img", params.one_way_us, params.us_per_byte)
+            .expect("initrd in tftp dir");
+        let pxelinux = tftp
+            .transfer_duration_us("/srv/tftp/pxelinux.0", params.one_way_us, params.us_per_byte)
+            .expect("pxelinux in tftp dir");
+        let tftp_total = from_us_f64(kernel + initrd + pxelinux);
+
+        let kernel_init = from_us_f64(params.kernel_init_ms * 1e3 / hv.cpu_efficiency.max(0.01));
+        let mount = nfs.mount_duration_us(params.one_way_us);
+        let userland =
+            nfs.read_duration_us(nfs.boot_read_bytes(), params.one_way_us, params.us_per_byte);
+        let nfs_total = from_us_f64(mount + userland) + kernel_init;
+
+        Self {
+            phases: vec![
+                (NodeState::PoweringOn, power_on),
+                (NodeState::Dhcp, dhcp),
+                (NodeState::Tftp, tftp_total),
+                (NodeState::NfsMount, nfs_total),
+                (NodeState::Up, 0),
+            ],
+        }
+    }
+
+    /// Total boot duration.
+    pub fn total(&self) -> SimTime {
+        self.phases.iter().map(|&(_, d)| d).sum()
+    }
+
+    /// Duration of a named phase.
+    pub fn phase(&self, s: NodeState) -> Option<SimTime> {
+        self.phases.iter().find(|&&(p, _)| p == s).map(|&(_, d)| d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::hypervisor::HypervisorKind;
+
+    fn plan(kind: HypervisorKind, one_way_us: f64) -> BootPlan {
+        let hv = Hypervisor::new(kind);
+        let tftp = TftpServer::new(512);
+        let nfs = NfsExport::debian();
+        BootPlan::compute(
+            &hv,
+            &tftp,
+            &nfs,
+            &BootParams { one_way_us, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn phases_in_lifecycle_order() {
+        let p = plan(HypervisorKind::QemuKvm, 700.0);
+        let states: Vec<NodeState> = p.phases.iter().map(|&(s, _)| s).collect();
+        assert_eq!(
+            states,
+            vec![
+                NodeState::PoweringOn,
+                NodeState::Dhcp,
+                NodeState::Tftp,
+                NodeState::NfsMount,
+                NodeState::Up
+            ]
+        );
+    }
+
+    #[test]
+    fn tftp_dominates_on_high_latency_path() {
+        let p = plan(HypervisorKind::QemuKvm, 700.0);
+        let tftp = p.phase(NodeState::Tftp).unwrap();
+        assert!(tftp > p.phase(NodeState::Dhcp).unwrap() * 100);
+        assert!(tftp as f64 > p.total() as f64 * 0.4, "tftp share too small");
+    }
+
+    #[test]
+    fn boot_time_plausible_minutes_scale() {
+        // Paper-scale tunnel: boot takes on the order of a minute or two —
+        // acceptable because nodes boot once and stay up.
+        let p = plan(HypervisorKind::QemuKvm, 700.0);
+        let secs = p.total() as f64 / 1e9;
+        assert!(secs > 20.0 && secs < 300.0, "secs={secs}");
+    }
+
+    #[test]
+    fn lower_latency_boots_faster() {
+        let fast = plan(HypervisorKind::QemuKvm, 200.0);
+        let slow = plan(HypervisorKind::QemuKvm, 900.0);
+        assert!(fast.total() < slow.total());
+    }
+
+    #[test]
+    fn pure_qemu_pays_kernel_init_penalty() {
+        let kvm = plan(HypervisorKind::QemuKvm, 700.0);
+        let tcg = plan(HypervisorKind::PureQemu, 700.0);
+        assert!(
+            tcg.phase(NodeState::NfsMount).unwrap() > kvm.phase(NodeState::NfsMount).unwrap() * 3
+        );
+    }
+}

@@ -1,0 +1,113 @@
+//! TFTP transfer model (paper §3.2: "Transmission of the node kernel
+//! through the network: TFTP").
+//!
+//! TFTP (RFC 1350) is lock-step: every DATA block waits for its ACK, so
+//! transfer time ≈ n_blocks × (RTT + per-block serialization + server
+//! read).  That makes kernel+initramfs transfer the dominant boot phase
+//! over a high-latency tunnel — which is why the boot-storm bench (A3) is
+//! interesting and why the paper mentions iPXE/HTTP as an alternative.
+
+/// Classic TFTP block size.
+pub const BLKSIZE_DEFAULT: u32 = 512;
+/// RFC 2348 negotiated block size typically used by PXE ROMs.
+pub const BLKSIZE_PXE: u32 = 1432;
+
+/// Server-side file registry + transfer timing.
+#[derive(Debug, Clone)]
+pub struct TftpServer {
+    files: super::fsimage::FsImage,
+    pub blksize: u32,
+    /// Per-block server read+send overhead, µs.
+    pub per_block_server_us: f64,
+}
+
+impl TftpServer {
+    pub fn new(blksize: u32) -> Self {
+        Self {
+            files: super::fsimage::FsImage::tftp_dir(),
+            blksize,
+            per_block_server_us: 20.0,
+        }
+    }
+
+    pub fn files(&self) -> &super::fsimage::FsImage {
+        &self.files
+    }
+
+    pub fn files_mut(&mut self) -> &mut super::fsimage::FsImage {
+        &mut self.files
+    }
+
+    /// Number of DATA blocks for a file of `bytes` (last block may be
+    /// short; an exact multiple still needs a final empty block).
+    pub fn n_blocks(&self, bytes: u64) -> u64 {
+        bytes / self.blksize as u64 + 1
+    }
+
+    /// RRQ transfer duration (µs) for `path`, given per-packet one-way
+    /// delay and per-byte serialization cost (µs/byte) on the path.
+    /// Returns None for missing files.
+    pub fn transfer_duration_us(
+        &self,
+        path: &str,
+        one_way_us: f64,
+        us_per_byte: f64,
+    ) -> Option<f64> {
+        let bytes = self.files.file_size(path)?;
+        let blocks = self.n_blocks(bytes) as f64;
+        // Each block: server read/send + DATA flight + payload
+        // serialization + ACK flight (ACK serialization negligible).
+        let per_block =
+            self.per_block_server_us + one_way_us + self.blksize as f64 * us_per_byte + one_way_us;
+        Some(blocks * per_block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_count_includes_terminator() {
+        let t = TftpServer::new(512);
+        assert_eq!(t.n_blocks(0), 1);
+        assert_eq!(t.n_blocks(511), 1);
+        assert_eq!(t.n_blocks(512), 2); // full block then empty terminator
+        assert_eq!(t.n_blocks(1025), 3);
+    }
+
+    #[test]
+    fn lockstep_dominated_by_rtt() {
+        let t = TftpServer::new(512);
+        let fast = t.transfer_duration_us("/srv/tftp/vmlinuz", 100.0, 0.01).unwrap();
+        let slow = t.transfer_duration_us("/srv/tftp/vmlinuz", 1000.0, 0.01).unwrap();
+        // 10x RTT ≈ ~9x transfer time when RTT dominates.
+        assert!(slow / fast > 5.0, "slow={slow} fast={fast}");
+    }
+
+    #[test]
+    fn bigger_blksize_fewer_blocks_faster() {
+        let t512 = TftpServer::new(BLKSIZE_DEFAULT);
+        let t1432 = TftpServer::new(BLKSIZE_PXE);
+        let d512 = t512.transfer_duration_us("/srv/tftp/initrd.img", 600.0, 0.08).unwrap();
+        let d1432 = t1432.transfer_duration_us("/srv/tftp/initrd.img", 600.0, 0.08).unwrap();
+        assert!(d1432 < d512 * 0.6, "d1432={d1432} d512={d512}");
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        let t = TftpServer::new(512);
+        assert!(t.transfer_duration_us("/srv/tftp/nope", 100.0, 0.01).is_none());
+    }
+
+    #[test]
+    fn kernel_transfer_over_tunnel_takes_tens_of_seconds() {
+        // Sanity against the paper's setup: ~700µs one-way node path,
+        // 5.2MB kernel, 512B blocks -> tens of seconds.  (Why PXE boot over
+        // WAN-ish latency hurts, and why blksize negotiation matters.)
+        let t = TftpServer::new(512);
+        let d = t.transfer_duration_us("/srv/tftp/vmlinuz", 700.0, 0.08).unwrap();
+        let secs = d / 1e6;
+        assert!(secs > 10.0 && secs < 60.0, "secs={secs}");
+    }
+}

@@ -1,0 +1,320 @@
+//! System assembly and the direct (non-event) measurement APIs.
+
+use crate::boot::nfs::NfsExport;
+use crate::boot::pxe::{BootParams, BootPlan};
+use crate::boot::tftp::TftpServer;
+use crate::boot::fsimage::FsImage;
+use crate::config::{ClientConfig, Config, SchedPolicy};
+use crate::host::client::ClientAgent;
+use crate::monitor::pinger::Pinger;
+use crate::monitor::resilience::ScriptFolder;
+use crate::monitor::statusd::StatusService;
+use crate::netsim::icmp::{ping_sweep, PingStats, ECHO_PROC_US};
+use crate::netsim::packet::Packet;
+use crate::netsim::topology::{DeviceId, LinkProfile, Network};
+use crate::perf::speedmodel::GridlanPool;
+use crate::rm::queue::NodePool;
+use crate::rm::sched::{BackfillScheduler, FifoScheduler, Scheduler};
+use crate::rm::server::PbsServer;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Summary;
+use crate::vm::node::{NodeState, VmNode};
+use crate::vpn::hub::VpnHub;
+use crate::vpn::tunnel::TunnelCost;
+use std::collections::BTreeMap;
+
+/// The assembled system.
+pub struct Gridlan {
+    pub config: Config,
+    pub net: Network,
+    pub server_dev: DeviceId,
+    pub hub: VpnHub,
+    pub clients: Vec<ClientAgent>,
+    pub client_dev: BTreeMap<String, DeviceId>,
+    pub nodes: BTreeMap<String, VmNode>,
+    pub pbs: PbsServer,
+    pub pinger: Pinger,
+    pub status: StatusService,
+    pub folder: ScriptFolder,
+    pub server_fs: FsImage,
+    pub tftp: TftpServer,
+    pub nfs: NfsExport,
+    pub rng: SplitMix64,
+}
+
+impl Gridlan {
+    /// Build the whole system from a config. Nodes start Off/offline;
+    /// call [`boot_all`] (or run a scenario) to bring them up.
+    pub fn build(config: Config) -> Gridlan {
+        let mut rng = SplitMix64::new(config.seed);
+        // ---- network: server - backbone switch chain - clients
+        let mut net = Network::new();
+        net.jitter_sigma_us = config.jitter_us;
+        let server_dev = net.add_host("server", config.server_stack_us);
+        let backbone = LinkProfile { latency_us: 3.0, bandwidth_mbps: config.backbone_mbps };
+        // Shared first switch; per-client extra hops as private chains.
+        let sw0 = net.add_switch("sw0", config.switch_proc_us);
+        net.link(server_dev, sw0, backbone);
+        let mut client_dev = BTreeMap::new();
+        for c in &config.clients {
+            let mut prev = sw0;
+            for h in 1..c.switch_hops {
+                let sw = net.add_switch(&format!("sw-{}-{h}", c.name), config.switch_proc_us);
+                net.link(prev, sw, backbone);
+                prev = sw;
+            }
+            let dev = net.add_host(&c.name, c.stack_us);
+            net.link(prev, dev, LinkProfile { latency_us: 3.0, bandwidth_mbps: c.link_mbps });
+            client_dev.insert(c.name.clone(), dev);
+        }
+        // ---- VPN hub + client agents + VM nodes
+        let hub = VpnHub::new(server_dev, rng.next_u64());
+        let mut clients = Vec::new();
+        let mut nodes = BTreeMap::new();
+        for c in &config.clients {
+            let mut agent = ClientAgent::new(&c.name, c.os, c.cpu.clone());
+            if let Some(hv) = c.hypervisor {
+                agent = agent.with_hypervisor(hv);
+            }
+            nodes.insert(c.name.clone(), VmNode::new(&c.name, &c.name, c.cpu.cores));
+            clients.push(agent);
+        }
+        // ---- resource manager
+        let mut pbs = PbsServer::new();
+        for c in &config.clients {
+            pbs.register_node(&c.name, c.cpu.cores, NodePool::Gridlan);
+        }
+        if let Some((name, n, cores)) = &config.cluster_partition {
+            for i in 0..*n {
+                let node = format!("{name}-{i:02}");
+                pbs.register_node(&node, *cores, NodePool::Cluster);
+                pbs.node_up(&node);
+            }
+        }
+        // ---- monitoring
+        let node_names: Vec<String> = config.clients.iter().map(|c| c.name.clone()).collect();
+        let pinger = Pinger::new(&node_names);
+        let mut status = StatusService::new();
+        for c in &config.clients {
+            status.bind(&c.name, &c.name);
+        }
+        let mut server_fs = FsImage::new();
+        server_fs.mkdir_p("/var/spool/gridlan");
+        let folder = ScriptFolder::new("/var/spool/gridlan");
+        Gridlan {
+            config,
+            net,
+            server_dev,
+            hub,
+            clients,
+            client_dev,
+            nodes,
+            pbs,
+            pinger,
+            status,
+            folder,
+            server_fs,
+            tftp: TftpServer::new(512),
+            nfs: NfsExport::debian(),
+            rng,
+        }
+    }
+
+    /// The paper's testbed.
+    pub fn table1() -> Gridlan {
+        Self::build(Config::table1())
+    }
+
+    pub fn scheduler(&self) -> Box<dyn Scheduler> {
+        match self.config.sched {
+            SchedPolicy::Fifo => Box::new(FifoScheduler),
+            SchedPolicy::Backfill => Box::new(BackfillScheduler),
+        }
+    }
+
+    pub fn client(&self, name: &str) -> Option<&ClientAgent> {
+        self.clients.iter().find(|c| c.name == name)
+    }
+
+    fn client_config(&self, name: &str) -> &ClientConfig {
+        self.config.clients.iter().find(|c| c.name == name).expect("unknown client")
+    }
+
+    /// Speed-model pool view of this deployment.
+    pub fn pool(&self) -> GridlanPool {
+        GridlanPool { clients: self.clients.clone() }
+    }
+
+    // ------------------------------------------------------------- boot
+
+    /// VPN-connect a client (OS start-up step 1). Errors if no key.
+    pub fn connect_client(&mut self, name: &str) -> Result<(), String> {
+        let dev = *self.client_dev.get(name).ok_or("unknown client")?;
+        let key = self.hub.provision(name); // admin pre-provisioned
+        self.hub.connect(name, &key, dev, TunnelCost::default())?;
+        if let Some(c) = self.clients.iter_mut().find(|c| c.name == name) {
+            c.vpn_connected = true;
+        }
+        Ok(())
+    }
+
+    /// Boot parameters for a client's node (latency through VPN+virtio).
+    pub fn boot_params(&mut self, name: &str) -> BootParams {
+        let one_way = self.node_one_way_us(name).unwrap_or(700.0);
+        let mbps = self.client_config(name).link_mbps;
+        BootParams {
+            one_way_us: one_way,
+            us_per_byte: 8.0 / mbps,
+            ..BootParams::default()
+        }
+    }
+
+    /// Compute the node's boot plan.
+    pub fn boot_plan(&mut self, name: &str) -> BootPlan {
+        let hv = self.client(name).expect("client").hypervisor.clone();
+        let params = self.boot_params(name);
+        BootPlan::compute(&hv, &self.tftp, &self.nfs, &params)
+    }
+
+    /// Bring every node up immediately (fast-forward boot; the event-driven
+    /// path lives in `scenario`).  Returns the slowest boot duration.
+    pub fn boot_all(&mut self, now: crate::sim::SimTime) -> crate::sim::SimTime {
+        let names: Vec<String> = self.config.clients.iter().map(|c| c.name.clone()).collect();
+        let mut slowest = 0;
+        for name in names {
+            self.connect_client(&name).expect("provisioned key");
+            let plan = self.boot_plan(&name);
+            let node = self.nodes.get_mut(&name).unwrap();
+            let mut t = now;
+            for &(state, dur) in &plan.phases {
+                node.advance(state, t);
+                t += dur;
+            }
+            // BootPlan ends with (Up, 0) so node is Up at t.
+            debug_assert_eq!(node.state, NodeState::Up);
+            slowest = slowest.max(plan.total());
+            self.pbs.node_up(&name);
+        }
+        let up: Vec<String> = self.nodes.keys().cloned().collect();
+        self.pinger.sweep(now + slowest, |n| up.iter().any(|u| u == n));
+        slowest
+    }
+
+    // ----------------------------------------------------- measurements
+
+    /// Mean one-way node path (server↔VM) in µs: tunnel + virtio.
+    pub fn node_one_way_us(&mut self, name: &str) -> Option<f64> {
+        let p = Packet::icmp_echo();
+        let vnet = self.client(name)?.hypervisor.vnet_one_way_us;
+        let mut rng = self.rng.fork();
+        let tunnel = self.hub.server_to_client_us(&self.net, name, &p, &mut rng)?;
+        Some(tunnel + vnet)
+    }
+
+    /// Table-2 host ping: server → client host, `count` echoes.
+    pub fn ping_host(&mut self, name: &str, count: usize) -> Option<PingStats> {
+        let dev = *self.client_dev.get(name)?;
+        let mut rng = self.rng.fork();
+        Some(ping_sweep(&self.net, self.server_dev, dev, &Packet::icmp_echo(), count, &mut rng))
+    }
+
+    /// Table-2 node ping: server → VM through VPN + virtio.
+    pub fn ping_node(&mut self, name: &str, count: usize) -> Option<PingStats> {
+        if !self.hub.is_connected(name) {
+            return None;
+        }
+        let vnet = self.client(name)?.hypervisor.vnet_one_way_us;
+        let p = Packet::icmp_echo();
+        let mut rng = self.rng.fork();
+        let mut s = Summary::new();
+        for _ in 0..count {
+            let fwd = self.hub.server_to_client_us(&self.net, name, &p, &mut rng)?;
+            let back = self.hub.server_to_client_us(&self.net, name, &p, &mut rng)?;
+            s.push(fwd + back + 2.0 * vnet + ECHO_PROC_US);
+        }
+        Some(PingStats { rtts_us: s, sent: count, lost: 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_and_boots_table1() {
+        let mut g = Gridlan::table1();
+        assert_eq!(g.clients.len(), 4);
+        let slowest = g.boot_all(0);
+        assert!(slowest > 0);
+        for node in g.nodes.values() {
+            assert!(node.state.is_running());
+        }
+        // All nodes online in the RM.
+        let (busy, total) = g.pbs.pool_utilization(NodePool::Gridlan);
+        assert_eq!((busy, total), (0, 26));
+        // Monitor saw them.
+        assert_eq!(g.pinger.on_nodes().len(), 4);
+    }
+
+    #[test]
+    fn table2_host_pings_in_paper_range() {
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        let expected = [("n01", 550.0), ("n02", 660.0), ("n03", 750.0), ("n04", 610.0)];
+        for (name, target) in expected {
+            let s = g.ping_host(name, 200).unwrap();
+            let m = s.mean_us();
+            assert!(
+                (m - target).abs() < target * 0.05,
+                "{name}: host ping {m:.0} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn table2_node_pings_in_paper_range() {
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        let expected = [("n01", 1250.0), ("n02", 1500.0), ("n03", 1650.0), ("n04", 1400.0)];
+        for (name, target) in expected {
+            let s = g.ping_node(name, 200).unwrap();
+            let m = s.mean_us();
+            assert!(
+                (m - target).abs() < target * 0.08,
+                "{name}: node ping {m:.0} vs paper {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn overhead_is_roughly_900us() {
+        // Paper: "The additional overhead provided by the Gridlan is
+        // roughly 900 µs."
+        let mut g = Gridlan::table1();
+        g.boot_all(0);
+        let mut overheads = Vec::new();
+        for name in ["n01", "n02", "n03", "n04"] {
+            let host = g.ping_host(name, 200).unwrap().mean_us();
+            let node = g.ping_node(name, 200).unwrap().mean_us();
+            overheads.push(node - host);
+        }
+        let mean = overheads.iter().sum::<f64>() / overheads.len() as f64;
+        assert!((700.0..1000.0).contains(&mean), "mean overhead {mean:.0} µs");
+    }
+
+    #[test]
+    fn unconnected_node_unpingable() {
+        let mut g = Gridlan::table1();
+        assert!(g.ping_node("n01", 5).is_none());
+        assert!(g.ping_host("nope", 5).is_none());
+    }
+
+    #[test]
+    fn cluster_partition_registers_nodes() {
+        let mut cfg = Config::table1();
+        cfg.cluster_partition = Some(("opteron".into(), 1, 64));
+        let g = Gridlan::build(cfg);
+        let (_, total) = g.pbs.pool_utilization(NodePool::Cluster);
+        assert_eq!(total, 64);
+    }
+}

@@ -1,0 +1,75 @@
+//! Utilization and goodput accounting for scenario runs.
+
+use crate::sim::clock::SimTime;
+
+/// Aggregated counters from one scenario run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Metrics {
+    pub jobs_submitted: u64,
+    pub jobs_completed: u64,
+    pub jobs_requeued: u64,
+    pub jobs_killed: u64,
+    /// Core-seconds of useful compute delivered.
+    pub core_secs_useful: f64,
+    /// Core-seconds wasted (work lost to node failures).
+    pub core_secs_wasted: f64,
+    /// Total wait time across completed jobs.
+    pub total_wait: SimTime,
+    /// Scenario makespan (last completion).
+    pub makespan: SimTime,
+    /// Faults injected.
+    pub faults: u64,
+    /// Watchdog restarts triggered.
+    pub watchdog_restarts: u64,
+}
+
+impl Metrics {
+    /// Goodput fraction: useful / (useful + wasted).
+    pub fn goodput(&self) -> f64 {
+        let total = self.core_secs_useful + self.core_secs_wasted;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        self.core_secs_useful / total
+    }
+
+    pub fn mean_wait_secs(&self) -> f64 {
+        if self.jobs_completed == 0 {
+            return 0.0;
+        }
+        self.total_wait as f64 / 1e9 / self.jobs_completed as f64
+    }
+
+    pub fn completion_rate(&self) -> f64 {
+        if self.jobs_submitted == 0 {
+            return 1.0;
+        }
+        self.jobs_completed as f64 / self.jobs_submitted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goodput_bounds() {
+        let mut m = Metrics::default();
+        assert_eq!(m.goodput(), 1.0);
+        m.core_secs_useful = 80.0;
+        m.core_secs_wasted = 20.0;
+        assert!((m.goodput() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_and_completion() {
+        let m = Metrics {
+            jobs_submitted: 10,
+            jobs_completed: 8,
+            total_wait: 16 * 1_000_000_000,
+            ..Default::default()
+        };
+        assert!((m.mean_wait_secs() - 2.0).abs() < 1e-12);
+        assert!((m.completion_rate() - 0.8).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! The Gridlan coordinator: assembles server + clients + VPN + boot + RM +
+//! monitor into one system and drives end-to-end scenarios.
+//!
+//! * [`gridlan`] — construction from a [`crate::config::Config`], node
+//!   boot, Table-2 measurements, EP job helpers;
+//! * [`scenario`] — the event-driven runner: job traces, monitor sweeps,
+//!   watchdog polls and fault injection on the DES engine;
+//! * [`metrics`] — utilization/goodput accounting.
+
+pub mod gridlan;
+pub mod metrics;
+pub mod scenario;
+
+pub use gridlan::Gridlan;
+pub use metrics::Metrics;
+pub use scenario::{Scenario, ScenarioReport};

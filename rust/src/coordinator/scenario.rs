@@ -1,0 +1,462 @@
+//! Event-driven scenario runner: job traces + monitor sweeps + watchdog
+//! polls + fault injection, all on the DES engine.
+//!
+//! This is where the paper's §2.6 feedback loop actually closes: the
+//! 5-minute server pinger marks nodes on/off, the client watchdog asks the
+//! status service and restarts dead VMs, pbs_server requeues the jobs that
+//! were running there (the §4 script-folder technique), and the scheduler
+//! re-places them once nodes return.
+
+use super::gridlan::Gridlan;
+use super::metrics::Metrics;
+use crate::host::faults::{FaultKind, FaultPlan};
+use crate::host::watchdog::{Watchdog, WatchdogAction};
+use crate::rm::job::JobId;
+use crate::rm::mom::Mom;
+use crate::rm::queue::NodePool;
+use crate::rm::script::PbsScript;
+use crate::sim::clock::{SimTime, DUR_SEC};
+use crate::sim::Simulator;
+use crate::vm::node::NodeState;
+use crate::workload::trace::TraceJob;
+use std::collections::BTreeMap;
+
+/// Reference core rate used to normalize trace job compute times
+/// (Mpairs/s; a mid-range Table-1 core).
+const REF_RATE_MPAIRS: f64 = 15.0;
+
+/// Scenario parameters.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub horizon: SimTime,
+    /// Scheduler cycle period (Torque's scheduler iteration).
+    pub sched_period: SimTime,
+    pub faults: FaultPlan,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Self {
+            horizon: 12 * 3600 * DUR_SEC,
+            sched_period: 10 * DUR_SEC,
+            faults: FaultPlan::none(),
+        }
+    }
+}
+
+/// What a run produced.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub metrics: Metrics,
+    pub events_executed: u64,
+    pub final_time: SimTime,
+}
+
+struct World {
+    g: Gridlan,
+    m: Metrics,
+    watchdogs: BTreeMap<String, Watchdog>,
+    /// Per-job start generation guard for completion events.
+    started_gen: BTreeMap<JobId, SimTime>,
+}
+
+/// Run a trace of jobs through the Gridlan under a fault plan.
+/// Nodes boot event-driven at t=0; jobs are submitted at their trace
+/// times; the run ends when the horizon passes AND the queue drains (or a
+/// hard cap of 4x horizon).
+pub fn run_trace(mut g: Gridlan, trace: Vec<TraceJob>, scenario: &Scenario) -> ScenarioReport {
+    let mut sim: Simulator<World> = Simulator::new();
+    let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
+
+    // --- initial boots (event-driven: node comes up after its plan).
+    for name in &names {
+        g.connect_client(name).expect("provisioned");
+        let plan = g.boot_plan(name);
+        let total = plan.total();
+        g.nodes.get_mut(name).unwrap().advance(NodeState::PoweringOn, 0);
+        let n = name.clone();
+        sim.schedule_at(total, move |_s, w: &mut World| {
+            node_up(w, &n, 0);
+        });
+    }
+
+    let watchdogs = names.iter().map(|n| (n.clone(), Watchdog::new(n))).collect();
+    let mut world = World { g, m: Metrics::default(), watchdogs, started_gen: BTreeMap::new() };
+
+    // --- job submissions.
+    for (i, tj) in trace.iter().enumerate() {
+        let tj = tj.clone();
+        world.m.jobs_submitted += 1;
+        sim.schedule_at(tj.at, move |s, w: &mut World| {
+            submit(s, w, &tj, i);
+        });
+    }
+
+    // --- periodic machinery.
+    let period = scenario.sched_period;
+    sim.schedule_at(period, move |s, w| sched_tick(s, w, period));
+    sim.schedule_at(300 * DUR_SEC, monitor_sweep);
+    for (i, name) in names.iter().enumerate() {
+        let n = name.clone();
+        // Stagger watchdogs so they don't all fire in one instant.
+        sim.schedule_at(300 * DUR_SEC + (i as u64 + 1) * DUR_SEC, move |s, w| {
+            watchdog_poll(s, w, &n);
+        });
+    }
+
+    // --- faults.
+    let mut frng = world.g.rng.fork();
+    for ev in scenario.faults.generate(&names, scenario.horizon, &mut frng) {
+        world.m.faults += 1;
+        sim.schedule_at(ev.at, move |s, w: &mut World| {
+            apply_fault(s, w, &ev.client, ev.kind, ev.outage);
+        });
+    }
+
+    // --- run: until horizon, then drain (cap at 4x horizon).
+    sim.run_until(&mut world, scenario.horizon);
+    let cap = scenario.horizon.saturating_mul(4);
+    while world.g.pbs.jobs().any(|j| !matches!(j.state, crate::rm::job::JobState::Completed))
+        && sim.now() < cap
+    {
+        if !sim.step(&mut world) {
+            break;
+        }
+    }
+    ScenarioReport {
+        metrics: world.m,
+        events_executed: sim.executed(),
+        final_time: sim.now(),
+    }
+}
+
+// ---------------------------------------------------------------- events
+
+fn node_up(w: &mut World, name: &str, _gen: u64) {
+    let node = w.g.nodes.get_mut(name).unwrap();
+    if node.state == NodeState::Up || node.state == NodeState::Off {
+        return; // crashed-then-recovered races resolve harmlessly
+    }
+    // Jump through remaining boot states (plan time already elapsed).
+    use NodeState::*;
+    while node.state != Up {
+        let next = match node.state {
+            PoweringOn => Dhcp,
+            Dhcp => Tftp,
+            Tftp => NfsMount,
+            NfsMount => Up,
+            Crashed | Off | Up => break,
+        };
+        let t = node.history.last().map(|&(_, t)| t).unwrap_or(0);
+        node.advance(next, t);
+    }
+    w.g.pbs.node_up(name);
+}
+
+fn submit(sim: &mut Simulator<World>, w: &mut World, tj: &TraceJob, i: usize) {
+    let script = PbsScript {
+        name: Some(format!("trace-{i:04}")),
+        queue: Some("gridlan".into()),
+        request: tj.request,
+        walltime: Some(tj.walltime),
+        commands: vec!["./work.x".into()],
+    };
+    let payload = format!("trace:{}", tj.compute);
+    match w.g.pbs.qsub(&script, &tj.owner, &payload, sim.now()) {
+        Ok(id) => {
+            w.g.folder.register(&mut w.g.server_fs, id, &script);
+            // Nudge the scheduler.
+            sim.schedule_in(DUR_SEC, |s, w| run_sched(s, w));
+        }
+        Err(_) => {
+            w.m.jobs_killed += 1; // rejected at submission
+        }
+    }
+}
+
+fn sched_tick(sim: &mut Simulator<World>, w: &mut World, period: SimTime) {
+    run_sched(sim, w);
+    sim.schedule_in(period, move |s, w| sched_tick(s, w, period));
+}
+
+fn run_sched(sim: &mut Simulator<World>, w: &mut World) {
+    let scheduler = w.g.scheduler();
+    let now = sim.now();
+    let decisions = w.g.pbs.schedule_cycle(NodePool::Gridlan, scheduler.as_ref(), now);
+    for (id, alloc) in decisions {
+        // Duration: trace compute normalized by the slowest allocated
+        // client (Turbo + hypervisor), plus MOM prologue/epilogue.
+        let compute: SimTime = w
+            .g
+            .pbs
+            .job(id)
+            .and_then(|j| j.payload.strip_prefix("trace:").and_then(|c| c.parse().ok()))
+            .unwrap_or(60 * DUR_SEC);
+        let mut worst_factor: f64 = 0.0;
+        for (node, cores) in &alloc.cores {
+            let busy = w.g.pbs.node(node).map(|n| n.busy_cores).unwrap_or(*cores);
+            let rate = w.g.client(node).map(|c| c.guest_ep_rate(busy)).unwrap_or(REF_RATE_MPAIRS);
+            worst_factor = worst_factor.max(REF_RATE_MPAIRS / rate);
+        }
+        let duration = Mom::wrap_runtime((compute as f64 * worst_factor.max(0.1)) as SimTime);
+        w.started_gen.insert(id, now);
+        sim.schedule_in(duration, move |s, w| job_done(s, w, id, now));
+    }
+}
+
+fn job_done(sim: &mut Simulator<World>, w: &mut World, id: JobId, started: SimTime) {
+    // Stale completion (job was requeued since): ignore.
+    if w.started_gen.get(&id) != Some(&started) {
+        return;
+    }
+    let Some(job) = w.g.pbs.job(id) else { return };
+    if job.state != crate::rm::job::JobState::Running || job.started_at != Some(started) {
+        return;
+    }
+    let cores = job.allocation.as_ref().map(|a| a.total_cores()).unwrap_or(0);
+    let wait = job.wait_time().unwrap_or(0);
+    w.g.pbs.complete(id, 0, sim.now());
+    w.g.folder.job_completed(&mut w.g.server_fs, id);
+    w.m.jobs_completed += 1;
+    w.m.total_wait += wait;
+    w.m.core_secs_useful += cores as f64 * (sim.now() - started) as f64 / 1e9;
+    w.m.makespan = w.m.makespan.max(sim.now());
+    sim.schedule_in(DUR_SEC, |s, w| run_sched(s, w));
+}
+
+fn monitor_sweep(sim: &mut Simulator<World>, w: &mut World) {
+    let now = sim.now();
+    // A node answers if its VM is Up, the tunnel is connected, and the
+    // client has power.
+    let mut responding = Vec::new();
+    for c in &w.g.clients {
+        let node_up = w.g.nodes.get(&c.name).map(|n| n.state.is_running()).unwrap_or(false);
+        if c.powered && w.g.hub.is_connected(&c.name) && node_up {
+            responding.push(c.name.clone());
+        }
+    }
+    w.g.pinger.sweep(now, |n| responding.iter().any(|r| r == n));
+    sim.schedule_in(300 * DUR_SEC, monitor_sweep);
+}
+
+fn watchdog_poll(sim: &mut Simulator<World>, w: &mut World, name: &str) {
+    let now = sim.now();
+    let powered = w.g.client(name).map(|c| c.powered).unwrap_or(false);
+    let reachable = powered && w.g.hub.is_connected(name);
+    let node_on = if reachable { w.g.status.is_node_on(&w.g.pinger, name) } else { None };
+    let action = w.watchdogs.get_mut(name).unwrap().poll(now, reachable, node_on);
+    match action {
+        WatchdogAction::RestartVm if powered => {
+            let node = w.g.nodes.get_mut(name).unwrap();
+            if matches!(node.state, NodeState::Crashed | NodeState::Off) {
+                node.advance(NodeState::PoweringOn, now);
+                w.m.watchdog_restarts += 1;
+                let plan = w.g.boot_plan(name);
+                let n = name.to_string();
+                sim.schedule_in(plan.total(), move |_s, w| node_up(w, &n, 0));
+            }
+        }
+        WatchdogAction::ReconnectVpn if powered => {
+            let _ = w.g.connect_client(name);
+        }
+        _ => {}
+    }
+    let n = name.to_string();
+    sim.schedule_in(300 * DUR_SEC, move |s, w| watchdog_poll(s, w, &n));
+}
+
+fn apply_fault(
+    sim: &mut Simulator<World>,
+    w: &mut World,
+    client: &str,
+    kind: FaultKind,
+    outage: SimTime,
+) {
+    let now = sim.now();
+    // Account wasted work + requeue running jobs on this node.
+    let waste_and_requeue = |w: &mut World, now: SimTime| {
+        // Capture wasted core-seconds before node_down clears started_at.
+        let wasted: f64 = w
+            .g
+            .pbs
+            .jobs()
+            .filter(|j| {
+                j.state == crate::rm::job::JobState::Running
+                    && j.allocation.as_ref().map(|a| a.cores.contains_key(client)).unwrap_or(false)
+            })
+            .map(|j| {
+                let cores = j.allocation.as_ref().map(|a| a.total_cores()).unwrap_or(0);
+                cores as f64 * (now.saturating_sub(j.started_at.unwrap_or(now))) as f64 / 1e9
+            })
+            .sum();
+        let victims = w.g.pbs.node_down(client, now);
+        for id in &victims {
+            w.m.jobs_requeued += 1;
+            w.started_gen.remove(id);
+        }
+        w.m.core_secs_wasted += wasted;
+        victims.len()
+    };
+    match kind {
+        FaultKind::ClientPowerOff => {
+            if let Some(c) = w.g.clients.iter_mut().find(|c| c.name == client) {
+                if !c.powered {
+                    return; // already down
+                }
+                c.powered = false;
+                c.vpn_connected = false;
+            }
+            w.g.hub.disconnect(client);
+            let node = w.g.nodes.get_mut(client).unwrap();
+            if node.state != NodeState::Off {
+                node.advance(NodeState::Off, now);
+            }
+            waste_and_requeue(w, now);
+            // Owner turns it back on after the outage; VM boots again.
+            let c = client.to_string();
+            sim.schedule_in(outage, move |s, w: &mut World| {
+                if let Some(cl) = w.g.clients.iter_mut().find(|cl| cl.name == c) {
+                    cl.powered = true;
+                }
+                let _ = w.g.connect_client(&c);
+                let node = w.g.nodes.get_mut(&c).unwrap();
+                if node.state == NodeState::Off {
+                    node.advance(NodeState::PoweringOn, s.now());
+                    let plan = w.g.boot_plan(&c);
+                    let c2 = c.clone();
+                    s.schedule_in(plan.total(), move |_s, w| node_up(w, &c2, 0));
+                }
+            });
+        }
+        FaultKind::NetworkDrop => {
+            w.g.hub.disconnect(client);
+            if let Some(c) = w.g.clients.iter_mut().find(|c| c.name == client) {
+                c.vpn_connected = false;
+            }
+            waste_and_requeue(w, now);
+            let c = client.to_string();
+            sim.schedule_in(outage, move |s, w: &mut World| {
+                let _ = w.g.connect_client(&c);
+                // Node was running all along; RM can use it again.
+                if w.g.nodes.get(&c).map(|n| n.state.is_running()).unwrap_or(false) {
+                    w.g.pbs.node_up(&c);
+                }
+                let _ = s;
+            });
+        }
+        FaultKind::VmCrash => {
+            let node = w.g.nodes.get_mut(client).unwrap();
+            if !matches!(node.state, NodeState::Off | NodeState::Crashed) {
+                node.advance(NodeState::Crashed, now);
+            }
+            waste_and_requeue(w, now);
+            // Recovery path: monitor marks Off; watchdog restarts the VM.
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::rm::alloc::ResourceRequest;
+
+    fn quick_trace(n: usize, cores: u32, compute_secs: u64) -> Vec<TraceJob> {
+        (0..n)
+            .map(|i| TraceJob {
+                at: (i as u64) * DUR_SEC,
+                owner: "u".into(),
+                request: ResourceRequest { nodes: 1, ppn: cores },
+                compute: compute_secs * DUR_SEC,
+                walltime: compute_secs * 3 * DUR_SEC,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_run_completes_all_jobs() {
+        let g = Gridlan::build(Config::table1());
+        let scenario = Scenario { horizon: 2 * 3600 * DUR_SEC, ..Default::default() };
+        let report = run_trace(g, quick_trace(10, 2, 120), &scenario);
+        assert_eq!(report.metrics.jobs_completed, 10);
+        assert_eq!(report.metrics.jobs_requeued, 0);
+        assert!(report.metrics.goodput() > 0.999);
+        assert!(report.metrics.makespan > 0);
+    }
+
+    #[test]
+    fn jobs_wait_for_boot() {
+        // Submitted at t=1s, but nodes take minutes to PXE-boot: the first
+        // completion must come after the fastest boot.
+        let mut g = Gridlan::build(Config::table1());
+        let boot_min = {
+            let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
+            names
+                .iter()
+                .map(|n| {
+                    g.connect_client(n).unwrap();
+                    let t = g.boot_plan(n).total();
+                    g.hub.disconnect(n);
+                    t
+                })
+                .min()
+                .unwrap()
+        };
+        let g = Gridlan::build(Config::table1());
+        let scenario = Scenario { horizon: 3600 * DUR_SEC, ..Default::default() };
+        let report = run_trace(g, quick_trace(1, 1, 10), &scenario);
+        assert_eq!(report.metrics.jobs_completed, 1);
+        assert!(
+            report.metrics.makespan > boot_min,
+            "makespan {} <= boot {}",
+            report.metrics.makespan,
+            boot_min
+        );
+    }
+
+    #[test]
+    fn faulty_run_requeues_and_recovers() {
+        let g = Gridlan::build(Config::table1());
+        // Heavy faults: power-offs every ~20 min per client.
+        let faults = FaultPlan {
+            mtbf_power_off: 1200 * DUR_SEC,
+            mtbf_net_drop: 0,
+            mtbf_vm_crash: 0,
+            mean_outage: 300 * DUR_SEC,
+        };
+        let scenario =
+            Scenario { horizon: 4 * 3600 * DUR_SEC, faults, ..Default::default() };
+        // Long jobs so faults hit running work.
+        let report = run_trace(g, quick_trace(12, 4, 900), &scenario);
+        assert!(report.metrics.faults > 0, "no faults injected");
+        assert!(report.metrics.jobs_requeued > 0, "faults never hit a running job");
+        // The resilience machinery must still finish everything.
+        assert_eq!(report.metrics.jobs_completed, 12, "{:?}", report.metrics);
+        assert!(report.metrics.goodput() < 1.0);
+    }
+
+    #[test]
+    fn vm_crash_recovered_by_watchdog() {
+        let g = Gridlan::build(Config::table1());
+        let faults = FaultPlan {
+            mtbf_power_off: 0,
+            mtbf_net_drop: 0,
+            mtbf_vm_crash: 1800 * DUR_SEC,
+            mean_outage: 60 * DUR_SEC,
+        };
+        let scenario = Scenario { horizon: 6 * 3600 * DUR_SEC, faults, ..Default::default() };
+        let report = run_trace(g, quick_trace(8, 2, 600), &scenario);
+        assert!(report.metrics.faults > 0);
+        assert!(report.metrics.watchdog_restarts > 0, "watchdog never fired");
+        assert_eq!(report.metrics.jobs_completed, 8);
+    }
+
+    #[test]
+    fn deterministic_reports() {
+        let s = Scenario { horizon: 3600 * DUR_SEC, ..Default::default() };
+        let r1 = run_trace(Gridlan::build(Config::table1()), quick_trace(5, 2, 60), &s);
+        let r2 = run_trace(Gridlan::build(Config::table1()), quick_trace(5, 2, 60), &s);
+        assert_eq!(r1.metrics, r2.metrics);
+        assert_eq!(r1.events_executed, r2.events_executed);
+    }
+}

@@ -1,0 +1,129 @@
+//! The Gridlan client: a graduate student's workstation.
+//!
+//! Invisibility requirement (paper §1): "The installed software must not
+//! disrupt the usual work of ordinary users of the machine or impose any
+//! specific operating system" — hence Windows clients run VirtualBox and
+//! Linux clients run QEMU/KVM (Table 1), and everything happens at OS
+//! start-up without user interaction.
+
+use crate::vm::hypervisor::{Hypervisor, HypervisorKind};
+use crate::vm::cpu::CpuModel;
+
+/// Host operating system (Table 1 column "Client OS").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientOs {
+    Linux,
+    Windows,
+}
+
+impl ClientOs {
+    /// The hypervisor the paper deploys on this OS.
+    pub fn default_hypervisor(self) -> HypervisorKind {
+        match self {
+            ClientOs::Linux => HypervisorKind::QemuKvm,
+            ClientOs::Windows => HypervisorKind::VirtualBox,
+        }
+    }
+}
+
+/// A client workstation and its agent state.
+#[derive(Debug, Clone)]
+pub struct ClientAgent {
+    pub name: String,
+    pub os: ClientOs,
+    pub cpu: CpuModel,
+    pub hypervisor: Hypervisor,
+    /// Whether the workstation is powered on.
+    pub powered: bool,
+    /// Whether the VPN tunnel is up.
+    pub vpn_connected: bool,
+    /// Interactive (owner) load, in busy cores — the VM competes with it.
+    pub interactive_load_cores: f64,
+}
+
+impl ClientAgent {
+    pub fn new(name: &str, os: ClientOs, cpu: CpuModel) -> Self {
+        Self {
+            name: name.to_string(),
+            os,
+            hypervisor: Hypervisor::new(os.default_hypervisor()),
+            cpu,
+            powered: true,
+            vpn_connected: false,
+            interactive_load_cores: 0.0,
+        }
+    }
+
+    /// Replace the hypervisor (paper §5: swap VirtualBox for pure QEMU).
+    pub fn with_hypervisor(mut self, kind: HypervisorKind) -> Self {
+        self.hypervisor = Hypervisor::new(kind);
+        self
+    }
+
+    /// Cores the VM can use without disturbing the owner.
+    pub fn vm_cores(&self) -> u32 {
+        (self.cpu.cores as f64 - self.interactive_load_cores).floor().max(0.0) as u32
+    }
+
+    /// Guest EP rate (Mpairs/s) of one vCPU when `active` vCPUs are busy
+    /// on this client.
+    pub fn guest_ep_rate(&self, active: u32) -> f64 {
+        self.hypervisor.guest_rate(self.cpu.ep_rate_mpairs(active))
+    }
+
+    /// Paper Table 1 clients, exactly.
+    pub fn table1() -> Vec<ClientAgent> {
+        vec![
+            ClientAgent::new("n01", ClientOs::Linux, CpuModel::xeon_e5_2630()),
+            ClientAgent::new("n02", ClientOs::Windows, CpuModel::i7_3930k()),
+            ClientAgent::new("n03", ClientOs::Windows, CpuModel::i7_2920xm()),
+            ClientAgent::new("n04", ClientOs::Windows, CpuModel::i7_960()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let clients = ClientAgent::table1();
+        assert_eq!(clients.len(), 4);
+        let cores: Vec<u32> = clients.iter().map(|c| c.cpu.cores).collect();
+        assert_eq!(cores, vec![12, 6, 4, 4]);
+        assert_eq!(cores.iter().sum::<u32>(), 26);
+        assert_eq!(clients[0].os, ClientOs::Linux);
+        assert!(clients[1..].iter().all(|c| c.os == ClientOs::Windows));
+    }
+
+    #[test]
+    fn os_selects_hypervisor() {
+        assert_eq!(ClientOs::Linux.default_hypervisor(), HypervisorKind::QemuKvm);
+        assert_eq!(ClientOs::Windows.default_hypervisor(), HypervisorKind::VirtualBox);
+    }
+
+    #[test]
+    fn interactive_load_reduces_vm_cores() {
+        let mut c = ClientAgent::new("x", ClientOs::Linux, CpuModel::xeon_e5_2630());
+        assert_eq!(c.vm_cores(), 12);
+        c.interactive_load_cores = 2.5;
+        assert_eq!(c.vm_cores(), 9);
+    }
+
+    #[test]
+    fn windows_guest_rate_below_linux_guest_rate() {
+        // Same CPU, different hypervisor efficiency.
+        let cpu = CpuModel::i7_960();
+        let lin = ClientAgent::new("l", ClientOs::Linux, cpu.clone());
+        let win = ClientAgent::new("w", ClientOs::Windows, cpu);
+        assert!(win.guest_ep_rate(4) < lin.guest_ep_rate(4));
+    }
+
+    #[test]
+    fn hypervisor_swap() {
+        let c = ClientAgent::new("x", ClientOs::Windows, CpuModel::i7_960())
+            .with_hypervisor(HypervisorKind::PureQemu);
+        assert!(c.guest_ep_rate(1) < 5.0); // TCG is painfully slow
+    }
+}

@@ -1,0 +1,178 @@
+//! Fault injection (paper §2.6, §4).
+//!
+//! "The computer clients are unreliable, since they can be inadvertently
+//! turned off or can be victims of a network connection fault" ... "a
+//! system crash, or ... interruptions to the electrical power supply or
+//! network events."
+//!
+//! A [`FaultPlan`] generates a deterministic schedule of fault events from
+//! per-kind rates; the coordinator applies them to clients/nodes, and the
+//! fault-recovery bench measures job goodput under increasing fault rates.
+
+use crate::sim::clock::{SimTime, DUR_SEC};
+use crate::util::rng::SplitMix64;
+
+/// Kinds of client/node failure, mirroring the paper's list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Owner turns the workstation off (client + node die, later reboot).
+    ClientPowerOff,
+    /// Network drop (VPN falls, node unreachable; machine keeps running).
+    NetworkDrop,
+    /// Guest VM crash (host fine; watchdog restarts).
+    VmCrash,
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at: SimTime,
+    pub client: String,
+    pub kind: FaultKind,
+    /// How long the condition lasts before repair begins (e.g. machine
+    /// stays off this long).
+    pub outage: SimTime,
+}
+
+/// Poisson-ish fault generator: per-kind mean-time-between-failures.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub mtbf_power_off: SimTime,
+    pub mtbf_net_drop: SimTime,
+    pub mtbf_vm_crash: SimTime,
+    pub mean_outage: SimTime,
+}
+
+impl FaultPlan {
+    /// A lab-like profile: a power-off every ~8h per client, net blip every
+    /// ~12h, VM crash every ~24h; outages average 10 min.
+    pub fn lab_default() -> Self {
+        Self {
+            mtbf_power_off: 8 * 3600 * DUR_SEC,
+            mtbf_net_drop: 12 * 3600 * DUR_SEC,
+            mtbf_vm_crash: 24 * 3600 * DUR_SEC,
+            mean_outage: 600 * DUR_SEC,
+        }
+    }
+
+    /// No faults (clean-run baseline).
+    pub fn none() -> Self {
+        Self { mtbf_power_off: 0, mtbf_net_drop: 0, mtbf_vm_crash: 0, mean_outage: 0 }
+    }
+
+    /// Scale all rates by `factor` (>1 = more faults). MTBFs shrink.
+    pub fn scaled(&self, factor: f64) -> Self {
+        let s = |t: SimTime| {
+            if t == 0 || factor <= 0.0 {
+                0
+            } else {
+                ((t as f64 / factor) as u64).max(1)
+            }
+        };
+        Self {
+            mtbf_power_off: s(self.mtbf_power_off),
+            mtbf_net_drop: s(self.mtbf_net_drop),
+            mtbf_vm_crash: s(self.mtbf_vm_crash),
+            mean_outage: self.mean_outage,
+        }
+    }
+
+    fn draw_exponential(rng: &mut SplitMix64, mean: SimTime) -> SimTime {
+        let u = rng.next_f64().max(1e-12);
+        (-(u.ln()) * mean as f64) as SimTime
+    }
+
+    /// Generate all fault events for `clients` over `[0, horizon)`.
+    /// Deterministic for a given rng seed; sorted by time.
+    pub fn generate(
+        &self,
+        clients: &[String],
+        horizon: SimTime,
+        rng: &mut SplitMix64,
+    ) -> Vec<FaultEvent> {
+        let mut events = Vec::new();
+        for client in clients {
+            for (kind, mtbf) in [
+                (FaultKind::ClientPowerOff, self.mtbf_power_off),
+                (FaultKind::NetworkDrop, self.mtbf_net_drop),
+                (FaultKind::VmCrash, self.mtbf_vm_crash),
+            ] {
+                if mtbf == 0 {
+                    continue;
+                }
+                let mut t = Self::draw_exponential(rng, mtbf);
+                while t < horizon {
+                    let outage = Self::draw_exponential(rng, self.mean_outage.max(1));
+                    events.push(FaultEvent { at: t, client: client.clone(), kind, outage });
+                    t += Self::draw_exponential(rng, mtbf).max(DUR_SEC);
+                }
+            }
+        }
+        events.sort_by_key(|e| e.at);
+        events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn clients() -> Vec<String> {
+        vec!["n01".into(), "n02".into(), "n03".into(), "n04".into()]
+    }
+
+    #[test]
+    fn none_plan_generates_nothing() {
+        let mut rng = SplitMix64::new(1);
+        let ev = FaultPlan::none().generate(&clients(), 24 * 3600 * DUR_SEC, &mut rng);
+        assert!(ev.is_empty());
+    }
+
+    #[test]
+    fn rate_scales_event_count() {
+        let mut r1 = SplitMix64::new(2);
+        let mut r2 = SplitMix64::new(2);
+        let horizon = 7 * 24 * 3600 * DUR_SEC;
+        let base = FaultPlan::lab_default().generate(&clients(), horizon, &mut r1);
+        let heavy = FaultPlan::lab_default().scaled(5.0).generate(&clients(), horizon, &mut r2);
+        assert!(heavy.len() > base.len() * 2, "{} vs {}", heavy.len(), base.len());
+    }
+
+    #[test]
+    fn events_sorted_and_within_horizon() {
+        let mut rng = SplitMix64::new(3);
+        let horizon = 3 * 24 * 3600 * DUR_SEC;
+        let ev = FaultPlan::lab_default().generate(&clients(), horizon, &mut rng);
+        assert!(!ev.is_empty());
+        for w in ev.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(ev.iter().all(|e| e.at < horizon));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let horizon = 24 * 3600 * DUR_SEC;
+        let a = FaultPlan::lab_default().generate(&clients(), horizon, &mut SplitMix64::new(7));
+        let b = FaultPlan::lab_default().generate(&clients(), horizon, &mut SplitMix64::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn expected_rate_roughly_matches_mtbf() {
+        // One client, MTBF 1h over 100h -> ~100 power-off events (+-40%).
+        let plan = FaultPlan {
+            mtbf_power_off: 3600 * DUR_SEC,
+            mtbf_net_drop: 0,
+            mtbf_vm_crash: 0,
+            mean_outage: 60 * DUR_SEC,
+        };
+        let mut rng = SplitMix64::new(11);
+        let ev = plan.generate(&["c".into()], 100 * 3600 * DUR_SEC, &mut rng);
+        assert!(
+            (60..=140).contains(&ev.len()),
+            "got {} events",
+            ev.len()
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Client-side host agents (paper §2.5, §2.6, §5).
+//!
+//! * [`client`] — the workstation agent: connects the VPN at OS start-up
+//!   and launches the node VM;
+//! * [`watchdog`] — "A script in the client machine asks the server if the
+//!   virtual machine is on.  If the status is 'off', then a script to
+//!   restart the node is executed";
+//! * [`faults`] — fault injector: inadvertent power-off, network drop,
+//!   VM crash (the events §2.6 defends against);
+//! * [`schedule`] — the §5 future-work client availability calendar
+//!   ("a user who offers his computer ... at nighttime and weekends"),
+//!   implemented here as an extension.
+
+pub mod client;
+pub mod faults;
+pub mod schedule;
+pub mod watchdog;
+
+pub use client::{ClientAgent, ClientOs};
+pub use faults::{FaultKind, FaultPlan};
+pub use schedule::AvailabilitySchedule;
+pub use watchdog::Watchdog;

@@ -1,0 +1,157 @@
+//! Client availability schedules — the paper's §5 future-work feature,
+//! implemented as an extension (experiment X-sched).
+//!
+//! "Clients could then be tagged and the administrator could set a schedule
+//! specifying when jobs may be received from particular groups of clients.
+//! One example is a user who offers his computer for use by the local grid
+//! at nighttime and weekends."
+//!
+//! Time is simulation time; we anchor t=0 at Monday 00:00 and use
+//! 7×24-hour weeks.
+
+use crate::sim::clock::{SimTime, DUR_SEC};
+
+const HOUR: SimTime = 3600 * DUR_SEC;
+const DAY: SimTime = 24 * HOUR;
+const WEEK: SimTime = 7 * DAY;
+
+/// A weekly availability calendar: allowed [start_hour, end_hour) windows
+/// per weekday (0 = Monday).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AvailabilitySchedule {
+    /// (weekday 0-6, start hour 0-24, end hour 0-24); end may be <= start
+    /// for "never this day" (empty window).
+    windows: Vec<(u8, u8, u8)>,
+}
+
+impl AvailabilitySchedule {
+    /// Always available (the paper's default behaviour today).
+    pub fn always() -> Self {
+        Self { windows: (0..7).map(|d| (d, 0, 24)).collect() }
+    }
+
+    /// The paper's example: nights (20:00–08:00) and all weekend.
+    pub fn nights_and_weekends() -> Self {
+        let mut windows = Vec::new();
+        for d in 0..5u8 {
+            windows.push((d, 20, 24));
+            windows.push((d, 0, 8));
+        }
+        windows.push((5, 0, 24));
+        windows.push((6, 0, 24));
+        Self { windows }
+    }
+
+    /// Custom schedule from windows.
+    pub fn from_windows(windows: Vec<(u8, u8, u8)>) -> Self {
+        for &(d, s, e) in &windows {
+            assert!(d < 7 && s <= 24 && e <= 24, "bad window ({d},{s},{e})");
+        }
+        Self { windows }
+    }
+
+    fn decompose(at: SimTime) -> (u8, f64) {
+        let in_week = at % WEEK;
+        let day = (in_week / DAY) as u8;
+        let hour = (in_week % DAY) as f64 / HOUR as f64;
+        (day, hour)
+    }
+
+    /// May the grid run jobs on this client at simulated time `at`?
+    pub fn available_at(&self, at: SimTime) -> bool {
+        let (day, hour) = Self::decompose(at);
+        self.windows
+            .iter()
+            .any(|&(d, s, e)| d == day && (s as f64) <= hour && hour < e as f64)
+    }
+
+    /// Next time ≥ `at` when the client becomes available (None if never).
+    pub fn next_available(&self, at: SimTime) -> Option<SimTime> {
+        if self.available_at(at) {
+            return Some(at);
+        }
+        // Scan hour boundaries for up to one week.
+        let mut t = at - (at % HOUR) + HOUR;
+        for _ in 0..(7 * 24 + 1) {
+            if self.available_at(t) {
+                return Some(t);
+            }
+            t += HOUR;
+        }
+        None
+    }
+
+    /// Time remaining in the current window (0 if unavailable) — the
+    /// scheduler uses this to freeze jobs before the window closes.
+    pub fn window_remaining(&self, at: SimTime) -> SimTime {
+        if !self.available_at(at) {
+            return 0;
+        }
+        let mut t = at;
+        let step = HOUR / 60; // minute resolution
+        while self.available_at(t) {
+            t += step;
+            if t - at > WEEK {
+                return WEEK; // effectively always-on
+            }
+        }
+        t - at
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_is_always() {
+        let s = AvailabilitySchedule::always();
+        for h in [0u64, 5, 13, 23] {
+            assert!(s.available_at(h * HOUR + 3 * DAY));
+        }
+        assert_eq!(s.window_remaining(0), WEEK);
+    }
+
+    #[test]
+    fn nights_and_weekends_pattern() {
+        let s = AvailabilitySchedule::nights_and_weekends();
+        // Monday 10:00 — owner is working.
+        assert!(!s.available_at(10 * HOUR));
+        // Monday 21:00 — night window.
+        assert!(s.available_at(21 * HOUR));
+        // Monday 03:00 — early morning window.
+        assert!(s.available_at(3 * HOUR));
+        // Saturday noon — weekend.
+        assert!(s.available_at(5 * DAY + 12 * HOUR));
+    }
+
+    #[test]
+    fn next_available_from_weekday_morning() {
+        let s = AvailabilitySchedule::nights_and_weekends();
+        // Monday 09:00 -> next window opens Monday 20:00.
+        let next = s.next_available(9 * HOUR).unwrap();
+        assert_eq!(next, 20 * HOUR);
+    }
+
+    #[test]
+    fn window_remaining_shrinks() {
+        let s = AvailabilitySchedule::nights_and_weekends();
+        let at_2100 = 21 * HOUR;
+        let at_2200 = 22 * HOUR;
+        assert!(s.window_remaining(at_2100) > s.window_remaining(at_2200));
+    }
+
+    #[test]
+    fn weeks_repeat() {
+        let s = AvailabilitySchedule::nights_and_weekends();
+        let t = 21 * HOUR;
+        assert_eq!(s.available_at(t), s.available_at(t + WEEK));
+        assert_eq!(s.available_at(t), s.available_at(t + 52 * WEEK));
+    }
+
+    #[test]
+    #[should_panic(expected = "bad window")]
+    fn invalid_window_panics() {
+        AvailabilitySchedule::from_windows(vec![(7, 0, 24)]);
+    }
+}

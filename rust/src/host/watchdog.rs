@@ -1,0 +1,127 @@
+//! Client-side watchdog (paper §2.6).
+//!
+//! "A script in the client machine asks the server if the virtual machine
+//! (the Gridlan node) is on.  If the status is 'off,' then a script to
+//! restart the node is executed."
+//!
+//! The watchdog polls the server's status service on its own period and
+//! decides whether to trigger a VM restart.  It is intentionally dumb —
+//! all intelligence (ping sweeps, state table) is server-side in
+//! `monitor`; the split matches the paper's design.
+
+use crate::sim::clock::{SimTime, DUR_SEC};
+
+/// What the watchdog decided on one poll.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WatchdogAction {
+    /// Node reported on — nothing to do.
+    None,
+    /// Node reported off — restart the VM.
+    RestartVm,
+    /// Could not reach the server (VPN down) — reconnect first.
+    ReconnectVpn,
+}
+
+/// Per-client watchdog state.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    pub client: String,
+    /// Poll period (the paper pairs this with the server's 5-minute pinger).
+    pub period: SimTime,
+    /// Restarts triggered so far.
+    pub restarts: u32,
+    /// Back-off: after a restart, skip this many polls before acting again
+    /// (a VM boot takes minutes over TFTP; don't restart a booting VM).
+    pub cooldown_polls: u32,
+    cooldown_left: u32,
+    pub last_action: Option<(SimTime, WatchdogAction)>,
+}
+
+impl Watchdog {
+    pub fn new(client: &str) -> Self {
+        Self {
+            client: client.to_string(),
+            period: 300 * DUR_SEC,
+            restarts: 0,
+            cooldown_polls: 2,
+            cooldown_left: 0,
+            last_action: None,
+        }
+    }
+
+    /// One poll: `server_reachable` is whether the status query got an
+    /// answer; `node_reported_on` is the server's answer (None when
+    /// unreachable).
+    pub fn poll(
+        &mut self,
+        now: SimTime,
+        server_reachable: bool,
+        node_reported_on: Option<bool>,
+    ) -> WatchdogAction {
+        let action = if !server_reachable {
+            WatchdogAction::ReconnectVpn
+        } else if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            WatchdogAction::None
+        } else {
+            match node_reported_on {
+                Some(true) => WatchdogAction::None,
+                Some(false) | None => {
+                    self.restarts += 1;
+                    self.cooldown_left = self.cooldown_polls;
+                    WatchdogAction::RestartVm
+                }
+            }
+        };
+        self.last_action = Some((now, action));
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_node_no_action() {
+        let mut w = Watchdog::new("n01");
+        assert_eq!(w.poll(0, true, Some(true)), WatchdogAction::None);
+        assert_eq!(w.restarts, 0);
+    }
+
+    #[test]
+    fn off_node_triggers_restart() {
+        let mut w = Watchdog::new("n01");
+        assert_eq!(w.poll(0, true, Some(false)), WatchdogAction::RestartVm);
+        assert_eq!(w.restarts, 1);
+    }
+
+    #[test]
+    fn cooldown_suppresses_thrashing() {
+        let mut w = Watchdog::new("n01");
+        assert_eq!(w.poll(0, true, Some(false)), WatchdogAction::RestartVm);
+        // Node still booting, server still says off: cooldown holds.
+        assert_eq!(w.poll(300, true, Some(false)), WatchdogAction::None);
+        assert_eq!(w.poll(600, true, Some(false)), WatchdogAction::None);
+        // Cooldown expired and node still off: restart again.
+        assert_eq!(w.poll(900, true, Some(false)), WatchdogAction::RestartVm);
+        assert_eq!(w.restarts, 2);
+    }
+
+    #[test]
+    fn unreachable_server_reconnects_vpn() {
+        let mut w = Watchdog::new("n01");
+        assert_eq!(w.poll(0, false, None), WatchdogAction::ReconnectVpn);
+        assert_eq!(w.restarts, 0);
+    }
+
+    #[test]
+    fn recovery_resets_nothing_but_acts_sane() {
+        let mut w = Watchdog::new("n01");
+        w.poll(0, true, Some(false));
+        w.poll(300, true, Some(true)); // cooldown tick, node back
+        w.poll(600, true, Some(true));
+        assert_eq!(w.poll(900, true, Some(true)), WatchdogAction::None);
+        assert_eq!(w.restarts, 1);
+    }
+}

@@ -1,0 +1,30 @@
+//! # Gridlan — a multi-purpose local grid computing framework
+//!
+//! Reproduction of Rodrigues & Costa (2016): turn underused lab
+//! workstations into a cluster-like local grid via VPN + virtualized,
+//! remote-booted nodes + a Torque-like resource manager.
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the Gridlan coordinator and every substrate it
+//!   needs, on a deterministic discrete-event simulation;
+//! * **L2/L1 (python, build-time only)** — the NPB-EP compute payload as a
+//!   JAX graph wrapping a Pallas kernel, AOT-lowered to HLO text;
+//! * **runtime** — loads the HLO artifacts via PJRT (`xla` crate) and runs
+//!   real EP chunks from simulated jobs.
+
+pub mod bench;
+pub mod boot;
+pub mod config;
+pub mod coordinator;
+pub mod host;
+pub mod monitor;
+pub mod mpi;
+pub mod netsim;
+pub mod perf;
+pub mod rm;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod vm;
+pub mod vpn;
+pub mod workload;

@@ -1,0 +1,269 @@
+//! `gridlan` — the leader CLI.
+//!
+//! Subcommands mirror how the paper's users and admins touch the system:
+//!
+//! ```text
+//! gridlan inventory                      # Table 1
+//! gridlan bench table2 [--probes N]      # Table 2
+//! gridlan bench mpi [--iters N]          # §3.3 MPI latency cross-check
+//! gridlan bench fig3 [--runs N] [--class D]
+//! gridlan boot                           # per-node PXE boot plans
+//! gridlan demo                           # qsub/qstat walkthrough
+//! gridlan ep --pairs N [--offset K]      # run REAL EP via PJRT artifacts
+//! gridlan trace [--sched fifo|backfill] [--faults X]
+//! ```
+//!
+//! (arg parsing is hand-rolled: the offline vendor set has no clap.)
+
+use gridlan::bench;
+use gridlan::config::{Config, SchedPolicy};
+use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::coordinator::scenario::{run_trace, Scenario};
+use gridlan::host::faults::FaultPlan;
+use gridlan::perf::speedmodel::GridlanPool;
+use gridlan::rm::script::PbsScript;
+use gridlan::runtime::engine::EpEngine;
+use gridlan::sim::clock::DUR_SEC;
+use gridlan::util::rng::SplitMix64;
+use gridlan::util::table::secs;
+use gridlan::workload::ep::EpClass;
+use gridlan::workload::trace::TraceGenerator;
+
+fn main() {
+    gridlan::util::log::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = run(&args);
+    std::process::exit(code);
+}
+
+fn opt(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn opt_u64(args: &[String], name: &str, default: u64) -> u64 {
+    opt(args, name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn load_config(args: &[String]) -> Config {
+    match opt(args, "--config") {
+        Some(path) => Config::load(std::path::Path::new(&path)).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }),
+        None => Config::table1(),
+    }
+}
+
+fn run(args: &[String]) -> i32 {
+    match args.first().map(String::as_str) {
+        Some("inventory") => {
+            print!("{}", bench::table1::render_inventory(&load_config(args)));
+            0
+        }
+        Some("bench") => bench_cmd(&args[1..]),
+        Some("boot") => boot_cmd(args),
+        Some("demo") => demo_cmd(args),
+        Some("ep") => ep_cmd(args),
+        Some("trace") => trace_cmd(args),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}' (try `gridlan help`)");
+            2
+        }
+    }
+}
+
+fn bench_cmd(args: &[String]) -> i32 {
+    let mut g = Gridlan::build(load_config(args));
+    match args.first().map(String::as_str) {
+        Some("inventory") | Some("table1") => {
+            print!("{}", bench::table1::render_inventory(&g.config));
+            0
+        }
+        Some("table2") => {
+            g.boot_all(0);
+            let rows = bench::table2::table2_rows(&mut g, opt_u64(args, "--probes", 200) as usize);
+            print!("{}", bench::table2::render(&rows));
+            0
+        }
+        Some("mpi") => {
+            g.boot_all(0);
+            let rows =
+                bench::mpilat::mpi_latency_rows(&mut g, opt_u64(args, "--iters", 200) as usize);
+            print!("{}", bench::mpilat::render(&rows));
+            0
+        }
+        Some("fig3") => {
+            let class = opt(args, "--class")
+                .and_then(|c| EpClass::from_name(&c))
+                .unwrap_or(EpClass::D);
+            let pool = GridlanPool { clients: g.clients.clone() };
+            let series = bench::fig3::fig3_series(
+                &pool,
+                class,
+                opt_u64(args, "--runs", 40) as usize,
+                g.config.seed,
+            );
+            print!("{}", bench::fig3::render(&series));
+            for (name, ok) in bench::fig3::shape_checks(&series) {
+                println!("  [{}] {name}", if ok { "ok" } else { "FAIL" });
+            }
+            0
+        }
+        other => {
+            eprintln!("unknown bench target {other:?}; try table1|table2|mpi|fig3");
+            2
+        }
+    }
+}
+
+fn boot_cmd(args: &[String]) -> i32 {
+    let mut g = Gridlan::build(load_config(args));
+    println!("per-node PXE boot plans (VPN + DHCP + TFTP + nfsroot):");
+    let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
+    for name in names {
+        g.connect_client(&name).unwrap();
+        let plan = g.boot_plan(&name);
+        print!("  {name}: total {}  [", secs(plan.total() as f64 / 1e9));
+        for (state, dur) in &plan.phases {
+            if *dur > 0 {
+                print!(" {state:?}={}", secs(*dur as f64 / 1e9));
+            }
+        }
+        println!(" ]");
+    }
+    0
+}
+
+fn demo_cmd(args: &[String]) -> i32 {
+    let mut g = Gridlan::build(load_config(args));
+    println!("== booting the Gridlan (fast-forward) ==");
+    let slowest = g.boot_all(0);
+    println!("all nodes Up after {}", secs(slowest as f64 / 1e9));
+    for n in g.pbs.nodes() {
+        println!("  pbsnodes: {:<10} {:>2} cores  {:?}", n.name, n.cores, n.power);
+    }
+    println!("\n== user submits an EP job to the gridlan queue ==");
+    let script_text = "#!/bin/bash\n#PBS -N ep-demo\n#PBS -q gridlan\n#PBS -l nodes=2:ppn=4\n#PBS -l walltime=01:00:00\nmpirun ./ep.D.x\n";
+    println!("{script_text}");
+    let script = PbsScript::parse(script_text).unwrap();
+    let id = g.pbs.qsub(&script, "attila", "demo", 0).unwrap();
+    println!("qsub -> {id}");
+    let sched = g.scheduler();
+    g.pbs.schedule_cycle(gridlan::rm::queue::NodePool::Gridlan, sched.as_ref(), DUR_SEC);
+    println!("\n== qstat ==");
+    for (id, name, owner, state, queue) in g.pbs.qstat() {
+        println!("  {id:<14} {name:<12} {owner:<8} {state}  {queue}");
+    }
+    let job = g.pbs.job(id).unwrap();
+    println!("\nallocation: {:?}", job.allocation.as_ref().map(|a| &a.cores));
+    g.pbs.complete(id, 0, 300 * DUR_SEC);
+    println!("job completed; exit 0");
+    0
+}
+
+fn ep_cmd(args: &[String]) -> i32 {
+    let pairs = match (opt(args, "--pairs"), opt(args, "--class")) {
+        (Some(p), _) => p.parse().unwrap_or(1 << 16),
+        (None, Some(c)) => EpClass::from_name(&c).map(|c| c.pairs()).unwrap_or(1 << 16),
+        _ => 1 << 16,
+    };
+    let offset = opt_u64(args, "--offset", 0);
+    println!("running EP over pairs [{offset}, {}) via PJRT...", offset + pairs);
+    let mut engine = match EpEngine::load_default() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("engine: {e}\n(run `make artifacts` first)");
+            return 2;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match engine.run_pairs(offset, pairs) {
+        Ok(t) => {
+            println!("sx   = {:.15e}", t.sx);
+            println!("sy   = {:.15e}", t.sy);
+            println!("nacc = {} ({}% accepted)", t.nacc, 100 * t.nacc / t.pairs.max(1));
+            for (l, q) in t.q.iter().enumerate() {
+                if *q > 0 {
+                    println!("  q[{l}] = {q}");
+                }
+            }
+            println!(
+                "wall {}  ({:.2} Mpairs/s; {} pairs via PJRT)",
+                secs(t0.elapsed().as_secs_f64()),
+                pairs as f64 / t0.elapsed().as_secs_f64() / 1e6,
+                engine.pjrt_pairs
+            );
+            if offset == 0 && pairs == EpClass::S.pairs() {
+                println!("class S verification: {:?}", t.verify(EpClass::S));
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("ep failed: {e}");
+            1
+        }
+    }
+}
+
+fn trace_cmd(args: &[String]) -> i32 {
+    let mut cfg = load_config(args);
+    if let Some(s) = opt(args, "--sched") {
+        cfg.sched = match s.as_str() {
+            "backfill" => SchedPolicy::Backfill,
+            _ => SchedPolicy::Fifo,
+        };
+    }
+    let fault_scale = opt(args, "--faults").and_then(|f| f.parse::<f64>().ok()).unwrap_or(0.0);
+    let faults = if fault_scale > 0.0 {
+        FaultPlan::lab_default().scaled(fault_scale)
+    } else {
+        FaultPlan::none()
+    };
+    let gen = TraceGenerator::lab_day();
+    let mut rng = SplitMix64::new(cfg.seed ^ 0xABCD);
+    let trace = gen.generate(&mut rng);
+    println!(
+        "running {} trace jobs under {:?} scheduler (fault scale {fault_scale})...",
+        trace.len(),
+        cfg.sched
+    );
+    let g = Gridlan::build(cfg);
+    let scenario = Scenario { horizon: gen.horizon * 3, faults, ..Default::default() };
+    let report = run_trace(g, trace, &scenario);
+    let m = &report.metrics;
+    println!("  submitted   {}", m.jobs_submitted);
+    println!("  completed   {}", m.jobs_completed);
+    println!("  requeued    {}", m.jobs_requeued);
+    println!("  faults      {}", m.faults);
+    println!("  wd restarts {}", m.watchdog_restarts);
+    println!("  mean wait   {}", secs(m.mean_wait_secs()));
+    println!("  makespan    {}", secs(m.makespan as f64 / 1e9));
+    println!("  goodput     {:.1}%", 100.0 * m.goodput());
+    println!("  sim events  {}", report.events_executed);
+    0
+}
+
+fn print_help() {
+    println!(
+        "gridlan — local grid computing framework (CS.DC 2016 reproduction)
+
+USAGE: gridlan <subcommand> [options]
+
+  inventory                    Table 1: client inventory
+  bench table2 [--probes N]    Table 2: host-vs-node ping
+  bench mpi    [--iters N]     §3.3 MPI latency cross-check
+  bench fig3   [--runs N] [--class S|W|A|B|C|D]
+  boot                         per-node PXE/TFTP/nfsroot boot plans
+  demo                         qsub/qstat end-to-end walkthrough
+  ep --pairs N | --class S     run REAL EP via the PJRT artifacts
+  trace [--sched fifo|backfill] [--faults SCALE]
+  help
+
+Common options: --config FILE (JSON deployment; default = paper Table 1)
+Env: GRIDLAN_LOG=debug|info|warn, GRIDLAN_ARTIFACTS=dir"
+    );
+}

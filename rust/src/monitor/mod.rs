@@ -1,0 +1,17 @@
+//! Server-side monitoring and fault tolerance (paper §2.6, §4).
+//!
+//! * [`pinger`] — "a script pings each node, saving the node state (on or
+//!   off).  This procedure is executed every 5 minutes";
+//! * [`statusd`] — the query service the client watchdog asks ("is my VM
+//!   on?");
+//! * [`resilience`] — the §4 qsub-script-folder technique: scripts live in
+//!   a folder until their job completes; survivors after a crash are
+//!   requeued.
+
+pub mod pinger;
+pub mod resilience;
+pub mod statusd;
+
+pub use pinger::{NodeStatus, Pinger};
+pub use resilience::ScriptFolder;
+pub use statusd::StatusService;

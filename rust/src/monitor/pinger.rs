@@ -1,0 +1,119 @@
+//! The server's 5-minute ping sweep (paper §2.6).
+//!
+//! Holds the authoritative node state table: for each node, the last
+//! observed state and when it changed.  The coordinator calls
+//! [`Pinger::sweep`] on the monitor period with the set of nodes that
+//! answered (derived from VPN connectivity + VM state).
+
+use crate::sim::clock::{SimTime, DUR_SEC};
+use std::collections::BTreeMap;
+
+/// Observed state of one node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    On,
+    Off,
+    /// Never observed yet.
+    Unknown,
+}
+
+/// Node state table + sweep bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Pinger {
+    pub period: SimTime,
+    states: BTreeMap<String, (NodeStatus, SimTime)>,
+    pub sweeps: u64,
+    /// (node, at, old, new) transitions, for the fault benches.
+    pub transitions: Vec<(String, SimTime, NodeStatus, NodeStatus)>,
+}
+
+impl Pinger {
+    pub fn new(nodes: &[String]) -> Self {
+        Self {
+            period: 300 * DUR_SEC, // the paper's 5 minutes
+            states: nodes.iter().map(|n| (n.clone(), (NodeStatus::Unknown, 0))).collect(),
+            sweeps: 0,
+            transitions: Vec::new(),
+        }
+    }
+
+    /// One sweep: `responders(name) -> bool` says whether the ping to that
+    /// node came back.
+    pub fn sweep<F: Fn(&str) -> bool>(&mut self, now: SimTime, responders: F) {
+        self.sweeps += 1;
+        for (name, entry) in self.states.iter_mut() {
+            let new = if responders(name) { NodeStatus::On } else { NodeStatus::Off };
+            if entry.0 != new {
+                self.transitions.push((name.clone(), now, entry.0, new));
+                *entry = (new, now);
+            }
+        }
+    }
+
+    pub fn status(&self, node: &str) -> NodeStatus {
+        self.states.get(node).map(|&(s, _)| s).unwrap_or(NodeStatus::Unknown)
+    }
+
+    /// When did the node last change state?
+    pub fn since(&self, node: &str) -> Option<SimTime> {
+        self.states.get(node).map(|&(_, t)| t)
+    }
+
+    pub fn on_nodes(&self) -> Vec<String> {
+        self.states
+            .iter()
+            .filter(|(_, &(s, _))| s == NodeStatus::On)
+            .map(|(n, _)| n.clone())
+            .collect()
+    }
+
+    /// Detection latency bound: a node that dies right after a sweep is
+    /// discovered at most one period later.
+    pub fn worst_case_detection(&self) -> SimTime {
+        self.period
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes() -> Vec<String> {
+        vec!["n01".into(), "n02".into()]
+    }
+
+    #[test]
+    fn initial_state_unknown() {
+        let p = Pinger::new(&nodes());
+        assert_eq!(p.status("n01"), NodeStatus::Unknown);
+        assert_eq!(p.status("nope"), NodeStatus::Unknown);
+    }
+
+    #[test]
+    fn sweep_updates_states_and_transitions() {
+        let mut p = Pinger::new(&nodes());
+        p.sweep(300, |n| n == "n01");
+        assert_eq!(p.status("n01"), NodeStatus::On);
+        assert_eq!(p.status("n02"), NodeStatus::Off);
+        assert_eq!(p.transitions.len(), 2);
+        // Same result next sweep: no new transitions.
+        p.sweep(600, |n| n == "n01");
+        assert_eq!(p.transitions.len(), 2);
+        // n02 comes up.
+        p.sweep(900, |_| true);
+        assert_eq!(p.transitions.len(), 3);
+        assert_eq!(p.since("n02"), Some(900));
+    }
+
+    #[test]
+    fn on_nodes_listing() {
+        let mut p = Pinger::new(&nodes());
+        p.sweep(1, |_| true);
+        assert_eq!(p.on_nodes(), vec!["n01".to_string(), "n02".to_string()]);
+    }
+
+    #[test]
+    fn default_period_is_five_minutes() {
+        assert_eq!(Pinger::new(&nodes()).period, 300 * DUR_SEC);
+    }
+}

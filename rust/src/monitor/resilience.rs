@@ -1,0 +1,131 @@
+//! Job resilience: the qsub-script-folder technique (paper §4).
+//!
+//! "One technique to improve the resilience of submitted jobs is to write
+//! all the qsub scripts in a temporary folder.  The last qsub script
+//! command must be to delete (or rename) the script.  In this way, the
+//! unfinished job's scripts will still remain in the scripts folder and
+//! can be restarted later."
+//!
+//! The folder lives in the server's filesystem image; entries map script
+//! paths to the submitted job and its script text, so `recover` can
+//! re-submit survivors verbatim.
+
+use crate::boot::fsimage::FsImage;
+use crate::rm::job::JobId;
+use crate::rm::script::PbsScript;
+use std::collections::BTreeMap;
+
+/// The scripts folder.
+#[derive(Debug, Clone)]
+pub struct ScriptFolder {
+    pub dir: String,
+    entries: BTreeMap<String, (JobId, String)>, // path -> (job, script text)
+    next_seq: u64,
+}
+
+impl ScriptFolder {
+    pub fn new(dir: &str) -> Self {
+        Self { dir: dir.to_string(), entries: BTreeMap::new(), next_seq: 1 }
+    }
+
+    /// Called right after qsub: drop the script into the folder.
+    pub fn register(&mut self, fs: &mut FsImage, job: JobId, script: &PbsScript) -> String {
+        let path = format!("{}/job-{:06}.sh", self.dir, self.next_seq);
+        self.next_seq += 1;
+        let text = script.render();
+        fs.write(&path, text.len() as u64);
+        self.entries.insert(path.clone(), (job, text));
+        path
+    }
+
+    /// The job's last command ran: remove its script (job completed OK).
+    pub fn job_completed(&mut self, fs: &mut FsImage, job: JobId) {
+        let paths: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, (j, _))| *j == job)
+            .map(|(p, _)| p.clone())
+            .collect();
+        for p in paths {
+            fs.remove(&p);
+            self.entries.remove(&p);
+        }
+    }
+
+    /// Scripts still present = jobs that never finished.  Returns their
+    /// parsed scripts for re-submission (and reassigns folder ownership to
+    /// the new job ids via `register`).
+    pub fn survivors(&self) -> Vec<(JobId, PbsScript)> {
+        self.entries
+            .values()
+            .filter_map(|(job, text)| PbsScript::parse(text).ok().map(|s| (*job, s)))
+            .collect()
+    }
+
+    /// Re-key a survivor to its re-submitted job id.
+    pub fn rebind(&mut self, old: JobId, new: JobId) {
+        for entry in self.entries.values_mut() {
+            if entry.0 == old {
+                entry.0 = new;
+            }
+        }
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn script() -> PbsScript {
+        PbsScript::parse("#PBS -N mc\n#PBS -q gridlan\n#PBS -l nodes=1:ppn=2\n./mc.x\n").unwrap()
+    }
+
+    #[test]
+    fn completed_jobs_leave_no_trace() {
+        let mut fs = FsImage::new();
+        let mut folder = ScriptFolder::new("/var/spool/gridlan");
+        let p = folder.register(&mut fs, JobId(1), &script());
+        assert!(fs.exists(&p));
+        folder.job_completed(&mut fs, JobId(1));
+        assert!(!fs.exists(&p));
+        assert_eq!(folder.pending_count(), 0);
+    }
+
+    #[test]
+    fn unfinished_jobs_survive() {
+        let mut fs = FsImage::new();
+        let mut folder = ScriptFolder::new("/var/spool/gridlan");
+        folder.register(&mut fs, JobId(1), &script());
+        folder.register(&mut fs, JobId(2), &script());
+        folder.job_completed(&mut fs, JobId(1));
+        let survivors = folder.survivors();
+        assert_eq!(survivors.len(), 1);
+        assert_eq!(survivors[0].0, JobId(2));
+        assert_eq!(survivors[0].1.name.as_deref(), Some("mc"));
+    }
+
+    #[test]
+    fn rebind_after_resubmission() {
+        let mut fs = FsImage::new();
+        let mut folder = ScriptFolder::new("/spool");
+        folder.register(&mut fs, JobId(2), &script());
+        folder.rebind(JobId(2), JobId(7));
+        // Now completing job 7 clears the folder.
+        folder.job_completed(&mut fs, JobId(7));
+        assert_eq!(folder.pending_count(), 0);
+    }
+
+    #[test]
+    fn survivor_scripts_parse_back() {
+        let mut fs = FsImage::new();
+        let mut folder = ScriptFolder::new("/spool");
+        folder.register(&mut fs, JobId(3), &script());
+        let (_, s) = &folder.survivors()[0];
+        assert_eq!(s.request.total_cores(), 2);
+        assert_eq!(s.queue.as_deref(), Some("gridlan"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Status service: answers the client watchdog's question "is my node on?"
+//! from the pinger's state table (paper §2.6: "A script in the client
+//! machine asks the server if the virtual machine ... is on").
+
+use super::pinger::{NodeStatus, Pinger};
+
+/// Thin query facade over the pinger table, with a client→node mapping
+/// (each client hosts exactly one node in the paper's design).
+#[derive(Debug, Clone, Default)]
+pub struct StatusService {
+    /// client name → node name.
+    bindings: std::collections::BTreeMap<String, String>,
+    pub queries: u64,
+}
+
+impl StatusService {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bind(&mut self, client: &str, node: &str) {
+        self.bindings.insert(client.to_string(), node.to_string());
+    }
+
+    /// The watchdog's query. `None` = unknown client (not provisioned).
+    pub fn is_node_on(&mut self, pinger: &Pinger, client: &str) -> Option<bool> {
+        self.queries += 1;
+        let node = self.bindings.get(client)?;
+        match pinger.status(node) {
+            NodeStatus::On => Some(true),
+            NodeStatus::Off => Some(false),
+            // Conservative: an unknown node is reported off so the
+            // watchdog boots it (first start-up case).
+            NodeStatus::Unknown => Some(false),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn answers_from_pinger_table() {
+        let mut svc = StatusService::new();
+        svc.bind("client01", "n01");
+        let mut pinger = Pinger::new(&["n01".to_string()]);
+        pinger.sweep(300, |_| true);
+        assert_eq!(svc.is_node_on(&pinger, "client01"), Some(true));
+        pinger.sweep(600, |_| false);
+        assert_eq!(svc.is_node_on(&pinger, "client01"), Some(false));
+        assert_eq!(svc.queries, 2);
+    }
+
+    #[test]
+    fn unknown_client_is_none() {
+        let mut svc = StatusService::new();
+        let pinger = Pinger::new(&[]);
+        assert_eq!(svc.is_node_on(&pinger, "stranger"), None);
+    }
+
+    #[test]
+    fn unknown_node_reports_off() {
+        let mut svc = StatusService::new();
+        svc.bind("client01", "n01");
+        let pinger = Pinger::new(&["n01".to_string()]); // never swept
+        assert_eq!(svc.is_node_on(&pinger, "client01"), Some(false));
+    }
+}

@@ -1,0 +1,128 @@
+//! Collective operations over the hub star topology.
+//!
+//! Because every node↔node path crosses the server (paper §2.1), the hub
+//! IS the natural collective root: bcast/gather are one leg per node, and
+//! node-rooted collectives pay an extra hop to reach the server first.
+
+use super::comm::{Communicator, RankLoc};
+use crate::netsim::topology::Network;
+use crate::util::rng::SplitMix64;
+use crate::vpn::hub::VpnHub;
+
+/// Duration (µs) of a broadcast from rank `root` to all other ranks.
+/// Server sends sequentially per tunnel (single uplink NIC) but the legs
+/// overlap on distinct client links: cost = serialization of all sends at
+/// the root + the slowest flight.
+pub fn bcast_us(
+    comm: &Communicator,
+    net: &Network,
+    hub: &VpnHub,
+    root: usize,
+    bytes: u32,
+    rng: &mut SplitMix64,
+) -> Option<f64> {
+    let mut to_server = 0.0;
+    // Non-server root first relays to the server (hub routing).
+    if !matches!(comm.ranks[root], RankLoc::Server) {
+        // Approximate with a send to rank "server" if present, else one leg.
+        to_server = comm.send_us(net, hub, root, server_rank(comm)?, bytes, rng)?;
+    }
+    let mut slowest: f64 = 0.0;
+    let mut fanout = 0.0;
+    for (i, loc) in comm.ranks.iter().enumerate() {
+        if i == root || matches!(loc, RankLoc::Server) {
+            continue;
+        }
+        let leg = comm.send_us(net, hub, server_rank(comm)?, i, bytes, rng)?;
+        slowest = slowest.max(leg);
+        fanout += 8.0; // per-send server CPU cost, µs
+    }
+    Some(to_server + fanout + slowest)
+}
+
+/// Duration (µs) of a reduce to `root` (gather legs overlap; root pays a
+/// per-message combine cost).
+pub fn reduce_us(
+    comm: &Communicator,
+    net: &Network,
+    hub: &VpnHub,
+    root: usize,
+    bytes: u32,
+    rng: &mut SplitMix64,
+) -> Option<f64> {
+    let mut slowest: f64 = 0.0;
+    let mut combine = 0.0;
+    for i in 0..comm.ranks.len() {
+        if i == root {
+            continue;
+        }
+        let leg = comm.send_us(net, hub, i, root, bytes, rng)?;
+        slowest = slowest.max(leg);
+        combine += 3.0; // µs per partial combined at the root
+    }
+    Some(slowest + combine)
+}
+
+/// allreduce = reduce to server-side root + bcast back.
+pub fn allreduce_us(
+    comm: &Communicator,
+    net: &Network,
+    hub: &VpnHub,
+    bytes: u32,
+    rng: &mut SplitMix64,
+) -> Option<f64> {
+    let root = server_rank(comm)?;
+    Some(reduce_us(comm, net, hub, root, bytes, rng)? + bcast_us(comm, net, hub, root, bytes, rng)?)
+}
+
+fn server_rank(comm: &Communicator) -> Option<usize> {
+    comm.ranks.iter().position(|r| matches!(r, RankLoc::Server))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::comm::tests::rig;
+
+    fn comm3() -> Communicator {
+        Communicator::new(vec![
+            RankLoc::Server,
+            RankLoc::Node { client: "n01".into(), vnet_us: 165.0 },
+            RankLoc::Node { client: "n02".into(), vnet_us: 165.0 },
+        ])
+    }
+
+    #[test]
+    fn bcast_from_server_is_one_leg_deep() {
+        let (net, hub, _) = rig();
+        let comm = comm3();
+        let mut rng = SplitMix64::new(5);
+        let b = bcast_us(&comm, &net, &hub, 0, 1024, &mut rng).unwrap();
+        let mut rng2 = SplitMix64::new(5);
+        let leg = comm.send_us(&net, &hub, 0, 1, 1024, &mut rng2).unwrap();
+        assert!(b < 2.0 * leg, "b={b} leg={leg}");
+    }
+
+    #[test]
+    fn node_rooted_bcast_pays_uplink() {
+        let (net, hub, _) = rig();
+        let comm = comm3();
+        let mut r1 = SplitMix64::new(6);
+        let mut r2 = SplitMix64::new(6);
+        let from_server = bcast_us(&comm, &net, &hub, 0, 1024, &mut r1).unwrap();
+        let from_node = bcast_us(&comm, &net, &hub, 1, 1024, &mut r2).unwrap();
+        assert!(from_node > from_server);
+    }
+
+    #[test]
+    fn allreduce_is_reduce_plus_bcast() {
+        let (net, hub, _) = rig();
+        let comm = comm3();
+        let mut rng = SplitMix64::new(7);
+        let ar = allreduce_us(&comm, &net, &hub, 4096, &mut rng).unwrap();
+        let mut rng = SplitMix64::new(7);
+        let r = reduce_us(&comm, &net, &hub, 0, 4096, &mut rng).unwrap();
+        let b = bcast_us(&comm, &net, &hub, 0, 4096, &mut rng).unwrap();
+        assert!((ar - (r + b)).abs() < 1.0);
+    }
+}

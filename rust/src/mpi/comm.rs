@@ -1,0 +1,142 @@
+//! Communicators and point-to-point transfer over the Gridlan.
+
+use crate::netsim::packet::{Layer, Packet};
+use crate::netsim::topology::Network;
+use crate::util::rng::SplitMix64;
+use crate::vpn::hub::VpnHub;
+
+/// Where a rank runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RankLoc {
+    /// On the Gridlan server itself.
+    Server,
+    /// On the node hosted by this client (traffic rides the tunnel +
+    /// virtio; `vnet_us` is the hypervisor's one-way virtual-NIC cost).
+    Node { client: String, vnet_us: f64 },
+}
+
+/// An MPI communicator: rank i lives at `ranks[i]`.
+#[derive(Debug, Clone)]
+pub struct Communicator {
+    pub ranks: Vec<RankLoc>,
+    /// MPI software stack cost per message per endpoint (marshalling,
+    /// matching), µs.
+    pub sw_stack_us: f64,
+}
+
+impl Communicator {
+    pub fn new(ranks: Vec<RankLoc>) -> Self {
+        Self { ranks, sw_stack_us: 12.0 }
+    }
+
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    fn msg(bytes: u32) -> Packet {
+        Packet::new(bytes, 1).push_layer(Layer::Ipv4).push_layer(Layer::Udp)
+    }
+
+    /// One-way delay (µs) of a `bytes`-byte message from rank `src` to
+    /// rank `dst`.  None if either endpoint is unreachable.
+    pub fn send_us(
+        &self,
+        net: &Network,
+        hub: &VpnHub,
+        src: usize,
+        dst: usize,
+        bytes: u32,
+        rng: &mut SplitMix64,
+    ) -> Option<f64> {
+        let p = Self::msg(bytes);
+        let base = match (&self.ranks[src], &self.ranks[dst]) {
+            (RankLoc::Server, RankLoc::Server) => 2.0, // shared memory
+            (RankLoc::Server, RankLoc::Node { client, vnet_us }) => {
+                hub.server_to_client_us(net, client, &p, rng)? + vnet_us
+            }
+            (RankLoc::Node { client, vnet_us }, RankLoc::Server) => {
+                hub.server_to_client_us(net, client, &p, rng)? + vnet_us
+            }
+            (
+                RankLoc::Node { client: c1, vnet_us: v1 },
+                RankLoc::Node { client: c2, vnet_us: v2 },
+            ) => {
+                if c1 == c2 {
+                    // Same VM: loopback.
+                    5.0
+                } else {
+                    hub.client_to_client_us(net, c1, c2, &p, rng)? + v1 + v2
+                }
+            }
+        };
+        Some(base + 2.0 * self.sw_stack_us)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::netsim::topology::{DeviceId, LinkProfile, Network};
+    use crate::vpn::tunnel::TunnelCost;
+
+    pub fn rig() -> (Network, VpnHub, DeviceId) {
+        let mut n = Network::new();
+        n.jitter_sigma_us = 0.0;
+        let srv = n.add_host("server", 50.0);
+        let sw = n.add_switch("sw", 20.0);
+        let h1 = n.add_host("h1", 60.0);
+        let h2 = n.add_host("h2", 60.0);
+        let g = LinkProfile::gigabit();
+        n.link(srv, sw, g);
+        n.link(sw, h1, g);
+        n.link(sw, h2, g);
+        let mut hub = VpnHub::new(srv, 3);
+        for (name, dev) in [("n01", h1), ("n02", h2)] {
+            let k = hub.provision(name);
+            hub.connect(name, &k, dev, TunnelCost::default()).unwrap();
+        }
+        (n, hub, srv)
+    }
+
+    fn node(client: &str) -> RankLoc {
+        RankLoc::Node { client: client.into(), vnet_us: 165.0 }
+    }
+
+    #[test]
+    fn node_to_node_slower_than_server_to_node() {
+        let (net, hub, _) = rig();
+        let comm = Communicator::new(vec![RankLoc::Server, node("n01"), node("n02")]);
+        let mut rng = SplitMix64::new(1);
+        let s2n = comm.send_us(&net, &hub, 0, 1, 56, &mut rng).unwrap();
+        let n2n = comm.send_us(&net, &hub, 1, 2, 56, &mut rng).unwrap();
+        assert!(n2n > 1.7 * s2n, "n2n={n2n} s2n={s2n}");
+    }
+
+    #[test]
+    fn same_vm_is_loopback() {
+        let (net, hub, _) = rig();
+        let comm = Communicator::new(vec![node("n01"), node("n01")]);
+        let mut rng = SplitMix64::new(1);
+        let d = comm.send_us(&net, &hub, 0, 1, 56, &mut rng).unwrap();
+        assert!(d < 50.0, "loopback d={d}");
+    }
+
+    #[test]
+    fn disconnected_client_unreachable() {
+        let (net, mut hub, _) = rig();
+        hub.disconnect("n02");
+        let comm = Communicator::new(vec![RankLoc::Server, node("n02")]);
+        let mut rng = SplitMix64::new(1);
+        assert!(comm.send_us(&net, &hub, 0, 1, 56, &mut rng).is_none());
+    }
+
+    #[test]
+    fn bigger_messages_cost_more() {
+        let (net, hub, _) = rig();
+        let comm = Communicator::new(vec![RankLoc::Server, node("n01")]);
+        let mut rng = SplitMix64::new(1);
+        let small = comm.send_us(&net, &hub, 0, 1, 56, &mut rng).unwrap();
+        let big = comm.send_us(&net, &hub, 0, 1, 1_000_000, &mut rng).unwrap();
+        assert!(big > small * 2.0, "big={big} small={small}");
+    }
+}

@@ -1,0 +1,66 @@
+//! The MPI latency (ping-pong) test — paper §3.3, experiment M1.
+//!
+//! "An additional latency test was also carried out ... with an MPI
+//! latency test using the same 56 bytes for the message as the default
+//! ICMP ping."  Result in the paper: 1200(80) µs for n01's node vs the
+//! 1250(30) µs ICMP node ping — i.e. MPI sees what ping sees.
+
+use super::comm::Communicator;
+use crate::netsim::topology::Network;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Summary;
+use crate::vpn::hub::VpnHub;
+
+/// Round-trip (ping-pong) samples between two ranks.  Returns the RTT
+/// summary in µs over `iters` iterations.
+pub fn mpi_latency_test(
+    comm: &Communicator,
+    net: &Network,
+    hub: &VpnHub,
+    a: usize,
+    b: usize,
+    bytes: u32,
+    iters: usize,
+    rng: &mut SplitMix64,
+) -> Option<Summary> {
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let fwd = comm.send_us(net, hub, a, b, bytes, rng)?;
+        let back = comm.send_us(net, hub, b, a, bytes, rng)?;
+        s.push(fwd + back);
+    }
+    Some(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::comm::{tests::rig, RankLoc};
+
+    #[test]
+    fn pingpong_consistent_with_two_sends() {
+        let (net, hub, _) = rig();
+        let comm = Communicator::new(vec![
+            RankLoc::Server,
+            RankLoc::Node { client: "n01".into(), vnet_us: 165.0 },
+        ]);
+        let mut rng = SplitMix64::new(2);
+        let s = mpi_latency_test(&comm, &net, &hub, 0, 1, 56, 100, &mut rng).unwrap();
+        let mut rng2 = SplitMix64::new(99);
+        let one = comm.send_us(&net, &hub, 0, 1, 56, &mut rng2).unwrap();
+        assert!((s.mean() - 2.0 * one).abs() < one * 0.05, "mean={} one={one}", s.mean());
+        assert_eq!(s.len(), 100);
+    }
+
+    #[test]
+    fn unreachable_gives_none() {
+        let (net, mut hub, _) = rig();
+        hub.disconnect("n01");
+        let comm = Communicator::new(vec![
+            RankLoc::Server,
+            RankLoc::Node { client: "n01".into(), vnet_us: 165.0 },
+        ]);
+        let mut rng = SplitMix64::new(2);
+        assert!(mpi_latency_test(&comm, &net, &hub, 0, 1, 56, 5, &mut rng).is_none());
+    }
+}

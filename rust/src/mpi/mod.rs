@@ -1,0 +1,20 @@
+//! A small MPI-like message layer over the Gridlan transport.
+//!
+//! The paper uses an "MPI latency test" (§3.3) to confirm ICMP ping is a
+//! fair proxy for what scientific tools experience, and §4 analyses when
+//! communicating parallel jobs are worth running on the Gridlan at all.
+//!
+//! * [`comm`] — communicators: ranks pinned to the server or to nodes;
+//!   point-to-point delays via the VPN hub (node↔node = two legs);
+//! * [`latency`] — the 56-byte ping-pong test (experiment M1);
+//! * [`collectives`] — bcast/reduce/allreduce over the hub star;
+//! * [`pattern`] — the §4 compute/communication efficiency analysis.
+
+pub mod collectives;
+pub mod comm;
+pub mod latency;
+pub mod pattern;
+
+pub use comm::{Communicator, RankLoc};
+pub use latency::mpi_latency_test;
+pub use pattern::CommPattern;

@@ -1,0 +1,104 @@
+//! Compute/communication pattern analysis (paper §4).
+//!
+//! "An example of an intermediate case would be a process that spent 70%
+//! of the time performing calculations and 30% of the time communicating.
+//! It would be up to the user to decide whether this parallelization
+//! algorithm was acceptable".  This module quantifies that decision:
+//! given a job's per-iteration compute time and message profile, estimate
+//! parallel efficiency on the Gridlan vs on a homogeneous cluster.
+
+/// A bulk-synchronous job's communication pattern.
+#[derive(Debug, Clone, Copy)]
+pub struct CommPattern {
+    /// Compute time per iteration per process, µs.
+    pub compute_us: f64,
+    /// Messages exchanged per process per iteration.
+    pub msgs_per_iter: f64,
+    /// Bytes per message.
+    pub msg_bytes: u32,
+}
+
+impl CommPattern {
+    /// Embarrassingly parallel: no communication at all.
+    pub fn embarrassingly_parallel(compute_us: f64) -> Self {
+        Self { compute_us, msgs_per_iter: 0.0, msg_bytes: 0 }
+    }
+
+    /// Communication time per iteration given per-message latency (µs) and
+    /// per-byte cost (µs/B) of the interconnect.
+    pub fn comm_us(&self, latency_us: f64, us_per_byte: f64) -> f64 {
+        self.msgs_per_iter * (latency_us + self.msg_bytes as f64 * us_per_byte)
+    }
+
+    /// Parallel efficiency: compute / (compute + comm).  The §4 rule of
+    /// thumb — the allocated CPU idles while communicating.
+    pub fn efficiency(&self, latency_us: f64, us_per_byte: f64) -> f64 {
+        let c = self.comm_us(latency_us, us_per_byte);
+        if self.compute_us <= 0.0 {
+            return 0.0;
+        }
+        self.compute_us / (self.compute_us + c)
+    }
+
+    /// The paper's acceptability analysis: is this job worth parallelizing
+    /// across Gridlan nodes (threshold = user's tolerance, e.g. 0.7)?
+    pub fn acceptable_on(&self, latency_us: f64, us_per_byte: f64, threshold: f64) -> bool {
+        self.efficiency(latency_us, us_per_byte) >= threshold
+    }
+
+    /// Latency bound: the largest interconnect latency at which the job
+    /// still reaches `threshold` efficiency (µs); None if even zero-latency
+    /// can't (bandwidth-bound).
+    pub fn max_latency_us(&self, us_per_byte: f64, threshold: f64) -> Option<f64> {
+        if self.msgs_per_iter == 0.0 {
+            return Some(f64::INFINITY);
+        }
+        // eff = c/(c + m(l + b)) >= th  =>  l <= (c(1-th)/th)/m - b
+        let budget = self.compute_us * (1.0 - threshold) / threshold;
+        let per_msg_budget = budget / self.msgs_per_iter;
+        let l = per_msg_budget - self.msg_bytes as f64 * us_per_byte;
+        if l >= 0.0 {
+            Some(l)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ep_jobs_are_perfectly_efficient() {
+        let p = CommPattern::embarrassingly_parallel(1e6);
+        assert_eq!(p.efficiency(1400.0, 0.08), 1.0);
+        assert!(p.acceptable_on(1e9, 1.0, 0.999));
+    }
+
+    #[test]
+    fn paper_70_30_example() {
+        // Construct a pattern that spends 70% computing / 30% communicating
+        // on the Gridlan interconnect (1400 µs node-node latency).
+        let p = CommPattern { compute_us: 7000.0, msgs_per_iter: 2.0, msg_bytes: 1000 };
+        let eff = p.efficiency(1400.0, 0.08);
+        assert!((eff - 0.7).abs() < 0.02, "eff={eff}");
+        // On a cluster (50 µs, 0.008 µs/B) the same job is fine.
+        assert!(p.efficiency(50.0, 0.008) > 0.97);
+    }
+
+    #[test]
+    fn latency_bound_consistent_with_efficiency() {
+        let p = CommPattern { compute_us: 10_000.0, msgs_per_iter: 4.0, msg_bytes: 512 };
+        let l = p.max_latency_us(0.08, 0.8).unwrap();
+        let eff = p.efficiency(l, 0.08);
+        assert!((eff - 0.8).abs() < 1e-6, "eff={eff}");
+        assert!(p.efficiency(l * 1.3, 0.08) < 0.8);
+    }
+
+    #[test]
+    fn bandwidth_bound_job_has_no_latency_budget() {
+        let p = CommPattern { compute_us: 100.0, msgs_per_iter: 1.0, msg_bytes: 1_000_000 };
+        assert!(p.max_latency_us(0.08, 0.9).is_none());
+    }
+}

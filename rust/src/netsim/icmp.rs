@@ -1,0 +1,133 @@
+//! ICMP echo (ping) over the simulated LAN — the Table 2 measurement tool.
+//!
+//! `ping_sweep` reproduces the paper's methodology: repeated 56-byte
+//! echoes, reported as mean(std) of the RTT.  The responder adds a small
+//! processing delay (ICMP handled in-kernel).
+
+use super::packet::Packet;
+use super::topology::{DeviceId, Network};
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Summary;
+
+/// ICMP echo responder processing time (kernel fast path), µs.
+pub const ECHO_PROC_US: f64 = 15.0;
+
+/// Result of a ping sweep.
+#[derive(Debug, Clone)]
+pub struct PingStats {
+    pub rtts_us: Summary,
+    pub sent: usize,
+    pub lost: usize,
+}
+
+impl PingStats {
+    pub fn mean_us(&self) -> f64 {
+        self.rtts_us.mean()
+    }
+
+    pub fn std_us(&self) -> f64 {
+        self.rtts_us.std()
+    }
+
+    /// Paper-style string, e.g. "550(20)".
+    pub fn paper(&self, round: f64) -> String {
+        self.rtts_us.paper_format(round)
+    }
+}
+
+/// One RTT sample (µs) for an un-tunneled ping, or None if unreachable.
+pub fn ping_once(
+    net: &Network,
+    from: DeviceId,
+    to: DeviceId,
+    packet: &Packet,
+    rng: &mut SplitMix64,
+) -> Option<f64> {
+    let fwd = net.sample_one_way(from, to, packet.wire_bytes(), rng)? as f64 / 1e3;
+    let back = net.sample_one_way(to, from, packet.wire_bytes(), rng)? as f64 / 1e3;
+    Some(fwd + ECHO_PROC_US + back)
+}
+
+/// `count` echo samples, like `ping -c count`.
+pub fn ping_sweep(
+    net: &Network,
+    from: DeviceId,
+    to: DeviceId,
+    packet: &Packet,
+    count: usize,
+    rng: &mut SplitMix64,
+) -> PingStats {
+    let mut s = Summary::new();
+    let mut lost = 0;
+    for _ in 0..count {
+        match ping_once(net, from, to, packet, rng) {
+            Some(rtt) => s.push(rtt),
+            None => lost += 1,
+        }
+    }
+    PingStats { rtts_us: s, sent: count, lost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::topology::LinkProfile;
+
+    fn pair() -> (Network, DeviceId, DeviceId) {
+        let mut n = Network::new();
+        let a = n.add_host("server", 100.0);
+        let sw = n.add_switch("sw", 25.0);
+        let b = n.add_host("client", 120.0);
+        n.link(a, sw, LinkProfile::gigabit());
+        n.link(sw, b, LinkProfile::gigabit());
+        (n, a, b)
+    }
+
+    #[test]
+    fn rtt_is_roughly_twice_one_way() {
+        let (n, a, b) = pair();
+        let one_way = n.one_way_delay_us(a, b, Packet::icmp_echo().wire_bytes()).unwrap();
+        let mut rng = SplitMix64::new(1);
+        let stats = ping_sweep(&n, a, b, &Packet::icmp_echo(), 200, &mut rng);
+        let expect = 2.0 * one_way + ECHO_PROC_US;
+        assert!(
+            (stats.mean_us() - expect).abs() < 5.0,
+            "mean {} vs {}",
+            stats.mean_us(),
+            expect
+        );
+        assert_eq!(stats.lost, 0);
+    }
+
+    #[test]
+    fn std_reflects_jitter() {
+        let (mut n, a, b) = pair();
+        n.jitter_sigma_us = 10.0;
+        let mut rng = SplitMix64::new(2);
+        let stats = ping_sweep(&n, a, b, &Packet::icmp_echo(), 300, &mut rng);
+        // Two one-way samples per RTT: sigma_rtt ~ sqrt(2)*10.
+        assert!(stats.std_us() > 5.0 && stats.std_us() < 30.0, "std={}", stats.std_us());
+    }
+
+    #[test]
+    fn unreachable_counts_lost() {
+        let mut n = Network::new();
+        let a = n.add_host("a", 1.0);
+        let b = n.add_host("b", 1.0);
+        let mut rng = SplitMix64::new(3);
+        let stats = ping_sweep(&n, a, b, &Packet::icmp_echo(), 5, &mut rng);
+        assert_eq!(stats.lost, 5);
+        assert!(stats.rtts_us.is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (n, a, b) = pair();
+        let mut r1 = SplitMix64::new(7);
+        let mut r2 = SplitMix64::new(7);
+        let s1 = ping_sweep(&n, a, b, &Packet::icmp_echo(), 50, &mut r1);
+        let s2 = ping_sweep(&n, a, b, &Packet::icmp_echo(), 50, &mut r2);
+        assert_eq!(s1.mean_us(), s2.mean_us());
+        assert_eq!(s1.std_us(), s2.std_us());
+    }
+}

@@ -1,0 +1,23 @@
+//! Simulated LAN substrate.
+//!
+//! The paper's testbed is a building LAN: clients "a few switches or
+//! routers away from the server ... linked via wired connections" (Fig. 1c).
+//! This module models exactly what Table 2 is sensitive to:
+//!
+//! * per-link propagation + serialization delay,
+//! * per-switch store-and-forward + processing delay,
+//! * OS/NIC stack latency at each endpoint,
+//! * gaussian jitter (the paper reports mean(std) over repeated pings).
+//!
+//! Topology is a device graph; paths are BFS shortest hop-count (LANs are
+//! trees in practice).  Packet delivery is event-driven via
+//! [`crate::sim::Simulator`]; latency-only queries use the analytic
+//! [`Network::one_way_delay`], which the event path shares.
+
+pub mod icmp;
+pub mod packet;
+pub mod topology;
+
+pub use icmp::{ping_sweep, PingStats};
+pub use packet::{Packet, ETH_HEADER, ICMP_HEADER, IP_HEADER, UDP_HEADER, VPN_HEADER};
+pub use topology::{DeviceId, DeviceKind, LinkProfile, Network, PathDelayModel};

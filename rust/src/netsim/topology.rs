@@ -1,0 +1,307 @@
+//! Device graph and the path delay model.
+
+use crate::sim::clock::{from_us_f64, SimTime};
+use crate::util::rng::SplitMix64;
+use std::collections::{HashMap, VecDeque};
+
+/// Index of a device in the network graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub usize);
+
+/// What a device is — affects per-hop processing cost.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceKind {
+    /// End host: contributes OS+NIC stack latency at path endpoints.
+    Host { stack_us: f64 },
+    /// Store-and-forward switch/router.
+    Switch { proc_us: f64 },
+}
+
+/// Physical link characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkProfile {
+    /// Propagation + cabling delay, one way (µs).
+    pub latency_us: f64,
+    /// Bandwidth in megabits/s (serialization delay = bytes*8/bw).
+    pub bandwidth_mbps: f64,
+}
+
+impl LinkProfile {
+    /// Typical building gigabit run.
+    pub fn gigabit() -> Self {
+        Self { latency_us: 3.0, bandwidth_mbps: 1000.0 }
+    }
+
+    /// Older 100 Mb/s segment (several of the paper's clients).
+    pub fn fast_ethernet() -> Self {
+        Self { latency_us: 5.0, bandwidth_mbps: 100.0 }
+    }
+
+    /// Serialization delay for `bytes` on this link, in µs.
+    pub fn serialize_us(&self, bytes: u32) -> f64 {
+        (bytes as f64 * 8.0) / self.bandwidth_mbps
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Device {
+    #[allow(dead_code)]
+    name: String,
+    kind: DeviceKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Edge {
+    to: usize,
+    profile: LinkProfile,
+}
+
+/// Analytic delay decomposition for one path traversal (all µs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PathDelayModel {
+    pub endpoint_stack_us: f64,
+    pub propagation_us: f64,
+    pub serialization_us: f64,
+    pub switching_us: f64,
+}
+
+impl PathDelayModel {
+    pub fn total_us(&self) -> f64 {
+        self.endpoint_stack_us + self.propagation_us + self.serialization_us + self.switching_us
+    }
+}
+
+/// The LAN graph.
+#[derive(Debug, Clone, Default)]
+pub struct Network {
+    devices: Vec<Device>,
+    adj: Vec<Vec<Edge>>,
+    by_name: HashMap<String, usize>,
+    /// Per-path gaussian jitter sigma (µs) applied to one-way samples.
+    pub jitter_sigma_us: f64,
+}
+
+impl Network {
+    pub fn new() -> Self {
+        Self { jitter_sigma_us: 7.0, ..Default::default() }
+    }
+
+    pub fn add_device(&mut self, name: &str, kind: DeviceKind) -> DeviceId {
+        assert!(
+            !self.by_name.contains_key(name),
+            "duplicate device name {name}"
+        );
+        let id = self.devices.len();
+        self.devices.push(Device { name: name.to_string(), kind });
+        self.adj.push(Vec::new());
+        self.by_name.insert(name.to_string(), id);
+        DeviceId(id)
+    }
+
+    pub fn add_host(&mut self, name: &str, stack_us: f64) -> DeviceId {
+        self.add_device(name, DeviceKind::Host { stack_us })
+    }
+
+    pub fn add_switch(&mut self, name: &str, proc_us: f64) -> DeviceId {
+        self.add_device(name, DeviceKind::Switch { proc_us })
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<DeviceId> {
+        self.by_name.get(name).map(|&i| DeviceId(i))
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Bidirectional link.
+    pub fn link(&mut self, a: DeviceId, b: DeviceId, profile: LinkProfile) {
+        assert_ne!(a, b, "self-link");
+        self.adj[a.0].push(Edge { to: b.0, profile });
+        self.adj[b.0].push(Edge { to: a.0, profile });
+    }
+
+    /// BFS shortest path (device ids, inclusive of endpoints).
+    pub fn path(&self, from: DeviceId, to: DeviceId) -> Option<Vec<DeviceId>> {
+        if from == to {
+            return Some(vec![from]);
+        }
+        let mut prev: Vec<Option<usize>> = vec![None; self.devices.len()];
+        let mut seen = vec![false; self.devices.len()];
+        let mut q = VecDeque::new();
+        seen[from.0] = true;
+        q.push_back(from.0);
+        while let Some(u) = q.pop_front() {
+            for e in &self.adj[u] {
+                if !seen[e.to] {
+                    seen[e.to] = true;
+                    prev[e.to] = Some(u);
+                    if e.to == to.0 {
+                        let mut path = vec![to.0];
+                        let mut cur = u;
+                        loop {
+                            path.push(cur);
+                            match prev[cur] {
+                                Some(p) => cur = p,
+                                None => break,
+                            }
+                        }
+                        path.reverse();
+                        return Some(path.into_iter().map(DeviceId).collect());
+                    }
+                    q.push_back(e.to);
+                }
+            }
+        }
+        None
+    }
+
+    fn edge_between(&self, a: usize, b: usize) -> Option<LinkProfile> {
+        self.adj[a].iter().find(|e| e.to == b).map(|e| e.profile)
+    }
+
+    /// Analytic one-way delay decomposition for `bytes` from `from` to `to`.
+    /// Returns None if the devices are not connected.
+    pub fn delay_model(&self, from: DeviceId, to: DeviceId, bytes: u32) -> Option<PathDelayModel> {
+        let path = self.path(from, to)?;
+        let mut m = PathDelayModel::default();
+        for d in [&path[0], path.last().unwrap()] {
+            if let DeviceKind::Host { stack_us } = self.devices[d.0].kind {
+                m.endpoint_stack_us += stack_us;
+            }
+        }
+        for w in path.windows(2) {
+            let lp = self
+                .edge_between(w[0].0, w[1].0)
+                .expect("path uses nonexistent edge");
+            m.propagation_us += lp.latency_us;
+            m.serialization_us += lp.serialize_us(bytes);
+        }
+        // Interior devices: switching cost (store-and-forward already covered
+        // by per-link serialization; proc_us is lookup+queueing).
+        for d in &path[1..path.len().saturating_sub(1)] {
+            if let DeviceKind::Switch { proc_us } = self.devices[d.0].kind {
+                m.switching_us += proc_us;
+            }
+        }
+        Some(m)
+    }
+
+    /// Mean one-way delay in µs.
+    pub fn one_way_delay_us(&self, from: DeviceId, to: DeviceId, bytes: u32) -> Option<f64> {
+        self.delay_model(from, to, bytes).map(|m| m.total_us())
+    }
+
+    /// One jittered one-way sample as SimTime.
+    pub fn sample_one_way(
+        &self,
+        from: DeviceId,
+        to: DeviceId,
+        bytes: u32,
+        rng: &mut SplitMix64,
+    ) -> Option<SimTime> {
+        let mean = self.one_way_delay_us(from, to, bytes)?;
+        let jitter = rng.next_gaussian() * self.jitter_sigma_us;
+        // Jitter can only delay below a floor of 80% of the mean — packets
+        // don't arrive before light.
+        Some(from_us_f64((mean + jitter).max(mean * 0.8)))
+    }
+
+    /// Hop count (number of links) between two devices.
+    pub fn hops(&self, from: DeviceId, to: DeviceId) -> Option<usize> {
+        self.path(from, to).map(|p| p.len().saturating_sub(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lan() -> (Network, DeviceId, DeviceId, DeviceId) {
+        // server - sw1 - sw2 - client ; second client on sw1.
+        let mut n = Network::new();
+        let server = n.add_host("server", 50.0);
+        let sw1 = n.add_switch("sw1", 20.0);
+        let sw2 = n.add_switch("sw2", 20.0);
+        let c1 = n.add_host("c1", 60.0);
+        let c2 = n.add_host("c2", 60.0);
+        let g = LinkProfile::gigabit();
+        n.link(server, sw1, g);
+        n.link(sw1, sw2, g);
+        n.link(sw2, c1, g);
+        n.link(sw1, c2, g);
+        (n, server, c1, c2)
+    }
+
+    #[test]
+    fn bfs_path_and_hops() {
+        let (n, server, c1, c2) = lan();
+        assert_eq!(n.hops(server, c1), Some(3));
+        assert_eq!(n.hops(server, c2), Some(2));
+        assert_eq!(n.hops(server, server), Some(0));
+        let p = n.path(server, c1).unwrap();
+        assert_eq!(p.len(), 4);
+    }
+
+    #[test]
+    fn disconnected_is_none() {
+        let mut n = Network::new();
+        let a = n.add_host("a", 10.0);
+        let b = n.add_host("b", 10.0);
+        assert!(n.path(a, b).is_none());
+        assert!(n.one_way_delay_us(a, b, 100).is_none());
+    }
+
+    #[test]
+    fn delay_decomposition_adds_up() {
+        let (n, server, c1, _) = lan();
+        let m = n.delay_model(server, c1, 102).unwrap();
+        // endpoints: 50 + 60; 3 links x 3µs prop; 3 links x 0.816µs ser;
+        // 2 switches x 20µs.
+        assert!((m.endpoint_stack_us - 110.0).abs() < 1e-9);
+        assert!((m.propagation_us - 9.0).abs() < 1e-9);
+        assert!((m.serialization_us - 3.0 * 102.0 * 8.0 / 1000.0).abs() < 1e-9);
+        assert!((m.switching_us - 40.0).abs() < 1e-9);
+        assert!((m.total_us() - (110.0 + 9.0 + 2.448 + 40.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bigger_packets_take_longer() {
+        let (n, server, c1, _) = lan();
+        let small = n.one_way_delay_us(server, c1, 100).unwrap();
+        let big = n.one_way_delay_us(server, c1, 1500).unwrap();
+        assert!(big > small);
+    }
+
+    #[test]
+    fn jittered_samples_scatter_around_mean() {
+        let (n, server, c1, _) = lan();
+        let mean = n.one_way_delay_us(server, c1, 102).unwrap();
+        let mut rng = SplitMix64::new(5);
+        let mut acc = 0.0;
+        let k = 500;
+        for _ in 0..k {
+            acc += n.sample_one_way(server, c1, 102, &mut rng).unwrap() as f64 / 1e3;
+        }
+        let sample_mean = acc / k as f64;
+        assert!((sample_mean - mean).abs() < 2.0, "{sample_mean} vs {mean}");
+    }
+
+    #[test]
+    fn slower_links_dominate_serialization() {
+        let mut n = Network::new();
+        let a = n.add_host("a", 0.0);
+        let b = n.add_host("b", 0.0);
+        n.link(a, b, LinkProfile::fast_ethernet());
+        let m = n.delay_model(a, b, 1500).unwrap();
+        assert!((m.serialization_us - 120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate device")]
+    fn duplicate_names_panic() {
+        let mut n = Network::new();
+        n.add_host("x", 1.0);
+        n.add_host("x", 1.0);
+    }
+}

@@ -1,0 +1,77 @@
+//! Ideal speed-up reference curves (the paper's "continuous line
+//! represents the ideal speed-up t(n) = t1/n", citing Amdahl).
+
+/// Points of the ideal curve t(n) = t1/n for n = 1..=max_n.
+pub fn ideal_curve(t1_secs: f64, max_n: u32) -> Vec<(u32, f64)> {
+    (1..=max_n).map(|n| (n, t1_secs / n as f64)).collect()
+}
+
+/// Amdahl's law proper: speedup with serial fraction `s` on n cores.
+pub fn amdahl_speedup(serial_fraction: f64, n: u32) -> f64 {
+    assert!((0.0..=1.0).contains(&serial_fraction));
+    1.0 / (serial_fraction + (1.0 - serial_fraction) / n as f64)
+}
+
+/// Fit t1 from measured (n, t) points assuming t = t1/n (least squares on
+/// t*n), and report mean relative deviation from the fitted ideal — the
+/// quantity Fig. 3's discussion is about (Turbo pushes it positive).
+#[derive(Debug, Clone, Copy)]
+pub struct IdealFit {
+    pub t1: f64,
+    /// Mean of (t_measured - t_ideal)/t_ideal over the points.
+    pub mean_rel_deviation: f64,
+}
+
+pub fn fit_ideal(points: &[(u32, f64)]) -> IdealFit {
+    assert!(!points.is_empty());
+    let t1 = points.iter().map(|&(n, t)| t * n as f64).sum::<f64>() / points.len() as f64;
+    let mean_rel_deviation = points
+        .iter()
+        .map(|&(n, t)| (t - t1 / n as f64) / (t1 / n as f64))
+        .sum::<f64>()
+        / points.len() as f64;
+    IdealFit { t1, mean_rel_deviation }
+}
+
+/// Deviation of measured points against an *externally chosen* t1 (the
+/// paper uses the measured single-core time).
+pub fn deviation_from_t1(t1: f64, points: &[(u32, f64)]) -> Vec<(u32, f64)> {
+    points
+        .iter()
+        .map(|&(n, t)| (n, (t - t1 / n as f64) / (t1 / n as f64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_curve_shape() {
+        let c = ideal_curve(100.0, 4);
+        assert_eq!(c, vec![(1, 100.0), (2, 50.0), (3, 100.0 / 3.0), (4, 25.0)]);
+    }
+
+    #[test]
+    fn amdahl_limits() {
+        assert!((amdahl_speedup(0.0, 16) - 16.0).abs() < 1e-12);
+        assert!(amdahl_speedup(0.5, 1_000) < 2.0001);
+    }
+
+    #[test]
+    fn fit_recovers_exact_ideal() {
+        let pts: Vec<(u32, f64)> = (1..=10).map(|n| (n, 500.0 / n as f64)).collect();
+        let fit = fit_ideal(&pts);
+        assert!((fit.t1 - 500.0).abs() < 1e-9);
+        assert!(fit.mean_rel_deviation.abs() < 1e-12);
+    }
+
+    #[test]
+    fn turbo_like_points_deviate_positively() {
+        // Single core fast (turbo), full load slower than ideal.
+        let pts = vec![(1u32, 100.0), (8u32, 16.0)]; // ideal would be 12.5
+        let dev = deviation_from_t1(100.0, &pts);
+        assert!(dev[0].1.abs() < 1e-12);
+        assert!(dev[1].1 > 0.2);
+    }
+}

@@ -1,0 +1,77 @@
+//! Calibration: tie the simulation's time model to measured PJRT
+//! throughput on this host.
+//!
+//! The paper's Fig. 3 ran class D on real hardware; this container has one
+//! CPU, so the end-to-end example runs real EP at class S/W scale through
+//! PJRT and the models extrapolate (DESIGN.md §6).  A [`Calibration`]
+//! captures the measured host rate and converts (pairs → seconds) for
+//! "real-compute" experiment modes.
+
+/// Measured host EP throughput.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Measured Mpairs/s of the PJRT EP path on this host (single core).
+    pub host_mpairs: f64,
+}
+
+impl Calibration {
+    pub fn new(host_mpairs: f64) -> Self {
+        assert!(host_mpairs > 0.0);
+        Self { host_mpairs }
+    }
+
+    /// A conservative default when no measurement is available (tests,
+    /// docs builds).  Order of magnitude of interpret-lowered EP on CPU.
+    pub fn fallback() -> Self {
+        Self { host_mpairs: 2.0 }
+    }
+
+    /// Seconds of real compute for `pairs` pairs on this host.
+    pub fn secs_for(&self, pairs: u64) -> f64 {
+        pairs as f64 / (self.host_mpairs * 1e6)
+    }
+
+    /// Scale factor mapping this host's rate to a modeled node core rate:
+    /// used when replaying real measurements inside the simulation so the
+    /// sim's relative speeds stay faithful to the Table-1 hardware.
+    pub fn scale_to(&self, node_rate_mpairs: f64) -> f64 {
+        node_rate_mpairs / self.host_mpairs
+    }
+
+    /// Pick a class-S-scale pair count that runs in roughly `budget_secs`
+    /// on this host (for the end-to-end example's real-compute leg).
+    pub fn pairs_for_budget(&self, budget_secs: f64) -> u64 {
+        ((self.host_mpairs * 1e6 * budget_secs) as u64).max(1024)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_scale_linearly() {
+        let c = Calibration::new(10.0);
+        assert!((c.secs_for(10_000_000) - 1.0).abs() < 1e-9);
+        assert!((c.secs_for(20_000_000) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_factors() {
+        let c = Calibration::new(5.0);
+        assert!((c.scale_to(15.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budget_sizing() {
+        let c = Calibration::new(2.0);
+        assert_eq!(c.pairs_for_budget(1.0), 2_000_000);
+        assert_eq!(c.pairs_for_budget(0.0), 1024); // floor
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rate_rejected() {
+        Calibration::new(0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Performance models: how long work takes where (Fig. 3's engine).
+//!
+//! * [`speedmodel`] — per-client EP throughput under the Turbo model +
+//!   hypervisor efficiency; random process placement; elapsed-time
+//!   prediction for a placement;
+//! * [`amdahl`] — ideal speed-up curves (`t(n) = t1/n`, the paper's
+//!   "continuous line") and deviation metrics;
+//! * [`calibrate`] — ties the model to *measured* PJRT throughput on this
+//!   host so the end-to-end example runs real compute.
+
+pub mod amdahl;
+pub mod calibrate;
+pub mod speedmodel;
+
+pub use amdahl::{ideal_curve, IdealFit};
+pub use calibrate::Calibration;
+pub use speedmodel::{ComparisonServer, GridlanPool, Placement};

@@ -1,0 +1,167 @@
+//! Resource requests and allocations: matching `nodes=X:ppn=Y` against the
+//! node registry.
+
+use std::collections::BTreeMap;
+
+/// What a job asks for (`#PBS -l nodes=X:ppn=Y`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceRequest {
+    pub nodes: u32,
+    pub ppn: u32,
+}
+
+impl Default for ResourceRequest {
+    fn default() -> Self {
+        Self { nodes: 1, ppn: 1 }
+    }
+}
+
+impl ResourceRequest {
+    pub fn total_cores(&self) -> u32 {
+        self.nodes * self.ppn
+    }
+}
+
+/// Cores granted per node (node name → core count).  BTreeMap for
+/// deterministic iteration.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Allocation {
+    pub cores: BTreeMap<String, u32>,
+}
+
+impl Allocation {
+    pub fn total_cores(&self) -> u32 {
+        self.cores.values().sum()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn nodes(&self) -> impl Iterator<Item = &String> {
+        self.cores.keys()
+    }
+}
+
+/// A node's free capacity as the allocator sees it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FreeNode {
+    pub name: String,
+    pub free_cores: u32,
+}
+
+/// First-fit decreasing match of a request against free nodes.  Torque
+/// semantics: each requested "node" needs `ppn` cores on a single node;
+/// multiple requested nodes may land on the same physical node if it has
+/// capacity (like Torque with `np` overcommit disabled, chunks packed).
+/// Returns None if unsatisfiable.
+pub fn match_request(request: &ResourceRequest, free: &[FreeNode]) -> Option<Allocation> {
+    let mut nodes: Vec<FreeNode> = free.iter().filter(|n| n.free_cores >= request.ppn).cloned().collect();
+    // Big nodes first: minimizes fragmentation; name tiebreak = determinism.
+    nodes.sort_by(|a, b| b.free_cores.cmp(&a.free_cores).then(a.name.cmp(&b.name)));
+    let mut alloc = Allocation::default();
+    let mut remaining = request.nodes;
+    for node in &mut nodes {
+        while remaining > 0 && node.free_cores >= request.ppn {
+            *alloc.cores.entry(node.name.clone()).or_insert(0) += request.ppn;
+            node.free_cores -= request.ppn;
+            remaining -= 1;
+        }
+        if remaining == 0 {
+            break;
+        }
+    }
+    if remaining == 0 {
+        Some(alloc)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, expect};
+
+    fn free(spec: &[(&str, u32)]) -> Vec<FreeNode> {
+        spec.iter()
+            .map(|&(n, c)| FreeNode { name: n.to_string(), free_cores: c })
+            .collect()
+    }
+
+    #[test]
+    fn single_node_fit() {
+        let a = match_request(
+            &ResourceRequest { nodes: 1, ppn: 4 },
+            &free(&[("n01", 12), ("n02", 6)]),
+        )
+        .unwrap();
+        assert_eq!(a.total_cores(), 4);
+        assert_eq!(a.node_count(), 1);
+        assert_eq!(a.cores["n01"], 4); // biggest first
+    }
+
+    #[test]
+    fn multi_chunk_spreads_when_needed() {
+        let a = match_request(
+            &ResourceRequest { nodes: 3, ppn: 4 },
+            &free(&[("n01", 8), ("n02", 4), ("n03", 4)]),
+        )
+        .unwrap();
+        assert_eq!(a.total_cores(), 12);
+        assert_eq!(a.cores["n01"], 8); // two chunks packed on n01
+        assert_eq!(a.node_count(), 2);
+    }
+
+    #[test]
+    fn unsatisfiable_returns_none() {
+        assert!(match_request(
+            &ResourceRequest { nodes: 2, ppn: 8 },
+            &free(&[("n01", 8), ("n02", 6)]),
+        )
+        .is_none());
+        // Total capacity enough but ppn chunk doesn't fit any single node.
+        assert!(match_request(
+            &ResourceRequest { nodes: 1, ppn: 10 },
+            &free(&[("a", 6), ("b", 6)]),
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn deterministic_tiebreak() {
+        let a1 = match_request(&ResourceRequest { nodes: 1, ppn: 2 }, &free(&[("b", 4), ("a", 4)]));
+        let a2 = match_request(&ResourceRequest { nodes: 1, ppn: 2 }, &free(&[("a", 4), ("b", 4)]));
+        assert_eq!(a1, a2);
+        assert_eq!(a1.unwrap().cores.keys().next().unwrap(), "a");
+    }
+
+    #[test]
+    fn prop_allocation_never_exceeds_free() {
+        prop::check(300, |g| {
+            let n_nodes = g.usize_in(1..6);
+            let free_nodes: Vec<FreeNode> = (0..n_nodes)
+                .map(|i| FreeNode { name: format!("n{i:02}"), free_cores: g.u64_in(0..16) as u32 })
+                .collect();
+            let req = ResourceRequest {
+                nodes: g.u64_in(1..5) as u32,
+                ppn: g.u64_in(1..8) as u32,
+            };
+            match match_request(&req, &free_nodes) {
+                None => prop::Outcome::Pass,
+                Some(a) => {
+                    // granted == requested, and per-node grants fit.
+                    let exact = a.total_cores() == req.total_cores();
+                    let fits = a.cores.iter().all(|(name, &c)| {
+                        free_nodes.iter().find(|f| &f.name == name).map(|f| c <= f.free_cores).unwrap_or(false)
+                    });
+                    let chunks = a.cores.values().all(|&c| c % req.ppn == 0);
+                    expect(
+                        exact && fits && chunks,
+                        &format!("req={req:?} free={free_nodes:?} alloc={a:?}"),
+                    )
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,142 @@
+//! Job records and lifecycle.
+
+use super::alloc::{Allocation, ResourceRequest};
+use crate::sim::clock::SimTime;
+
+/// Monotonic job identifier, rendered Torque-style ("17.gridlan").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}.gridlan", self.0)
+    }
+}
+
+/// Torque single-letter job states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobState {
+    /// Q — waiting for resources.
+    Queued,
+    /// R — running on an allocation.
+    Running,
+    /// E — exiting (epilogue).
+    Exiting,
+    /// C — completed.
+    Completed,
+    /// H — held (operator or dependency).
+    Held,
+}
+
+impl JobState {
+    pub fn letter(self) -> char {
+        match self {
+            JobState::Queued => 'Q',
+            JobState::Running => 'R',
+            JobState::Exiting => 'E',
+            JobState::Completed => 'C',
+            JobState::Held => 'H',
+        }
+    }
+}
+
+/// One job as pbs_server tracks it.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub name: String,
+    pub owner: String,
+    pub queue: String,
+    pub request: ResourceRequest,
+    pub walltime: Option<SimTime>,
+    pub state: JobState,
+    pub submitted_at: SimTime,
+    pub started_at: Option<SimTime>,
+    pub completed_at: Option<SimTime>,
+    /// Where it runs (set on start).
+    pub allocation: Option<Allocation>,
+    /// Exit code (set on completion; None = killed/requeued).
+    pub exit_code: Option<i32>,
+    /// How many times this job was requeued after node failures.
+    pub requeues: u32,
+    /// Opaque payload understood by the workload layer (e.g. EP class +
+    /// pair range).
+    pub payload: String,
+}
+
+impl Job {
+    pub fn turnaround(&self) -> Option<SimTime> {
+        Some(self.completed_at? - self.submitted_at)
+    }
+
+    pub fn wait_time(&self) -> Option<SimTime> {
+        Some(self.started_at? - self.submitted_at)
+    }
+
+    pub fn run_time(&self) -> Option<SimTime> {
+        Some(self.completed_at? - self.started_at?)
+    }
+
+    /// Did the job finish successfully?
+    pub fn succeeded(&self) -> bool {
+        self.state == JobState::Completed && self.exit_code == Some(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job {
+            id: JobId(17),
+            name: "ep".into(),
+            owner: "attila".into(),
+            queue: "gridlan".into(),
+            request: ResourceRequest { nodes: 1, ppn: 4 },
+            walltime: None,
+            state: JobState::Queued,
+            submitted_at: 100,
+            started_at: None,
+            completed_at: None,
+            allocation: None,
+            exit_code: None,
+            requeues: 0,
+            payload: String::new(),
+        }
+    }
+
+    #[test]
+    fn display_is_torque_style() {
+        assert_eq!(JobId(17).to_string(), "17.gridlan");
+    }
+
+    #[test]
+    fn state_letters() {
+        assert_eq!(JobState::Queued.letter(), 'Q');
+        assert_eq!(JobState::Running.letter(), 'R');
+        assert_eq!(JobState::Completed.letter(), 'C');
+    }
+
+    #[test]
+    fn timing_accessors() {
+        let mut j = job();
+        assert!(j.turnaround().is_none());
+        j.started_at = Some(600);
+        j.completed_at = Some(1600);
+        j.state = JobState::Completed;
+        j.exit_code = Some(0);
+        assert_eq!(j.wait_time(), Some(500));
+        assert_eq!(j.run_time(), Some(1000));
+        assert_eq!(j.turnaround(), Some(1500));
+        assert!(j.succeeded());
+    }
+
+    #[test]
+    fn killed_job_did_not_succeed() {
+        let mut j = job();
+        j.state = JobState::Completed;
+        j.exit_code = None;
+        assert!(!j.succeeded());
+    }
+}

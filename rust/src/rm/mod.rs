@@ -1,0 +1,33 @@
+//! The Torque-like resource manager ("torq") — paper §2.4.
+//!
+//! The Gridlan's user-facing contract is Torque's: `qsub` a `#PBS` script
+//! to a chosen queue, `qstat` it, `qdel` it.  The Gridlan pool appears as
+//! one more queue next to any pre-existing cluster queues, so "a user who
+//! wants to submit calculations may choose in the same server the
+//! resource manager's queue corresponding to the grid infrastructure or
+//! the cluster nodes".
+//!
+//! * [`script`] — `#PBS` directive parser (API-compatible subset);
+//! * [`job`] — job records and lifecycle states (Q/R/E/C/H);
+//! * [`queue`] — queue definitions and per-queue limits;
+//! * [`alloc`] — `nodes=X:ppn=Y` matching against the node registry;
+//! * [`sched`] — FIFO (Torque default) and conservative backfill (the A1
+//!   ablation);
+//! * [`server`] — the pbs_server: node registry + qsub/qstat/qdel + the
+//!   scheduling cycle;
+//! * [`mom`] — per-node machine-oriented-miniserver: task launch/track.
+
+pub mod alloc;
+pub mod job;
+pub mod mom;
+pub mod queue;
+pub mod sched;
+pub mod script;
+pub mod server;
+
+pub use alloc::{Allocation, ResourceRequest};
+pub use job::{Job, JobId, JobState};
+pub use queue::Queue;
+pub use sched::{BackfillScheduler, FifoScheduler, Scheduler};
+pub use script::PbsScript;
+pub use server::{NodeInfo, NodePower, PbsServer};

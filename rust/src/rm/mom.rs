@@ -1,0 +1,121 @@
+//! MOM (machine-oriented miniserver): the per-node execution agent.
+//!
+//! In Torque, pbs_mom runs on every node, launches the job's processes,
+//! and reports exit status.  Here it adds the job prologue/epilogue costs
+//! to run times and tracks per-node task occupancy — the piece of state
+//! the fig3 harness uses to know how many cores are active on a client
+//! (which feeds the Turbo model).
+
+use super::job::JobId;
+use crate::sim::clock::{SimTime, DUR_MS};
+use std::collections::BTreeMap;
+
+/// Prologue: stage-in, cgroup setup. Epilogue: cleanup, stage-out.
+pub const PROLOGUE: SimTime = 350 * DUR_MS;
+pub const EPILOGUE: SimTime = 200 * DUR_MS;
+
+/// One task (one job's slice on this node).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Task {
+    pub job: JobId,
+    pub cores: u32,
+    pub started_at: SimTime,
+}
+
+/// The per-node agent.
+#[derive(Debug, Clone)]
+pub struct Mom {
+    pub node: String,
+    pub cores: u32,
+    tasks: BTreeMap<JobId, Task>,
+}
+
+impl Mom {
+    pub fn new(node: &str, cores: u32) -> Self {
+        Self { node: node.to_string(), cores, tasks: BTreeMap::new() }
+    }
+
+    /// Launch a task. Panics on oversubscription (scheduler invariant).
+    pub fn launch(&mut self, job: JobId, cores: u32, now: SimTime) {
+        assert!(
+            self.busy_cores() + cores <= self.cores,
+            "{}: oversubscribed ({} + {cores} > {})",
+            self.node,
+            self.busy_cores(),
+            self.cores
+        );
+        assert!(!self.tasks.contains_key(&job), "{}: job {job} already here", self.node);
+        self.tasks.insert(job, Task { job, cores, started_at: now });
+    }
+
+    /// Task finished or was killed.
+    pub fn reap(&mut self, job: JobId) -> Option<Task> {
+        self.tasks.remove(&job)
+    }
+
+    /// Kill everything (node crash/power-off).
+    pub fn kill_all(&mut self) -> Vec<Task> {
+        let tasks: Vec<Task> = self.tasks.values().cloned().collect();
+        self.tasks.clear();
+        tasks
+    }
+
+    pub fn busy_cores(&self) -> u32 {
+        self.tasks.values().map(|t| t.cores).sum()
+    }
+
+    /// Active (busy) core count — the Turbo model input.
+    pub fn active(&self) -> u32 {
+        self.busy_cores()
+    }
+
+    pub fn task_count(&self) -> usize {
+        self.tasks.len()
+    }
+
+    /// Wall time a payload of `compute` seconds occupies the node,
+    /// including prologue/epilogue.
+    pub fn wrap_runtime(compute: SimTime) -> SimTime {
+        PROLOGUE + compute + EPILOGUE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_and_reap() {
+        let mut m = Mom::new("n01", 12);
+        m.launch(JobId(1), 4, 0);
+        m.launch(JobId(2), 8, 5);
+        assert_eq!(m.busy_cores(), 12);
+        let t = m.reap(JobId(1)).unwrap();
+        assert_eq!(t.cores, 4);
+        assert_eq!(m.busy_cores(), 8);
+        assert!(m.reap(JobId(1)).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "oversubscribed")]
+    fn oversubscription_is_a_bug() {
+        let mut m = Mom::new("n03", 4);
+        m.launch(JobId(1), 3, 0);
+        m.launch(JobId(2), 2, 0);
+    }
+
+    #[test]
+    fn kill_all_on_crash() {
+        let mut m = Mom::new("n02", 6);
+        m.launch(JobId(1), 2, 0);
+        m.launch(JobId(2), 2, 0);
+        let killed = m.kill_all();
+        assert_eq!(killed.len(), 2);
+        assert_eq!(m.busy_cores(), 0);
+    }
+
+    #[test]
+    fn runtime_wrapping() {
+        assert_eq!(Mom::wrap_runtime(1_000 * DUR_MS), PROLOGUE + 1_000 * DUR_MS + EPILOGUE);
+    }
+}

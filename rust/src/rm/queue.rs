@@ -1,0 +1,71 @@
+//! Queue definitions (paper §2.4): "A special queue for the Gridlan nodes
+//! helps users choose the appropriate resources for their calculations" —
+//! a `gridlan` queue next to pre-existing `cluster` queues on one server.
+
+/// Which node pool a queue schedules onto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodePool {
+    /// Gridlan VMs (heterogeneous, fault-prone, behind the VPN).
+    Gridlan,
+    /// A conventional cluster partition attached to the same server.
+    Cluster,
+}
+
+/// A queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Queue {
+    pub name: String,
+    pub pool: NodePool,
+    /// Max jobs running simultaneously from this queue (0 = unlimited).
+    pub max_running: u32,
+    /// Larger = drained first when multiple queues have work.
+    pub priority: i32,
+    pub enabled: bool,
+}
+
+impl Queue {
+    pub fn gridlan_default() -> Self {
+        Self { name: "gridlan".into(), pool: NodePool::Gridlan, max_running: 0, priority: 10, enabled: true }
+    }
+
+    pub fn cluster_default() -> Self {
+        Self { name: "batch".into(), pool: NodePool::Cluster, max_running: 0, priority: 20, enabled: true }
+    }
+
+    pub fn can_start_more(&self, running_from_queue: u32) -> bool {
+        self.enabled && (self.max_running == 0 || running_from_queue < self.max_running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_target_their_pools() {
+        assert_eq!(Queue::gridlan_default().pool, NodePool::Gridlan);
+        assert_eq!(Queue::cluster_default().pool, NodePool::Cluster);
+    }
+
+    #[test]
+    fn max_running_limit() {
+        let mut q = Queue::gridlan_default();
+        q.max_running = 2;
+        assert!(q.can_start_more(0));
+        assert!(q.can_start_more(1));
+        assert!(!q.can_start_more(2));
+    }
+
+    #[test]
+    fn disabled_queue_starts_nothing() {
+        let mut q = Queue::gridlan_default();
+        q.enabled = false;
+        assert!(!q.can_start_more(0));
+    }
+
+    #[test]
+    fn unlimited_when_zero() {
+        let q = Queue::gridlan_default();
+        assert!(q.can_start_more(10_000));
+    }
+}

@@ -1,0 +1,295 @@
+//! Scheduling policies.
+//!
+//! Torque 2.4's default scheduler is FIFO; we implement it plus
+//! conservative EASY backfill as the A1 ablation (DESIGN.md): backfill
+//! lets short jobs jump ahead *only* if they cannot delay the head job's
+//! earliest possible start.
+
+use super::alloc::{match_request, Allocation, FreeNode, ResourceRequest};
+use super::job::JobId;
+use crate::sim::clock::SimTime;
+
+/// A queued job as the scheduler sees it.
+#[derive(Debug, Clone)]
+pub struct PendingJob {
+    pub id: JobId,
+    pub request: ResourceRequest,
+    /// Walltime estimate (requested walltime, or a default).
+    pub walltime: SimTime,
+    pub queue_priority: i32,
+}
+
+/// A running job as the scheduler sees it (for backfill reservations).
+#[derive(Debug, Clone)]
+pub struct RunningJob {
+    pub id: JobId,
+    pub allocation: Allocation,
+    pub expected_end: SimTime,
+}
+
+/// A scheduling decision.
+pub type Decision = Vec<(JobId, Allocation)>;
+
+/// Policy interface.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Choose jobs to start now.  `pending` is in queue order (priority
+    /// then FIFO), `free` is current per-node free capacity.
+    fn select(
+        &self,
+        pending: &[PendingJob],
+        free: &[FreeNode],
+        running: &[RunningJob],
+        now: SimTime,
+    ) -> Decision;
+}
+
+/// Strict FIFO: start jobs in order; stop at the first that doesn't fit
+/// (no overtaking — the head job's resources are implicitly reserved).
+pub struct FifoScheduler;
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn select(
+        &self,
+        pending: &[PendingJob],
+        free: &[FreeNode],
+        _running: &[RunningJob],
+        _now: SimTime,
+    ) -> Decision {
+        let mut free = free.to_vec();
+        let mut out = Decision::new();
+        for job in pending {
+            match match_request(&job.request, &free) {
+                Some(alloc) => {
+                    apply(&mut free, &alloc);
+                    out.push((job.id, alloc));
+                }
+                None => break, // strict: nobody overtakes the head
+            }
+        }
+        out
+    }
+}
+
+/// EASY backfill: like FIFO, but when the head job blocks, compute its
+/// shadow start time from running-job completions and let later jobs run
+/// now if (a) they fit in current free capacity and (b) they will finish
+/// before the shadow time OR don't touch the cores the head job needs.
+/// Conservative approximation: condition (b) is `now + walltime <= shadow`.
+pub struct BackfillScheduler;
+
+impl Scheduler for BackfillScheduler {
+    fn name(&self) -> &'static str {
+        "backfill"
+    }
+
+    fn select(
+        &self,
+        pending: &[PendingJob],
+        free: &[FreeNode],
+        running: &[RunningJob],
+        now: SimTime,
+    ) -> Decision {
+        let mut free = free.to_vec();
+        let mut out = Decision::new();
+        let mut idx = 0;
+        // Greedy FIFO prefix.
+        while idx < pending.len() {
+            let job = &pending[idx];
+            match match_request(&job.request, &free) {
+                Some(alloc) => {
+                    apply(&mut free, &alloc);
+                    out.push((job.id, alloc));
+                    idx += 1;
+                }
+                None => break,
+            }
+        }
+        if idx >= pending.len() {
+            return out;
+        }
+        // Head job blocked: find its shadow time by replaying completions.
+        let head = &pending[idx];
+        let shadow = shadow_time(&head.request, &free, running);
+        // Backfill the rest.
+        for job in &pending[idx + 1..] {
+            if shadow.map(|s| now.saturating_add(job.walltime) <= s).unwrap_or(false) {
+                if let Some(alloc) = match_request(&job.request, &free) {
+                    apply(&mut free, &alloc);
+                    out.push((job.id, alloc));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Earliest time the blocked head job could start, assuming running jobs
+/// end at their expected_end and release their cores.
+fn shadow_time(
+    request: &ResourceRequest,
+    free: &[FreeNode],
+    running: &[RunningJob],
+) -> Option<SimTime> {
+    let mut free = free.to_vec();
+    let mut ends: Vec<&RunningJob> = running.iter().collect();
+    ends.sort_by_key(|r| r.expected_end);
+    for r in ends {
+        // Release r's cores.
+        for (node, cores) in &r.allocation.cores {
+            if let Some(f) = free.iter_mut().find(|f| &f.name == node) {
+                f.free_cores += cores;
+            } else {
+                free.push(FreeNode { name: node.clone(), free_cores: *cores });
+            }
+        }
+        if match_request(request, &free).is_some() {
+            return Some(r.expected_end);
+        }
+    }
+    None
+}
+
+fn apply(free: &mut [FreeNode], alloc: &Allocation) {
+    for (node, cores) in &alloc.cores {
+        let f = free.iter_mut().find(|f| &f.name == node).expect("alloc on unknown node");
+        assert!(f.free_cores >= *cores, "over-allocation on {node}");
+        f.free_cores -= cores;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::DUR_SEC;
+    use crate::util::prop::{self, expect};
+
+    fn pj(id: u64, nodes: u32, ppn: u32, wall_secs: u64) -> PendingJob {
+        PendingJob {
+            id: JobId(id),
+            request: ResourceRequest { nodes, ppn },
+            walltime: wall_secs * DUR_SEC,
+            queue_priority: 0,
+        }
+    }
+
+    fn free(spec: &[(&str, u32)]) -> Vec<FreeNode> {
+        spec.iter().map(|&(n, c)| FreeNode { name: n.into(), free_cores: c }).collect()
+    }
+
+    #[test]
+    fn fifo_starts_in_order_until_blocked() {
+        let pending = vec![pj(1, 1, 4, 100), pj(2, 1, 8, 100), pj(3, 1, 1, 100)];
+        let d = FifoScheduler.select(&pending, &free(&[("n01", 8)]), &[], 0);
+        // Job 1 takes 4 cores; job 2 needs 8 and blocks; job 3 must NOT
+        // overtake under strict FIFO.
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, JobId(1));
+    }
+
+    #[test]
+    fn backfill_lets_short_job_through() {
+        let running = vec![RunningJob {
+            id: JobId(99),
+            allocation: Allocation { cores: [("n01".to_string(), 4u32)].into_iter().collect() },
+            expected_end: 1000 * DUR_SEC,
+        }];
+        let pending = vec![pj(2, 1, 8, 100), pj(3, 1, 2, 100)];
+        // 4 cores free now; head needs 8 (must wait for job 99).  Job 3
+        // (2 cores, 100s) finishes long before t=1000s: backfill it.
+        let d = BackfillScheduler.select(&pending, &free(&[("n01", 4)]), &running, 0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, JobId(3));
+    }
+
+    #[test]
+    fn backfill_never_delays_head() {
+        let running = vec![RunningJob {
+            id: JobId(99),
+            allocation: Allocation { cores: [("n01".to_string(), 4u32)].into_iter().collect() },
+            expected_end: 50 * DUR_SEC,
+        }];
+        // Job 3 would run 100s but head could start at t=50s: no backfill.
+        let pending = vec![pj(2, 1, 8, 100), pj(3, 1, 2, 100)];
+        let d = BackfillScheduler.select(&pending, &free(&[("n01", 4)]), &running, 0);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn backfill_equals_fifo_when_unblocked() {
+        let pending = vec![pj(1, 1, 2, 10), pj(2, 1, 2, 10)];
+        let f = free(&[("n01", 8)]);
+        let d1 = FifoScheduler.select(&pending, &f, &[], 0);
+        let d2 = BackfillScheduler.select(&pending, &f, &[], 0);
+        assert_eq!(d1.len(), 2);
+        assert_eq!(d1.iter().map(|x| x.0).collect::<Vec<_>>(), d2.iter().map(|x| x.0).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shadow_time_accumulates_releases() {
+        // Head needs 8; 2 free; two running jobs release 3 each at t=10,20.
+        let running = vec![
+            RunningJob {
+                id: JobId(1),
+                allocation: Allocation { cores: [("n01".to_string(), 3u32)].into_iter().collect() },
+                expected_end: 10,
+            },
+            RunningJob {
+                id: JobId(2),
+                allocation: Allocation { cores: [("n01".to_string(), 3u32)].into_iter().collect() },
+                expected_end: 20,
+            },
+        ];
+        let s = shadow_time(
+            &ResourceRequest { nodes: 1, ppn: 8 },
+            &free(&[("n01", 2)]),
+            &running,
+        );
+        assert_eq!(s, Some(20));
+    }
+
+    #[test]
+    fn prop_no_policy_overallocates() {
+        prop::check(200, |g| {
+            let n_nodes = g.usize_in(1..5);
+            let capacities: Vec<u32> = (0..n_nodes).map(|_| g.u64_in(1..17) as u32).collect();
+            let f: Vec<FreeNode> = capacities
+                .iter()
+                .enumerate()
+                .map(|(i, &c)| FreeNode { name: format!("n{i:02}"), free_cores: c })
+                .collect();
+            let pending: Vec<PendingJob> = (0..g.usize_in(1..8))
+                .map(|i| pj(i as u64, g.u64_in(1..4) as u32, g.u64_in(1..9) as u32, g.u64_in(1..1000)))
+                .collect();
+            for sched in [&FifoScheduler as &dyn Scheduler, &BackfillScheduler] {
+                let d = sched.select(&pending, &f, &[], 0);
+                // Sum of grants per node <= capacity.
+                let mut used: std::collections::HashMap<&str, u32> = Default::default();
+                for (_, a) in &d {
+                    for (n, c) in &a.cores {
+                        *used.entry(n.as_str()).or_insert(0) += c;
+                    }
+                }
+                for (i, &cap) in capacities.iter().enumerate() {
+                    let name = format!("n{i:02}");
+                    if used.get(name.as_str()).copied().unwrap_or(0) > cap {
+                        return expect(false, &format!("{} overallocated", sched.name()));
+                    }
+                }
+                // No duplicate job starts.
+                let mut ids: Vec<u64> = d.iter().map(|(j, _)| j.0).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                if ids.len() != d.len() {
+                    return expect(false, "duplicate starts");
+                }
+            }
+            prop::Outcome::Pass
+        });
+    }
+}

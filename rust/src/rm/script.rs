@@ -1,0 +1,225 @@
+//! `#PBS` job script parsing — the subset of Torque directives the paper's
+//! workflow uses.
+//!
+//! ```text
+//! #!/bin/bash
+//! #PBS -N ep-class-d
+//! #PBS -q gridlan
+//! #PBS -l nodes=2:ppn=4
+//! #PBS -l walltime=02:00:00
+//! cd $PBS_O_WORKDIR
+//! mpirun ./ep.D.x
+//! ```
+
+use super::alloc::ResourceRequest;
+use crate::sim::clock::{SimTime, DUR_SEC};
+
+/// A parsed job script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PbsScript {
+    pub name: Option<String>,
+    pub queue: Option<String>,
+    pub request: ResourceRequest,
+    pub walltime: Option<SimTime>,
+    /// Non-directive command lines (the payload).
+    pub commands: Vec<String>,
+}
+
+/// Parse errors carry the offending line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScriptError {
+    pub line_no: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ScriptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "script line {}: {}", self.line_no, self.msg)
+    }
+}
+
+impl std::error::Error for ScriptError {}
+
+impl PbsScript {
+    pub fn parse(text: &str) -> Result<Self, ScriptError> {
+        let mut out = PbsScript {
+            name: None,
+            queue: None,
+            request: ResourceRequest::default(),
+            walltime: None,
+            commands: Vec::new(),
+        };
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.trim();
+            if line.starts_with("#PBS") {
+                let rest = line["#PBS".len()..].trim();
+                Self::parse_directive(rest, line_no, &mut out)?;
+            } else if line.starts_with("#!") || line.starts_with('#') || line.is_empty() {
+                continue;
+            } else {
+                out.commands.push(line.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_directive(rest: &str, line_no: usize, out: &mut PbsScript) -> Result<(), ScriptError> {
+        let err = |msg: &str| ScriptError { line_no, msg: msg.to_string() };
+        let mut parts = rest.splitn(2, char::is_whitespace);
+        let flag = parts.next().ok_or_else(|| err("empty directive"))?;
+        let val = parts.next().map(str::trim).unwrap_or("");
+        match flag {
+            "-N" => {
+                if val.is_empty() {
+                    return Err(err("-N needs a name"));
+                }
+                out.name = Some(val.to_string());
+            }
+            "-q" => {
+                if val.is_empty() {
+                    return Err(err("-q needs a queue"));
+                }
+                out.queue = Some(val.to_string());
+            }
+            "-l" => Self::parse_resource(val, line_no, out)?,
+            _ => return Err(err(&format!("unsupported directive '{flag}'"))),
+        }
+        Ok(())
+    }
+
+    fn parse_resource(val: &str, line_no: usize, out: &mut PbsScript) -> Result<(), ScriptError> {
+        let err = |msg: String| ScriptError { line_no, msg };
+        for item in val.split(',') {
+            let item = item.trim();
+            if let Some(spec) = item.strip_prefix("nodes=") {
+                let mut nodes = 0u32;
+                let mut ppn = 1u32;
+                for (k, part) in spec.split(':').enumerate() {
+                    if k == 0 {
+                        nodes = part
+                            .parse()
+                            .map_err(|_| err(format!("bad node count '{part}'")))?;
+                    } else if let Some(p) = part.strip_prefix("ppn=") {
+                        ppn = p.parse().map_err(|_| err(format!("bad ppn '{p}'")))?;
+                    } else {
+                        return Err(err(format!("unsupported node property '{part}'")));
+                    }
+                }
+                if nodes == 0 {
+                    return Err(err("nodes must be >= 1".into()));
+                }
+                out.request = ResourceRequest { nodes, ppn };
+            } else if let Some(w) = item.strip_prefix("walltime=") {
+                out.walltime = Some(Self::parse_walltime(w).map_err(|m| err(m))?);
+            } else {
+                return Err(err(format!("unsupported resource '{item}'")));
+            }
+        }
+        Ok(())
+    }
+
+    fn parse_walltime(s: &str) -> Result<SimTime, String> {
+        let fields: Vec<&str> = s.split(':').collect();
+        let nums: Result<Vec<u64>, _> = fields.iter().map(|f| f.parse::<u64>()).collect();
+        let nums = nums.map_err(|_| format!("bad walltime '{s}'"))?;
+        let secs = match nums.as_slice() {
+            [h, m, sec] => h * 3600 + m * 60 + sec,
+            [m, sec] => m * 60 + sec,
+            [sec] => *sec,
+            _ => return Err(format!("bad walltime '{s}'")),
+        };
+        Ok(secs * DUR_SEC)
+    }
+
+    /// Render back to script text (used by the resilience script folder).
+    pub fn render(&self) -> String {
+        let mut s = String::from("#!/bin/bash\n");
+        if let Some(n) = &self.name {
+            s.push_str(&format!("#PBS -N {n}\n"));
+        }
+        if let Some(q) = &self.queue {
+            s.push_str(&format!("#PBS -q {q}\n"));
+        }
+        s.push_str(&format!(
+            "#PBS -l nodes={}:ppn={}\n",
+            self.request.nodes, self.request.ppn
+        ));
+        if let Some(w) = self.walltime {
+            let secs = w / DUR_SEC;
+            s.push_str(&format!(
+                "#PBS -l walltime={:02}:{:02}:{:02}\n",
+                secs / 3600,
+                (secs % 3600) / 60,
+                secs % 60
+            ));
+        }
+        for c in &self.commands {
+            s.push_str(c);
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SCRIPT: &str = "#!/bin/bash\n#PBS -N ep-test\n#PBS -q gridlan\n#PBS -l nodes=2:ppn=4\n#PBS -l walltime=02:30:00\ncd $PBS_O_WORKDIR\nmpirun ./ep.D.x\n";
+
+    #[test]
+    fn parses_paper_style_script() {
+        let s = PbsScript::parse(SCRIPT).unwrap();
+        assert_eq!(s.name.as_deref(), Some("ep-test"));
+        assert_eq!(s.queue.as_deref(), Some("gridlan"));
+        assert_eq!(s.request, ResourceRequest { nodes: 2, ppn: 4 });
+        assert_eq!(s.walltime, Some((2 * 3600 + 30 * 60) * DUR_SEC));
+        assert_eq!(s.commands, vec!["cd $PBS_O_WORKDIR", "mpirun ./ep.D.x"]);
+    }
+
+    #[test]
+    fn defaults_when_no_directives() {
+        let s = PbsScript::parse("echo hi\n").unwrap();
+        assert_eq!(s.request, ResourceRequest { nodes: 1, ppn: 1 });
+        assert!(s.queue.is_none());
+        assert_eq!(s.commands, vec!["echo hi"]);
+    }
+
+    #[test]
+    fn combined_l_line() {
+        let s = PbsScript::parse("#PBS -l nodes=3:ppn=2,walltime=00:10:00\n").unwrap();
+        assert_eq!(s.request, ResourceRequest { nodes: 3, ppn: 2 });
+        assert_eq!(s.walltime, Some(600 * DUR_SEC));
+    }
+
+    #[test]
+    fn walltime_forms() {
+        assert_eq!(PbsScript::parse_walltime("90").unwrap(), 90 * DUR_SEC);
+        assert_eq!(PbsScript::parse_walltime("5:00").unwrap(), 300 * DUR_SEC);
+        assert!(PbsScript::parse_walltime("x").is_err());
+        assert!(PbsScript::parse_walltime("1:2:3:4").is_err());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = PbsScript::parse("#PBS -Z foo\n").unwrap_err();
+        assert_eq!(e.line_no, 1);
+        let e = PbsScript::parse("echo a\n#PBS -l nodes=0\n").unwrap_err();
+        assert_eq!(e.line_no, 2);
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let s = PbsScript::parse(SCRIPT).unwrap();
+        let again = PbsScript::parse(&s.render()).unwrap();
+        assert_eq!(s, again);
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let s = PbsScript::parse("# just a comment\n#PBS -N x\n").unwrap();
+        assert_eq!(s.name.as_deref(), Some("x"));
+        assert!(s.commands.is_empty());
+    }
+}

@@ -1,0 +1,494 @@
+//! pbs_server: the resource manager's brain.
+//!
+//! Owns the node registry (gridlan VMs + any cluster partition), the
+//! queues, and the job table; exposes the Torque verbs (`qsub`, `qstat`,
+//! `qdel`, `pbsnodes`) and the scheduling cycle.  Time-driven behaviour
+//! (run durations, completions) is injected by the coordinator via
+//! [`PbsServer::start`] / [`PbsServer::complete`] so the server stays a
+//! pure state machine — easy to test exhaustively.
+
+use super::alloc::{Allocation, FreeNode};
+use super::job::{Job, JobId, JobState};
+use super::queue::{NodePool, Queue};
+use super::sched::{Decision, PendingJob, RunningJob, Scheduler};
+use super::script::PbsScript;
+use crate::sim::clock::{SimTime, DUR_SEC};
+use std::collections::BTreeMap;
+
+/// Node power/reachability as pbs_server sees it (fed by the monitor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodePower {
+    Online,
+    Offline,
+}
+
+/// A registered execution node.
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub name: String,
+    pub cores: u32,
+    pub pool: NodePool,
+    pub power: NodePower,
+    pub busy_cores: u32,
+}
+
+impl NodeInfo {
+    pub fn free_cores(&self) -> u32 {
+        if self.power == NodePower::Offline {
+            0
+        } else {
+            self.cores - self.busy_cores
+        }
+    }
+}
+
+/// Default walltime estimate when a script omits `-l walltime`.
+pub const DEFAULT_WALLTIME: SimTime = 3600 * DUR_SEC;
+
+/// The server.
+pub struct PbsServer {
+    nodes: BTreeMap<String, NodeInfo>,
+    queues: BTreeMap<String, Queue>,
+    jobs: BTreeMap<JobId, Job>,
+    /// Queued job ids in submission order.
+    pending: Vec<JobId>,
+    next_id: u64,
+    pub default_queue: String,
+}
+
+impl PbsServer {
+    pub fn new() -> Self {
+        let mut queues = BTreeMap::new();
+        let g = Queue::gridlan_default();
+        let c = Queue::cluster_default();
+        let default_queue = c.name.clone();
+        queues.insert(g.name.clone(), g);
+        queues.insert(c.name.clone(), c);
+        Self { nodes: BTreeMap::new(), queues, jobs: BTreeMap::new(), pending: Vec::new(), next_id: 1, default_queue }
+    }
+
+    // ---------------------------------------------------------- registry
+
+    pub fn register_node(&mut self, name: &str, cores: u32, pool: NodePool) {
+        self.nodes.insert(
+            name.to_string(),
+            NodeInfo { name: name.to_string(), cores, pool, power: NodePower::Offline, busy_cores: 0 },
+        );
+    }
+
+    pub fn set_node_power(&mut self, name: &str, power: NodePower) {
+        if let Some(n) = self.nodes.get_mut(name) {
+            n.power = power;
+        }
+    }
+
+    pub fn node(&self, name: &str) -> Option<&NodeInfo> {
+        self.nodes.get(name)
+    }
+
+    /// `pbsnodes`-style listing.
+    pub fn nodes(&self) -> impl Iterator<Item = &NodeInfo> {
+        self.nodes.values()
+    }
+
+    pub fn queue(&self, name: &str) -> Option<&Queue> {
+        self.queues.get(name)
+    }
+
+    pub fn add_queue(&mut self, q: Queue) {
+        self.queues.insert(q.name.clone(), q);
+    }
+
+    // -------------------------------------------------------------- verbs
+
+    /// Submit a job script. Returns the job id, or an error string in
+    /// Torque's terse style.
+    pub fn qsub(
+        &mut self,
+        script: &PbsScript,
+        owner: &str,
+        payload: &str,
+        now: SimTime,
+    ) -> Result<JobId, String> {
+        let queue_name = script.queue.clone().unwrap_or_else(|| self.default_queue.clone());
+        let queue = self
+            .queues
+            .get(&queue_name)
+            .ok_or_else(|| format!("qsub: unknown queue '{queue_name}'"))?;
+        if !queue.enabled {
+            return Err(format!("qsub: queue '{queue_name}' disabled"));
+        }
+        // Reject requests that can never fit the pool (Torque does this at
+        // submission when resources exceed any node).
+        let pool = queue.pool;
+        let max_node_cores = self
+            .nodes
+            .values()
+            .filter(|n| n.pool == pool)
+            .map(|n| n.cores)
+            .max()
+            .unwrap_or(0);
+        if script.request.ppn > max_node_cores {
+            return Err(format!(
+                "qsub: ppn={} exceeds any {queue_name} node ({max_node_cores} cores max)",
+                script.request.ppn
+            ));
+        }
+        let total_pool: u32 = self.nodes.values().filter(|n| n.pool == pool).map(|n| n.cores).sum();
+        if script.request.total_cores() > total_pool {
+            return Err(format!(
+                "qsub: request {}x{} exceeds pool capacity {total_pool}",
+                script.request.nodes, script.request.ppn
+            ));
+        }
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        let job = Job {
+            id,
+            name: script.name.clone().unwrap_or_else(|| format!("STDIN-{}", id.0)),
+            owner: owner.to_string(),
+            queue: queue_name,
+            request: script.request,
+            walltime: script.walltime,
+            state: JobState::Queued,
+            submitted_at: now,
+            started_at: None,
+            completed_at: None,
+            allocation: None,
+            exit_code: None,
+            requeues: 0,
+            payload: payload.to_string(),
+        };
+        self.jobs.insert(id, job);
+        self.pending.push(id);
+        Ok(id)
+    }
+
+    /// Delete/kill a job.
+    pub fn qdel(&mut self, id: JobId, now: SimTime) -> Result<(), String> {
+        let job = self.jobs.get_mut(&id).ok_or_else(|| format!("qdel: unknown job {id}"))?;
+        match job.state {
+            JobState::Queued | JobState::Held => {
+                job.state = JobState::Completed;
+                job.completed_at = Some(now);
+                job.exit_code = None;
+                self.pending.retain(|&p| p != id);
+                Ok(())
+            }
+            JobState::Running | JobState::Exiting => {
+                let alloc = job.allocation.clone().unwrap_or_default();
+                job.state = JobState::Completed;
+                job.completed_at = Some(now);
+                job.exit_code = None;
+                self.release(&alloc);
+                Ok(())
+            }
+            JobState::Completed => Err(format!("qdel: job {id} already completed")),
+        }
+    }
+
+    /// `qstat` rows: (id, name, owner, state, queue).
+    pub fn qstat(&self) -> Vec<(JobId, String, String, char, String)> {
+        self.jobs
+            .values()
+            .map(|j| (j.id, j.name.clone(), j.owner.clone(), j.state.letter(), j.queue.clone()))
+            .collect()
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
+    }
+
+    // ---------------------------------------------------------- scheduling
+
+    fn free_nodes(&self, pool: NodePool) -> Vec<FreeNode> {
+        self.nodes
+            .values()
+            .filter(|n| n.pool == pool && n.power == NodePower::Online)
+            .map(|n| FreeNode { name: n.name.clone(), free_cores: n.free_cores() })
+            .collect()
+    }
+
+    fn running_jobs(&self, pool: NodePool) -> Vec<RunningJob> {
+        self.jobs
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .filter(|j| self.queues.get(&j.queue).map(|q| q.pool == pool).unwrap_or(false))
+            .map(|j| RunningJob {
+                id: j.id,
+                allocation: j.allocation.clone().unwrap_or_default(),
+                expected_end: j.started_at.unwrap_or(0) + j.walltime.unwrap_or(DEFAULT_WALLTIME),
+            })
+            .collect()
+    }
+
+    /// One scheduling cycle for one pool. Returns what got started; the
+    /// caller decides each job's actual run duration and later calls
+    /// [`complete`].
+    pub fn schedule_cycle(
+        &mut self,
+        pool: NodePool,
+        scheduler: &dyn Scheduler,
+        now: SimTime,
+    ) -> Decision {
+        // Pending jobs of queues on this pool, priority then FIFO order.
+        let mut pending: Vec<PendingJob> = Vec::new();
+        let mut running_per_queue: BTreeMap<String, u32> = BTreeMap::new();
+        for j in self.jobs.values() {
+            if j.state == JobState::Running {
+                *running_per_queue.entry(j.queue.clone()).or_insert(0) += 1;
+            }
+        }
+        for &id in &self.pending {
+            let j = &self.jobs[&id];
+            let q = &self.queues[&j.queue];
+            if q.pool != pool {
+                continue;
+            }
+            if !q.can_start_more(running_per_queue.get(&j.queue).copied().unwrap_or(0)) {
+                continue;
+            }
+            pending.push(PendingJob {
+                id,
+                request: j.request,
+                walltime: j.walltime.unwrap_or(DEFAULT_WALLTIME),
+                queue_priority: q.priority,
+            });
+        }
+        pending.sort_by(|a, b| b.queue_priority.cmp(&a.queue_priority).then(a.id.cmp(&b.id)));
+        let free = self.free_nodes(pool);
+        let running = self.running_jobs(pool);
+        let decision = scheduler.select(&pending, &free, &running, now);
+        for (id, alloc) in &decision {
+            self.start(*id, alloc.clone(), now);
+        }
+        decision
+    }
+
+    /// Mark a job running on an allocation (called by schedule_cycle).
+    fn start(&mut self, id: JobId, alloc: Allocation, now: SimTime) {
+        for (node, cores) in &alloc.cores {
+            let n = self.nodes.get_mut(node).expect("allocation on unknown node");
+            assert!(
+                n.busy_cores + cores <= n.cores,
+                "over-allocation on {node}: busy {} + {} > {}",
+                n.busy_cores,
+                cores,
+                n.cores
+            );
+            n.busy_cores += cores;
+        }
+        let job = self.jobs.get_mut(&id).expect("start unknown job");
+        assert_eq!(job.state, JobState::Queued, "start non-queued job {id}");
+        job.state = JobState::Running;
+        job.started_at = Some(now);
+        job.allocation = Some(alloc);
+        self.pending.retain(|&p| p != id);
+    }
+
+    /// Job finished (successfully or not).
+    pub fn complete(&mut self, id: JobId, exit_code: i32, now: SimTime) {
+        let job = self.jobs.get_mut(&id).expect("complete unknown job");
+        assert_eq!(job.state, JobState::Running, "complete non-running job {id}");
+        job.state = JobState::Completed;
+        job.completed_at = Some(now);
+        job.exit_code = Some(exit_code);
+        let alloc = job.allocation.clone().unwrap_or_default();
+        self.release(&alloc);
+    }
+
+    fn release(&mut self, alloc: &Allocation) {
+        for (node, cores) in &alloc.cores {
+            if let Some(n) = self.nodes.get_mut(node) {
+                n.busy_cores = n.busy_cores.saturating_sub(*cores);
+            }
+        }
+    }
+
+    /// A node went down: mark offline, kill+requeue its running jobs.
+    /// Returns the requeued job ids (the resilience layer re-submits them
+    /// from the script folder).
+    pub fn node_down(&mut self, name: &str, now: SimTime) -> Vec<JobId> {
+        self.set_node_power(name, NodePower::Offline);
+        if let Some(n) = self.nodes.get_mut(name) {
+            n.busy_cores = 0;
+        }
+        let victims: Vec<JobId> = self
+            .jobs
+            .values()
+            .filter(|j| {
+                j.state == JobState::Running
+                    && j.allocation.as_ref().map(|a| a.cores.contains_key(name)).unwrap_or(false)
+            })
+            .map(|j| j.id)
+            .collect();
+        for id in &victims {
+            let job = self.jobs.get_mut(id).unwrap();
+            let alloc = job.allocation.take().unwrap_or_default();
+            job.state = JobState::Queued;
+            job.started_at = None;
+            job.requeues += 1;
+            job.submitted_at = now; // requeued now; goes to the back
+            // Release cores on the *other* (still-online) nodes.
+            let other: Allocation = Allocation {
+                cores: alloc.cores.iter().filter(|(n, _)| n.as_str() != name).map(|(n, c)| (n.clone(), *c)).collect(),
+            };
+            self.release(&other);
+            self.pending.push(*id);
+        }
+        victims
+    }
+
+    /// Node came (back) up.
+    pub fn node_up(&mut self, name: &str) {
+        self.set_node_power(name, NodePower::Online);
+    }
+
+    /// Busy/total cores in a pool (for the metrics endpoint).
+    pub fn pool_utilization(&self, pool: NodePool) -> (u32, u32) {
+        let mut busy = 0;
+        let mut total = 0;
+        for n in self.nodes.values().filter(|n| n.pool == pool && n.power == NodePower::Online) {
+            busy += n.busy_cores;
+            total += n.cores;
+        }
+        (busy, total)
+    }
+}
+
+impl Default for PbsServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rm::sched::FifoScheduler;
+
+    fn server_with_grid() -> PbsServer {
+        let mut s = PbsServer::new();
+        for (name, cores) in [("n01", 12), ("n02", 6), ("n03", 4), ("n04", 4)] {
+            s.register_node(name, cores, NodePool::Gridlan);
+            s.node_up(name);
+        }
+        s
+    }
+
+    fn ep_script(nodes: u32, ppn: u32) -> PbsScript {
+        PbsScript::parse(&format!(
+            "#PBS -N ep\n#PBS -q gridlan\n#PBS -l nodes={nodes}:ppn={ppn}\n./ep.x\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn qsub_schedule_complete_lifecycle() {
+        let mut s = server_with_grid();
+        let id = s.qsub(&ep_script(1, 4), "user", "", 0).unwrap();
+        assert_eq!(s.job(id).unwrap().state, JobState::Queued);
+        let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 10);
+        assert_eq!(d.len(), 1);
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        let (busy, total) = s.pool_utilization(NodePool::Gridlan);
+        assert_eq!((busy, total), (4, 26));
+        s.complete(id, 0, 500);
+        assert!(s.job(id).unwrap().succeeded());
+        assert_eq!(s.pool_utilization(NodePool::Gridlan).0, 0);
+    }
+
+    #[test]
+    fn qsub_rejects_unknown_queue_and_oversize() {
+        let mut s = server_with_grid();
+        let mut script = ep_script(1, 4);
+        script.queue = Some("nope".into());
+        assert!(s.qsub(&script, "u", "", 0).is_err());
+        assert!(s.qsub(&ep_script(1, 13), "u", "", 0).is_err()); // ppn > any node
+        assert!(s.qsub(&ep_script(7, 4), "u", "", 0).is_err()); // 28 > 26 pool
+    }
+
+    #[test]
+    fn queue_selects_pool() {
+        let mut s = server_with_grid();
+        s.register_node("cl01", 64, NodePool::Cluster);
+        s.node_up("cl01");
+        // batch queue (cluster pool) job doesn't consume gridlan cores.
+        let mut script = ep_script(1, 4);
+        script.queue = Some("batch".into());
+        let id = s.qsub(&script, "u", "", 0).unwrap();
+        s.schedule_cycle(NodePool::Cluster, &FifoScheduler, 1);
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+        assert_eq!(s.pool_utilization(NodePool::Gridlan).0, 0);
+        assert_eq!(s.pool_utilization(NodePool::Cluster).0, 4);
+    }
+
+    #[test]
+    fn qdel_queued_and_running() {
+        let mut s = server_with_grid();
+        let q = s.qsub(&ep_script(1, 2), "u", "", 0).unwrap();
+        let r = s.qsub(&ep_script(1, 2), "u", "", 0).unwrap();
+        s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+        // Both started actually; qdel the running one.
+        assert_eq!(s.job(r).unwrap().state, JobState::Running);
+        s.qdel(r, 50).unwrap();
+        assert_eq!(s.job(r).unwrap().state, JobState::Completed);
+        assert!(!s.job(r).unwrap().succeeded());
+        s.qdel(q, 60).unwrap();
+        assert!(s.qdel(q, 61).is_err()); // already completed
+    }
+
+    #[test]
+    fn offline_nodes_are_not_allocated() {
+        let mut s = server_with_grid();
+        s.set_node_power("n01", NodePower::Offline);
+        let id = s.qsub(&ep_script(1, 8), "u", "", 0).unwrap();
+        let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+        assert!(d.is_empty(), "8-ppn job needs n01 which is offline");
+        assert_eq!(s.job(id).unwrap().state, JobState::Queued);
+        s.node_up("n01");
+        let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 2);
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn node_down_requeues_running_jobs() {
+        let mut s = server_with_grid();
+        let id = s.qsub(&ep_script(2, 4), "u", "", 0).unwrap();
+        s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+        let alloc = s.job(id).unwrap().allocation.clone().unwrap();
+        let victim_node = alloc.cores.keys().next().unwrap().clone();
+        let victims = s.node_down(&victim_node, 100);
+        assert_eq!(victims, vec![id]);
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Queued);
+        assert_eq!(j.requeues, 1);
+        // All cores released everywhere.
+        assert_eq!(s.pool_utilization(NodePool::Gridlan).0, 0);
+        // And it can start again once the node returns.
+        s.node_up(&victim_node);
+        let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 200);
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn node_down_without_jobs_is_quiet() {
+        let mut s = server_with_grid();
+        assert!(s.node_down("n03", 5).is_empty());
+        assert_eq!(s.node("n03").unwrap().power, NodePower::Offline);
+    }
+
+    #[test]
+    fn qstat_reports_states() {
+        let mut s = server_with_grid();
+        let a = s.qsub(&ep_script(1, 2), "u", "", 0).unwrap();
+        let rows = s.qstat();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, a);
+        assert_eq!(rows[0].3, 'Q');
+    }
+}

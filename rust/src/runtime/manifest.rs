@@ -1,0 +1,123 @@
+//! Reader for `artifacts/manifest.json` (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One exported HLO artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub grid: usize,
+    pub lanes: usize,
+    pub pairs_per_lane: u64,
+    pub total_pairs: u64,
+}
+
+/// The artifact manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub grid: usize,
+    pub lanes: usize,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`; artifact paths are resolved
+    /// relative to `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("read manifest: {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        let grid = v.get("grid").and_then(Json::as_u64).ok_or("missing grid")? as usize;
+        let lanes = v.get("lanes").and_then(Json::as_u64).ok_or("missing lanes")? as usize;
+        let arts = v.get("artifacts").and_then(Json::as_obj).ok_or("missing artifacts")?;
+        let mut artifacts = Vec::new();
+        for (name, info) in arts.iter() {
+            let file = info.get("file").and_then(Json::as_str).ok_or("missing file")?;
+            artifacts.push(ArtifactInfo {
+                name: name.clone(),
+                file: dir.join(file),
+                // Per-artifact geometry, falling back to the manifest-wide
+                // default (older manifests).
+                grid: info.get("grid").and_then(Json::as_u64).unwrap_or(grid as u64) as usize,
+                lanes: info.get("lanes").and_then(Json::as_u64).unwrap_or(lanes as u64) as usize,
+                pairs_per_lane: info
+                    .get("pairs_per_lane")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing pairs_per_lane")?,
+                total_pairs: info
+                    .get("total_pairs")
+                    .and_then(Json::as_u64)
+                    .ok_or("missing total_pairs")?,
+            });
+        }
+        // Largest first: the engine picks greedily.
+        artifacts.sort_by(|a, b| b.total_pairs.cmp(&a.total_pairs));
+        if artifacts.is_empty() {
+            return Err("no artifacts in manifest".into());
+        }
+        Ok(Manifest { grid, lanes, artifacts })
+    }
+
+    pub fn smallest(&self) -> &ArtifactInfo {
+        self.artifacts.last().unwrap()
+    }
+
+    /// Default artifacts directory: $GRIDLAN_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("GRIDLAN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "grid": 8, "lanes": 128,
+        "outputs": ["sx"],
+        "artifacts": {
+            "ep_c16": {"file": "ep_c16.hlo.txt", "pairs_per_lane": 64, "total_pairs": 65536},
+            "ep_c10": {"file": "ep_c10.hlo.txt", "pairs_per_lane": 1, "total_pairs": 1024}
+        }
+    }"#;
+
+    #[test]
+    fn parses_and_sorts_descending() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.grid, 8);
+        assert_eq!(m.lanes, 128);
+        assert_eq!(m.artifacts[0].grid, 8);
+        assert_eq!(m.artifacts[0].lanes, 128);
+        assert_eq!(m.artifacts[0].name, "ep_c16");
+        assert_eq!(m.smallest().name, "ep_c10");
+        assert_eq!(m.artifacts[0].file, Path::new("/a/ep_c16.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse(r#"{"grid":8,"lanes":128,"artifacts":{}}"#, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 3);
+            assert!(m.artifacts.iter().all(|a| a.file.exists()));
+            assert!(m
+                .artifacts
+                .iter()
+                .all(|a| a.grid as u64 * a.lanes as u64 * a.pairs_per_lane == a.total_pairs));
+        }
+    }
+}

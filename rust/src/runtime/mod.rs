@@ -1,0 +1,12 @@
+//! PJRT runtime: load the AOT HLO artifacts and run real EP compute.
+//!
+//! This is the only module that touches the `xla` crate.  Python never
+//! runs here — `make artifacts` produced HLO *text* (see aot.py for why
+//! text, not serialized protos), and this module compiles + executes it
+//! on the PJRT CPU client.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::EpEngine;
+pub use manifest::{ArtifactInfo, Manifest};

@@ -1,0 +1,59 @@
+//! Simulated time: u64 nanoseconds since scenario start.
+
+/// Simulated time in nanoseconds.
+pub type SimTime = u64;
+
+/// One microsecond in [`SimTime`] units.
+pub const DUR_US: SimTime = 1_000;
+/// One millisecond.
+pub const DUR_MS: SimTime = 1_000_000;
+/// One second.
+pub const DUR_SEC: SimTime = 1_000_000_000;
+
+/// Convert seconds (f64) to SimTime, saturating at u64::MAX.
+pub fn from_secs_f64(s: f64) -> SimTime {
+    if s <= 0.0 {
+        0
+    } else {
+        let ns = (s * 1e9).round();
+        if ns >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            ns as u64
+        }
+    }
+}
+
+/// Convert SimTime to seconds.
+pub fn to_secs_f64(t: SimTime) -> f64 {
+    t as f64 / 1e9
+}
+
+/// Convert microseconds (f64) to SimTime.
+pub fn from_us_f64(us: f64) -> SimTime {
+    from_secs_f64(us * 1e-6)
+}
+
+/// Convert SimTime to microseconds.
+pub fn to_us_f64(t: SimTime) -> f64 {
+    t as f64 / 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_roundtrip() {
+        assert_eq!(from_secs_f64(1.5), 1_500_000_000);
+        assert!((to_secs_f64(2 * DUR_SEC) - 2.0).abs() < 1e-12);
+        assert_eq!(from_us_f64(550.0), 550 * DUR_US);
+        assert!((to_us_f64(1250 * DUR_US) - 1250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_and_overflow_saturate() {
+        assert_eq!(from_secs_f64(-5.0), 0);
+        assert_eq!(from_secs_f64(1e30), u64::MAX);
+    }
+}

@@ -1,0 +1,266 @@
+//! The event engine: a priority queue of timestamped closures over a
+//! user-supplied world state `W`.
+//!
+//! Handlers get `(&mut Simulator<W>, &mut W)` so they can schedule further
+//! events — the standard process-interaction DES pattern without coroutines.
+
+use super::clock::SimTime;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashSet};
+
+/// Handle for a scheduled event (usable for cancellation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EventId(u64);
+
+type Handler<W> = Box<dyn FnOnce(&mut Simulator<W>, &mut W)>;
+
+struct Entry<W> {
+    time: SimTime,
+    seq: u64,
+    id: EventId,
+    handler: Handler<W>,
+}
+
+// Order by (time, seq): deterministic FIFO within a timestamp.
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// The discrete-event simulator.
+pub struct Simulator<W> {
+    now: SimTime,
+    queue: BinaryHeap<Reverse<Entry<W>>>,
+    next_seq: u64,
+    cancelled: HashSet<EventId>,
+    executed: u64,
+}
+
+impl<W> Default for Simulator<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> Simulator<W> {
+    pub fn new() -> Self {
+        Self {
+            now: 0,
+            queue: BinaryHeap::new(),
+            next_seq: 0,
+            cancelled: HashSet::new(),
+            executed: 0,
+        }
+    }
+
+    /// Current simulated time (ns).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Number of pending (non-cancelled) events.
+    pub fn pending(&self) -> usize {
+        self.queue.len() - self.cancelled.len().min(self.queue.len())
+    }
+
+    /// Schedule `handler` at absolute time `at` (>= now).
+    pub fn schedule_at<F>(&mut self, at: SimTime, handler: F) -> EventId
+    where
+        F: FnOnce(&mut Simulator<W>, &mut W) + 'static,
+    {
+        let at = at.max(self.now);
+        let id = EventId(self.next_seq);
+        self.queue.push(Reverse(Entry {
+            time: at,
+            seq: self.next_seq,
+            id,
+            handler: Box::new(handler),
+        }));
+        self.next_seq += 1;
+        id
+    }
+
+    /// Schedule `handler` after a relative delay.
+    pub fn schedule_in<F>(&mut self, delay: SimTime, handler: F) -> EventId
+    where
+        F: FnOnce(&mut Simulator<W>, &mut W) + 'static,
+    {
+        self.schedule_at(self.now.saturating_add(delay), handler)
+    }
+
+    /// Cancel a pending event. Safe to call on already-fired ids (no-op).
+    pub fn cancel(&mut self, id: EventId) {
+        self.cancelled.insert(id);
+    }
+
+    /// Execute the next event. Returns false when the queue is empty.
+    pub fn step(&mut self, world: &mut W) -> bool {
+        while let Some(Reverse(e)) = self.queue.pop() {
+            if self.cancelled.remove(&e.id) {
+                continue;
+            }
+            debug_assert!(e.time >= self.now, "time went backwards");
+            self.now = e.time;
+            self.executed += 1;
+            (e.handler)(self, world);
+            return true;
+        }
+        false
+    }
+
+    /// Run until the queue drains or `until` is reached (events exactly at
+    /// `until` still run). Returns the number of events executed.
+    pub fn run_until(&mut self, world: &mut W, until: SimTime) -> u64 {
+        let start = self.executed;
+        loop {
+            match self.queue.peek() {
+                None => break,
+                Some(Reverse(e)) if e.time > until => break,
+                _ => {}
+            }
+            if !self.step(world) {
+                break;
+            }
+        }
+        // Even if no events remain beyond `until`, time advances to it.
+        if self.now < until {
+            self.now = until;
+        }
+        self.executed - start
+    }
+
+    /// Run until the queue is fully drained.
+    pub fn run_to_completion(&mut self, world: &mut W) -> u64 {
+        let start = self.executed;
+        while self.step(world) {}
+        self.executed - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::DUR_SEC;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    #[derive(Default)]
+    struct World {
+        trace: Vec<(SimTime, u32)>,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.schedule_at(30, |s, w| w.trace.push((s.now(), 3)));
+        sim.schedule_at(10, |s, w| w.trace.push((s.now(), 1)));
+        sim.schedule_at(20, |s, w| w.trace.push((s.now(), 2)));
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(10, 1), (20, 2), (30, 3)]);
+    }
+
+    #[test]
+    fn equal_times_fifo() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        for i in 0..10u32 {
+            sim.schedule_at(5, move |s, w| w.trace.push((s.now(), i)));
+        }
+        sim.run_to_completion(&mut w);
+        let order: Vec<u32> = w.trace.iter().map(|&(_, i)| i).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handlers_can_schedule_more() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.schedule_at(10, |s, _w: &mut World| {
+            s.schedule_in(5, |s2, w2| w2.trace.push((s2.now(), 99)));
+        });
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(15, 99)]);
+    }
+
+    #[test]
+    fn cancellation() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        let id = sim.schedule_at(10, |s, w| w.trace.push((s.now(), 1)));
+        sim.schedule_at(20, |s, w| w.trace.push((s.now(), 2)));
+        sim.cancel(id);
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(20, 2)]);
+    }
+
+    #[test]
+    fn run_until_boundary_inclusive() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.schedule_at(10, |s, w| w.trace.push((s.now(), 1)));
+        sim.schedule_at(11, |s, w| w.trace.push((s.now(), 2)));
+        let n = sim.run_until(&mut w, 10);
+        assert_eq!(n, 1);
+        assert_eq!(sim.now(), 10);
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace.len(), 2);
+    }
+
+    #[test]
+    fn run_until_advances_time_with_empty_queue() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.run_until(&mut w, 5 * DUR_SEC);
+        assert_eq!(sim.now(), 5 * DUR_SEC);
+    }
+
+    #[test]
+    fn periodic_pattern() {
+        // A self-rescheduling event: the monitor's 5-minute ping loop shape.
+        struct P {
+            count: Rc<RefCell<u32>>,
+        }
+        fn tick(s: &mut Simulator<P>, w: &mut P) {
+            *w.count.borrow_mut() += 1;
+            if *w.count.borrow() < 5 {
+                s.schedule_in(300 * DUR_SEC, tick);
+            }
+        }
+        let count = Rc::new(RefCell::new(0));
+        let mut w = P { count: count.clone() };
+        let mut sim = Simulator::<P>::new();
+        sim.schedule_at(0, tick);
+        sim.run_to_completion(&mut w);
+        assert_eq!(*count.borrow(), 5);
+        assert_eq!(sim.now(), 4 * 300 * DUR_SEC);
+    }
+
+    #[test]
+    fn past_schedule_clamps_to_now() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.schedule_at(100, |s, _w: &mut World| {
+            s.schedule_at(50, |s2, w2| w2.trace.push((s2.now(), 7)));
+        });
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(100, 7)]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Everything in the Gridlan stack that has *time* — packet flight, VM
+//! boot, scheduler cycles, the 5-minute monitor ping — runs on this engine.
+//! Determinism contract: events at equal timestamps fire in insertion
+//! order (a monotone sequence number breaks ties), and all randomness comes
+//! from seeded [`crate::util::rng::SplitMix64`] streams, so a scenario
+//! replays bit-identically.
+
+pub mod clock;
+pub mod engine;
+
+pub use clock::{SimTime, DUR_MS, DUR_SEC, DUR_US};
+pub use engine::{EventId, Simulator};

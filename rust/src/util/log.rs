@@ -1,0 +1,108 @@
+//! Leveled logging with simulation-time stamps.
+//!
+//! The simulator logs in *simulated* time (ns since scenario start) rather
+//! than wall time, so traces are deterministic and diffable run-to-run.
+//! Level is a process-global; `GRIDLAN_LOG=debug|info|warn|error|off`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+    Off = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // default: Warn (quiet tests)
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        3 => Level::Error,
+        _ => Level::Off,
+    }
+}
+
+/// Initialise from the GRIDLAN_LOG env var (call once from main).
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("GRIDLAN_LOG") {
+        set_level(match v.to_ascii_lowercase().as_str() {
+            "debug" => Level::Debug,
+            "info" => Level::Info,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            "off" => Level::Off,
+            _ => Level::Warn,
+        });
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l >= level() && level() != Level::Off
+}
+
+/// Emit one log line stamped with simulated nanoseconds.
+pub fn emit(l: Level, sim_ns: u64, component: &str, msg: &str) {
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+        Level::Off => return,
+    };
+    let secs = sim_ns as f64 / 1e9;
+    eprintln!("[{tag} t={secs:>12.6}s] {component}: {msg}");
+}
+
+#[macro_export]
+macro_rules! sim_info {
+    ($t:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Info, $t, $comp, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! sim_debug {
+    ($t:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Debug, $t, $comp, &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! sim_warn {
+    ($t:expr, $comp:expr, $($arg:tt)*) => {
+        $crate::util::log::emit($crate::util::log::Level::Warn, $t, $comp, &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Error < Level::Off);
+    }
+
+    #[test]
+    fn enabled_respects_level() {
+        let prev = level();
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(prev);
+    }
+}

@@ -1,0 +1,10 @@
+//! Foundation utilities: deterministic RNG, statistics, JSON, tables,
+//! logging, and a mini property-testing harness (the offline vendor set
+//! carries none of the usual crates — see DESIGN.md §6).
+
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

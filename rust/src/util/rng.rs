@@ -1,0 +1,260 @@
+//! Deterministic pseudo-random number generation for the simulator.
+//!
+//! Two generators:
+//!
+//! * [`SplitMix64`] — fast, full-period 64-bit generator used everywhere the
+//!   simulator needs noise (jitter, placement shuffles, fault injection).
+//!   Deterministic per seed, so every experiment is exactly repeatable.
+//! * [`NpbLcg`] — the NPB 46-bit multiplicative LCG (`x' = a*x mod 2^46`,
+//!   `a = 5^13`), bit-identical to `python/compile/kernels/ref.py`.  The
+//!   coordinator uses it to jump-ahead seed the EP lanes it hands to the
+//!   PJRT runtime.
+
+/// NPB EP multiplier `5^13`.
+pub const NPB_A: u64 = 1_220_703_125;
+/// NPB modulus is `2^46`.
+pub const NPB_MASK: u64 = (1u64 << 46) - 1;
+/// NPB EP canonical seed.
+pub const NPB_SEED: u64 = 271_828_183;
+/// `2^-46` as f64 (exact).
+pub const R46: f64 = 1.0 / (1u64 << 46) as f64;
+
+/// SplitMix64: Steele et al.'s mixing generator. Full 2^64 period.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire reduction).
+    pub fn gen_range(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "gen_range(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Marsaglia polar method.
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let x = 2.0 * self.next_f64() - 1.0;
+            let y = 2.0 * self.next_f64() - 1.0;
+            let t = x * x + y * y;
+            if t > 0.0 && t <= 1.0 {
+                return x * (-2.0 * t.ln() / t).sqrt();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for per-component streams).
+    pub fn fork(&mut self) -> SplitMix64 {
+        SplitMix64::new(self.next_u64() ^ 0xA5A5_A5A5_DEAD_BEEF)
+    }
+}
+
+/// The NPB 46-bit LCG, plus O(log n) jump-ahead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NpbLcg {
+    pub state: u64,
+}
+
+impl NpbLcg {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed & NPB_MASK }
+    }
+
+    /// One LCG step; returns the new state (which is also the raw random).
+    pub fn step(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(NPB_A) & NPB_MASK;
+        self.state
+    }
+
+    /// The next uniform in (0,1): state * 2^-46 after stepping.
+    pub fn next_f64(&mut self) -> f64 {
+        self.step() as f64 * R46
+    }
+
+    /// `a^exp mod 2^46` by binary exponentiation.
+    pub fn pow_mult(exp: u64) -> u64 {
+        let mut result: u64 = 1;
+        let mut base = NPB_A & NPB_MASK;
+        let mut e = exp;
+        while e > 0 {
+            if e & 1 == 1 {
+                result = result.wrapping_mul(base) & NPB_MASK;
+            }
+            base = base.wrapping_mul(base) & NPB_MASK;
+            e >>= 1;
+        }
+        result
+    }
+
+    /// State after `n` steps from the current state, without iterating.
+    pub fn jumped(&self, n: u64) -> NpbLcg {
+        NpbLcg {
+            state: self.state.wrapping_mul(Self::pow_mult(n)) & NPB_MASK,
+        }
+    }
+
+    /// Per-lane seeds for an EP execution: lane `g` covers global pairs
+    /// `[offset + g*ppl, offset + (g+1)*ppl)`; each pair consumes 2 randoms.
+    /// Mirrors `ref.lane_seeds` + a pair offset for multi-chunk jobs.
+    pub fn ep_lane_seeds(n_lanes: usize, pairs_per_lane: u64, pair_offset: u64) -> Vec<u64> {
+        let base = NpbLcg::new(NPB_SEED).jumped(2 * pair_offset);
+        (0..n_lanes)
+            .map(|g| base.jumped(2 * (g as u64) * pairs_per_lane).state)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn splitmix_f64_in_unit_interval() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut r = SplitMix64::new(1);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let v = r.gen_range(7) as usize;
+            assert!(v < 7);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = SplitMix64::new(99);
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.next_gaussian();
+            s += g;
+            s2 += g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(3);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn npb_lcg_first_values() {
+        // Cross-checked against python ref.py (exact integers).
+        let mut lcg = NpbLcg::new(NPB_SEED);
+        assert_eq!(lcg.step(), 32_883_653_486_115);
+        assert_eq!(lcg.step(), 55_063_727_434_591);
+        assert_eq!(lcg.step(), 39_106_144_873_291);
+        assert_eq!(lcg.step(), 46_899_331_031_975);
+    }
+
+    #[test]
+    fn npb_jump_matches_iteration() {
+        let lcg0 = NpbLcg::new(NPB_SEED);
+        let mut it = lcg0;
+        for k in 1..=200u64 {
+            it.step();
+            assert_eq!(lcg0.jumped(k).state, it.state, "k={k}");
+        }
+    }
+
+    #[test]
+    fn npb_pow_homomorphism() {
+        for (i, j) in [(3u64, 5u64), (100, 255), (1 << 20, 1 << 13)] {
+            let lhs = NpbLcg::pow_mult(i + j);
+            let rhs = NpbLcg::pow_mult(i).wrapping_mul(NpbLcg::pow_mult(j)) & NPB_MASK;
+            assert_eq!(lhs, rhs);
+        }
+    }
+
+    #[test]
+    fn ep_lane_seeds_partition() {
+        // Lane seeds + per-lane iteration must reproduce the global stream.
+        let (lanes, ppl) = (8usize, 3u64);
+        let seeds = NpbLcg::ep_lane_seeds(lanes, ppl, 0);
+        let mut global = NpbLcg::new(NPB_SEED);
+        for &s in &seeds {
+            let mut lane = NpbLcg::new(s);
+            for _ in 0..2 * ppl {
+                assert_eq!(lane.step(), global.step());
+            }
+        }
+    }
+
+    #[test]
+    fn ep_lane_seeds_offset() {
+        // Offset o must equal skipping o pairs of the global stream.
+        let seeds = NpbLcg::ep_lane_seeds(4, 5, 1000);
+        let direct = NpbLcg::new(NPB_SEED).jumped(2000);
+        assert_eq!(seeds[0], direct.state);
+    }
+}

@@ -1,0 +1,160 @@
+//! Small statistics toolkit used by the benchmark harnesses.
+//!
+//! Everything the paper reports is a mean with a parenthesised standard
+//! deviation — e.g. `550(20) µs` — so [`Summary`] carries exactly that,
+//! plus percentiles for the latency benches.
+
+/// Running summary of a sample set.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        Self { samples: xs.to_vec() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator; 0 for n<2).
+    pub fn std(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.samples.iter().map(|x| (x - m) * (x - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Linear-interpolated percentile, p in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+        }
+    }
+
+    /// Paper-style "mean(std)" with std rounded to the same scale the paper
+    /// uses, e.g. `550(20)`.
+    pub fn paper_format(&self, round_to: f64) -> String {
+        let m = (self.mean() / round_to).round() * round_to;
+        let s = (self.std() / round_to).round() * round_to;
+        format!("{}({})", fmt_sig(m), fmt_sig(s))
+    }
+}
+
+fn fmt_sig(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Ordinary least squares fit y = a + b x; returns (a, b, r2).
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    assert!(n >= 2.0, "linfit needs >= 2 points");
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    let syy: f64 = ys.iter().map(|y| (y - my) * (y - my)).sum();
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (a, b, r2)
+}
+
+/// Weighted geometric mean of ratios — used to compare curve shapes.
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let s = Summary::from_slice(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.std() - 2.138089935299395).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolation() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((s.percentile(100.0) - 4.0).abs() < 1e-12);
+        assert!((s.percentile(50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_format_rounds() {
+        let s = Summary::from_slice(&[548.0, 553.0, 549.0, 551.0]);
+        assert_eq!(s.paper_format(10.0), "550(0)");
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0];
+        let (a, b, r2) = linfit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_of_equal_values() {
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        assert!(Summary::new().mean().is_nan());
+    }
+}

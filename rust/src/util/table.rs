@@ -1,0 +1,174 @@
+//! ASCII table formatting for the benchmark reports.
+//!
+//! The bench harnesses print rows shaped like the paper's tables; this
+//! keeps column alignment without pulling in a crate.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            aligns: header.iter().map(|_| Align::Left).collect(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn title(mut self, t: &str) -> Self {
+        self.title = Some(t.to_string());
+        self
+    }
+
+    pub fn align(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.header.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String], aligns: &[Align]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                line.push(' ');
+                match aligns[i] {
+                    Align::Left => {
+                        line.push_str(&cells[i]);
+                        line.push_str(&" ".repeat(pad));
+                    }
+                    Align::Right => {
+                        line.push_str(&" ".repeat(pad));
+                        line.push_str(&cells[i]);
+                    }
+                }
+                line.push(' ');
+                if i + 1 < ncol {
+                    line.push('|');
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &self.aligns));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format microseconds like the paper: `550(20) µs`.
+pub fn us_paper(mean_us: f64, std_us: f64, round: f64) -> String {
+    let m = (mean_us / round).round() * round;
+    let s = (std_us / round).round() * round;
+    format!("{}({}) µs", m as i64, s as i64)
+}
+
+/// Format a duration in seconds with adaptive precision.
+pub fn secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["Node", "Cores"]).align(&[Align::Left, Align::Right]);
+        t.row_strs(&["n01", "12"]);
+        t.row_strs(&["n02", "6"]);
+        let out = t.render();
+        assert!(out.contains("n01"));
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all rows same width
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn us_paper_format() {
+        assert_eq!(us_paper(548.7, 21.2, 10.0), "550(20) µs");
+        assert_eq!(us_paper(1250.0, 30.0, 10.0), "1250(30) µs");
+    }
+
+    #[test]
+    fn secs_ranges() {
+        assert!(secs(0.0000005).contains("µs"));
+        assert!(secs(0.05).contains("ms"));
+        assert!(secs(12.0).contains("s"));
+        assert!(secs(300.0).contains("min"));
+    }
+
+    #[test]
+    fn unicode_width_alignment() {
+        let mut t = Table::new(&["lat"]);
+        t.row_strs(&["550(20) µs"]);
+        t.row_strs(&["1250(30) µs"]);
+        let out = t.render();
+        assert!(out.lines().count() == 4);
+    }
+}

@@ -1,0 +1,203 @@
+//! Physical CPU performance model with dynamic clock scaling.
+//!
+//! The paper (Fig. 3 discussion): "the results do not agree with the ideal
+//! speed-up ... due to the technology implemented in the processors whereby
+//! the core's clocks are dynamically changed ... (Turbo Boost by Intel and
+//! Turbo Core by AMD)".  A single active core runs at max turbo; a fully
+//! loaded chip runs near base.  Measured t1 is therefore *better* than
+//! t(n)*n, putting every multi-core point above the ideal t1/n line.
+//!
+//! `ep_rate_mpairs` converts clocks to NPB-EP throughput via a per-µarch
+//! pairs-per-cycle factor (calibrated in DESIGN.md §5 so the Fig. 3 shape —
+//! 26 Gridlan cores ≈ 212 s, comparison server needs ≈ 38 cores — holds).
+
+/// A physical CPU package (or a multi-socket aggregate for the comparison
+/// server, which behaves symmetrically for EP).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CpuModel {
+    pub name: String,
+    /// Schedulable cores as the paper counts them (Table 1).
+    pub cores: u32,
+    /// Base (all-core sustained, no turbo headroom) clock, GHz.
+    pub base_ghz: f64,
+    /// Max single-core turbo, GHz.
+    pub max_turbo_ghz: f64,
+    /// All-core turbo (sustained clock with every core busy), GHz.
+    pub all_core_ghz: f64,
+    /// NPB-EP pairs per cycle per core (µarch efficiency).
+    pub pairs_per_cycle: f64,
+}
+
+impl CpuModel {
+    /// Clock (GHz) with `active` busy cores: linear interpolation from max
+    /// single-core turbo down to the all-core clock, clamped.
+    pub fn clock_ghz(&self, active: u32) -> f64 {
+        if active == 0 {
+            return self.max_turbo_ghz;
+        }
+        let active = active.min(self.cores);
+        if self.cores == 1 {
+            return self.max_turbo_ghz;
+        }
+        let frac = (active - 1) as f64 / (self.cores - 1) as f64;
+        self.max_turbo_ghz + frac * (self.all_core_ghz - self.max_turbo_ghz)
+    }
+
+    /// EP throughput of ONE core (Mpairs/s) when `active` cores are busy.
+    pub fn ep_rate_mpairs(&self, active: u32) -> f64 {
+        self.clock_ghz(active) * 1e3 * self.pairs_per_cycle
+    }
+
+    /// Aggregate EP throughput (Mpairs/s) with `active` busy cores.
+    pub fn ep_rate_total_mpairs(&self, active: u32) -> f64 {
+        let active = active.min(self.cores);
+        active as f64 * self.ep_rate_mpairs(active)
+    }
+
+    // ------------------------------------------------ paper's Table 1 SKUs
+
+    /// Intel Xeon E5-2630 (n01, counted as 12 cores in Table 1).
+    pub fn xeon_e5_2630() -> Self {
+        Self {
+            name: "Xeon E5-2630".into(),
+            cores: 12,
+            base_ghz: 2.3,
+            max_turbo_ghz: 2.8,
+            all_core_ghz: 2.5,
+            pairs_per_cycle: 0.0052,
+        }
+    }
+
+    /// Intel Core i7-3930K (n02, 6 cores).
+    pub fn i7_3930k() -> Self {
+        Self {
+            name: "Core i7-3930K".into(),
+            cores: 6,
+            base_ghz: 3.2,
+            max_turbo_ghz: 3.8,
+            all_core_ghz: 3.5,
+            pairs_per_cycle: 0.0050,
+        }
+    }
+
+    /// Intel Core i7-2920XM (n03, 4 cores, mobile).
+    pub fn i7_2920xm() -> Self {
+        Self {
+            name: "Core i7-2920XM".into(),
+            cores: 4,
+            base_ghz: 2.5,
+            max_turbo_ghz: 3.5,
+            all_core_ghz: 3.2,
+            pairs_per_cycle: 0.0050,
+        }
+    }
+
+    /// Intel Core i7 960 (n04, 4 cores, Nehalem).
+    pub fn i7_960() -> Self {
+        Self {
+            name: "Core i7 960".into(),
+            cores: 4,
+            base_ghz: 3.2,
+            max_turbo_ghz: 3.46,
+            all_core_ghz: 3.33,
+            pairs_per_cycle: 0.0042,
+        }
+    }
+
+    /// 4 x AMD Opteron 6376 (the 64-core comparison server). Piledriver
+    /// modules share FPUs, so per-core EP throughput is low — this is why
+    /// the paper's server needs ~38 cores to match 26 Gridlan cores.
+    pub fn opteron_6376_quad() -> Self {
+        Self {
+            name: "4x Opteron 6376".into(),
+            cores: 64,
+            base_ghz: 2.3,
+            max_turbo_ghz: 3.2,
+            all_core_ghz: 2.6,
+            pairs_per_cycle: 0.0030,
+        }
+    }
+
+    /// The Gridlan server's own CPU.  NOT part of the 26-core pool: the
+    /// paper's Table 1 rows sum to 26 (12+6+4+4) even though the caption
+    /// says 24 — Fig. 3 sweeps 1..26 cores, so we follow the rows.
+    pub fn server_cpu() -> Self {
+        Self {
+            name: "Server (2 cores)".into(),
+            cores: 2,
+            base_ghz: 3.0,
+            max_turbo_ghz: 3.4,
+            all_core_ghz: 3.2,
+            pairs_per_cycle: 0.0046,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_decreases_with_active_cores() {
+        let cpu = CpuModel::xeon_e5_2630();
+        assert!((cpu.clock_ghz(1) - 2.8).abs() < 1e-12);
+        assert!((cpu.clock_ghz(12) - 2.5).abs() < 1e-12);
+        let mut prev = cpu.clock_ghz(1);
+        for a in 2..=12 {
+            let c = cpu.clock_ghz(a);
+            assert!(c <= prev);
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn active_clamped_to_core_count() {
+        let cpu = CpuModel::i7_960();
+        assert_eq!(cpu.clock_ghz(100), cpu.clock_ghz(4));
+    }
+
+    #[test]
+    fn aggregate_rate_increases_with_cores_despite_turbo() {
+        // Adding cores must still add throughput (sublinearly).
+        for cpu in [CpuModel::xeon_e5_2630(), CpuModel::opteron_6376_quad()] {
+            let mut prev = 0.0;
+            for a in 1..=cpu.cores {
+                let r = cpu.ep_rate_total_mpairs(a);
+                assert!(r > prev, "{}: a={a}", cpu.name);
+                prev = r;
+            }
+        }
+    }
+
+    #[test]
+    fn per_core_rate_at_full_load_below_single() {
+        let cpu = CpuModel::i7_2920xm();
+        assert!(cpu.ep_rate_mpairs(4) < cpu.ep_rate_mpairs(1));
+        // i7-2920XM has a big turbo window: >= 8% gap.
+        assert!(cpu.ep_rate_mpairs(1) / cpu.ep_rate_mpairs(4) > 1.08);
+    }
+
+    #[test]
+    fn intel_beats_amd_per_core() {
+        // The crux of Fig 3's crossover.
+        let intel = CpuModel::xeon_e5_2630();
+        let amd = CpuModel::opteron_6376_quad();
+        assert!(intel.ep_rate_mpairs(12) > amd.ep_rate_mpairs(64) * 1.2);
+    }
+
+    #[test]
+    fn table1_core_total_is_26() {
+        // Table 1 rows sum to 26 (the caption's "24" contradicts both the
+        // rows and Fig. 3's 1..26 sweep; we follow the rows).
+        let total: u32 = [
+            CpuModel::xeon_e5_2630(),
+            CpuModel::i7_3930k(),
+            CpuModel::i7_2920xm(),
+            CpuModel::i7_960(),
+        ]
+        .iter()
+        .map(|c| c.cores)
+        .sum();
+        assert_eq!(total, 26);
+    }
+}

@@ -1,0 +1,113 @@
+//! Hypervisor profiles (paper §3.2 and §5).
+//!
+//! The paper uses QEMU/KVM on GNU/Linux hosts and VirtualBox (headless) on
+//! Windows hosts, notes VMware as an alternative, and discusses replacing
+//! VirtualBox with *pure QEMU* (TCG emulation) to fix the SYSTEM-user
+//! issue — "although this is at the cost of a drop in performance".
+//!
+//! Two effects matter to the experiments:
+//! * `cpu_efficiency` — guest compute throughput vs bare metal (Fig. 3);
+//! * `vnet_one_way_us` — virtio/NAT network path overhead per direction
+//!   (Table 2: the node ping includes the VM's network stack).
+
+/// Which hypervisor runs the node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HypervisorKind {
+    /// QEMU with KVM acceleration (Linux hosts).
+    QemuKvm,
+    /// VirtualBox headless (Windows hosts in the paper).
+    VirtualBox,
+    /// Pure QEMU TCG emulation — no VT-x needed, big slowdown (paper §5).
+    PureQemu,
+    /// VMware Workstation/Player (paper's listed alternative).
+    Vmware,
+}
+
+/// Performance profile of a hypervisor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hypervisor {
+    pub kind: HypervisorKind,
+    /// Guest compute throughput as a fraction of bare metal.
+    pub cpu_efficiency: f64,
+    /// Added one-way network latency through the virtual NIC, µs.
+    pub vnet_one_way_us: f64,
+    /// Time for the hypervisor to create/power-on the VM, ms.
+    pub power_on_ms: f64,
+}
+
+impl Hypervisor {
+    pub fn new(kind: HypervisorKind) -> Self {
+        match kind {
+            // Calibration note (Table 2): node-vs-host overhead is split
+            // between the VPN (~210 µs RTT) and the virtio path; per-node
+            // profile tweaks live in the cluster config.
+            HypervisorKind::QemuKvm => Self {
+                kind,
+                cpu_efficiency: 0.97,
+                vnet_one_way_us: 165.0,
+                power_on_ms: 900.0,
+            },
+            HypervisorKind::VirtualBox => Self {
+                kind,
+                cpu_efficiency: 0.93,
+                vnet_one_way_us: 240.0,
+                power_on_ms: 2_300.0,
+            },
+            HypervisorKind::PureQemu => Self {
+                kind,
+                cpu_efficiency: 0.12, // TCG: order-of-magnitude drop
+                vnet_one_way_us: 260.0,
+                power_on_ms: 1_200.0,
+            },
+            HypervisorKind::Vmware => Self {
+                kind,
+                cpu_efficiency: 0.95,
+                vnet_one_way_us: 185.0,
+                power_on_ms: 1_800.0,
+            },
+        }
+    }
+
+    /// Guest EP throughput for one core (Mpairs/s) given the host rate.
+    pub fn guest_rate(&self, host_rate_mpairs: f64) -> f64 {
+        host_rate_mpairs * self.cpu_efficiency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kvm_is_near_native() {
+        let h = Hypervisor::new(HypervisorKind::QemuKvm);
+        assert!(h.cpu_efficiency > 0.95);
+    }
+
+    #[test]
+    fn pure_qemu_is_an_order_of_magnitude_slower() {
+        let kvm = Hypervisor::new(HypervisorKind::QemuKvm);
+        let tcg = Hypervisor::new(HypervisorKind::PureQemu);
+        assert!(kvm.cpu_efficiency / tcg.cpu_efficiency > 5.0);
+    }
+
+    #[test]
+    fn guest_rate_scales() {
+        let h = Hypervisor::new(HypervisorKind::VirtualBox);
+        assert!((h.guest_rate(100.0) - 93.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_profiles_have_positive_overheads() {
+        for k in [
+            HypervisorKind::QemuKvm,
+            HypervisorKind::VirtualBox,
+            HypervisorKind::PureQemu,
+            HypervisorKind::Vmware,
+        ] {
+            let h = Hypervisor::new(k);
+            assert!(h.vnet_one_way_us > 0.0 && h.power_on_ms > 0.0);
+            assert!(h.cpu_efficiency > 0.0 && h.cpu_efficiency <= 1.0);
+        }
+    }
+}

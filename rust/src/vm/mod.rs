@@ -1,0 +1,21 @@
+//! Virtualized Gridlan nodes (paper §2.2).
+//!
+//! Each client workstation runs one VM — "the Gridlan node" — so the
+//! compute environment is homogeneous regardless of the host OS.  Three
+//! concerns live here:
+//!
+//! * [`cpu`] — the physical CPU performance model, including the Turbo
+//!   Boost / Turbo Core clock-vs-active-cores behaviour that makes the
+//!   paper's Fig. 3 deviate from ideal speed-up;
+//! * [`hypervisor`] — QEMU/KVM, VirtualBox, pure-QEMU (TCG) and VMware
+//!   profiles: CPU efficiency and virtio network overhead;
+//! * [`node`] — the VM lifecycle state machine (Off → PXE → TFTP →
+//!   NFS-root → Up) driven by the `boot` protocols.
+
+pub mod cpu;
+pub mod hypervisor;
+pub mod node;
+
+pub use cpu::CpuModel;
+pub use hypervisor::{Hypervisor, HypervisorKind};
+pub use node::{NodeState, VmNode};

@@ -1,0 +1,162 @@
+//! Gridlan node (VM) lifecycle state machine.
+//!
+//! Paper §2.5 boot sequence: client connects VPN → starts VM → VM sends
+//! DHCP through the tunnel → server answers with boot files (TFTP) → VM
+//! mounts `/` over NFS → boot completes.  The `boot` module drives these
+//! transitions on the event engine; this type enforces legal ordering and
+//! records per-phase timestamps (used by the boot-storm bench).
+
+use crate::sim::clock::SimTime;
+
+/// Boot lifecycle states, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum NodeState {
+    Off,
+    PoweringOn,
+    Dhcp,
+    Tftp,
+    NfsMount,
+    Up,
+    /// Terminal until restarted by the watchdog.
+    Crashed,
+}
+
+impl NodeState {
+    pub fn is_running(self) -> bool {
+        self == NodeState::Up
+    }
+}
+
+/// A virtual machine acting as a Gridlan node.
+#[derive(Debug, Clone)]
+pub struct VmNode {
+    /// Node name as the resource manager sees it (n01, n02...).
+    pub name: String,
+    /// Host client this VM runs on.
+    pub client: String,
+    /// vCPUs exposed to the guest (paper: all host cores).
+    pub vcpus: u32,
+    pub state: NodeState,
+    /// (state entered, sim time) history for diagnostics/benches.
+    pub history: Vec<(NodeState, SimTime)>,
+    /// Completed boots (watchdog restarts increment this).
+    pub boot_count: u32,
+}
+
+impl VmNode {
+    pub fn new(name: &str, client: &str, vcpus: u32) -> Self {
+        Self {
+            name: name.to_string(),
+            client: client.to_string(),
+            vcpus,
+            state: NodeState::Off,
+            history: vec![(NodeState::Off, 0)],
+            boot_count: 0,
+        }
+    }
+
+    /// Legal next states from the current one.
+    fn legal_next(&self) -> &'static [NodeState] {
+        use NodeState::*;
+        match self.state {
+            Off => &[PoweringOn],
+            PoweringOn => &[Dhcp, Crashed, Off],
+            Dhcp => &[Tftp, Crashed, Off],
+            Tftp => &[NfsMount, Crashed, Off],
+            NfsMount => &[Up, Crashed, Off],
+            Up => &[Crashed, Off],
+            Crashed => &[PoweringOn, Off],
+        }
+    }
+
+    /// Transition; panics on illegal transitions (a simulation bug, not a
+    /// runtime condition).
+    pub fn advance(&mut self, next: NodeState, now: SimTime) {
+        assert!(
+            self.legal_next().contains(&next),
+            "illegal node transition {:?} -> {next:?} ({})",
+            self.state,
+            self.name
+        );
+        if next == NodeState::Up {
+            self.boot_count += 1;
+        }
+        self.state = next;
+        self.history.push((next, now));
+    }
+
+    /// Duration of the last completed boot (PoweringOn → Up), if any.
+    pub fn last_boot_duration(&self) -> Option<SimTime> {
+        let mut up_at = None;
+        for &(s, t) in self.history.iter().rev() {
+            match s {
+                NodeState::Up if up_at.is_none() => up_at = Some(t),
+                NodeState::PoweringOn => {
+                    if let Some(u) = up_at {
+                        return Some(u - t);
+                    }
+                }
+                _ => {}
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn boot(node: &mut VmNode, t0: SimTime) {
+        use NodeState::*;
+        node.advance(PoweringOn, t0);
+        node.advance(Dhcp, t0 + 1_000_000);
+        node.advance(Tftp, t0 + 2_000_000);
+        node.advance(NfsMount, t0 + 50_000_000);
+        node.advance(Up, t0 + 80_000_000);
+    }
+
+    #[test]
+    fn full_boot_sequence() {
+        let mut n = VmNode::new("n01", "client01", 12);
+        boot(&mut n, 100);
+        assert!(n.state.is_running());
+        assert_eq!(n.boot_count, 1);
+        assert_eq!(n.last_boot_duration(), Some(80_000_000));
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal node transition")]
+    fn cannot_skip_states() {
+        let mut n = VmNode::new("n01", "c", 4);
+        n.advance(NodeState::Up, 0);
+    }
+
+    #[test]
+    fn crash_and_watchdog_restart() {
+        let mut n = VmNode::new("n02", "c", 6);
+        boot(&mut n, 0);
+        n.advance(NodeState::Crashed, 200_000_000);
+        assert!(!n.state.is_running());
+        boot_from_crash(&mut n, 300_000_000);
+        assert_eq!(n.boot_count, 2);
+    }
+
+    fn boot_from_crash(n: &mut VmNode, t0: SimTime) {
+        use NodeState::*;
+        n.advance(PoweringOn, t0);
+        n.advance(Dhcp, t0 + 1);
+        n.advance(Tftp, t0 + 2);
+        n.advance(NfsMount, t0 + 3);
+        n.advance(Up, t0 + 4);
+    }
+
+    #[test]
+    fn power_off_from_any_running_state() {
+        let mut n = VmNode::new("n03", "c", 4);
+        n.advance(NodeState::PoweringOn, 0);
+        n.advance(NodeState::Dhcp, 1);
+        n.advance(NodeState::Off, 2); // user shut the client down mid-boot
+        assert_eq!(n.state, NodeState::Off);
+    }
+}

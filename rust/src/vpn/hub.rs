@@ -1,0 +1,216 @@
+//! Hub routing (paper §2.1): "the network traffic is all routed via the
+//! Gridlan server.  When two nodes exchange data, the latter always passes
+//! through the Gridlan server."
+//!
+//! The hub owns the PKI and the set of established tunnels, keyed by client
+//! name; it answers delay queries for client→server and client→client
+//! (two-leg) traffic.  The MPI layer and the nfs/dhcp protocols ride on it.
+
+use super::pki::{ClientKey, Pki};
+use super::tunnel::{TunnelCost, TunnelEndpoint};
+use crate::netsim::packet::Packet;
+use crate::netsim::topology::{DeviceId, Network};
+use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+
+/// Server-side forwarding cost between two tunnels (routing table lookup +
+/// re-encrypt), µs.
+pub const HUB_FORWARD_US: f64 = 25.0;
+
+/// The VPN server with its connected clients.
+pub struct VpnHub {
+    pub server: DeviceId,
+    pki: Pki,
+    tunnels: HashMap<String, TunnelEndpoint>,
+    /// Stable per-client address assignment (clients that reconnect get
+    /// their old address back, like DHCP lease affinity).
+    addrs: HashMap<String, String>,
+    next_addr: u32,
+}
+
+impl VpnHub {
+    pub fn new(server: DeviceId, pki_seed: u64) -> Self {
+        Self {
+            server,
+            pki: Pki::new(pki_seed),
+            tunnels: HashMap::new(),
+            addrs: HashMap::new(),
+            next_addr: 2,
+        }
+    }
+
+    /// Administrator: provision a key for a client.
+    pub fn provision(&mut self, client: &str) -> ClientKey {
+        self.pki.issue(client)
+    }
+
+    /// Client connects at OS start-up. Fails if the key doesn't verify.
+    pub fn connect(
+        &mut self,
+        client: &str,
+        key: &ClientKey,
+        host: DeviceId,
+        cost: TunnelCost,
+    ) -> Result<String, String> {
+        if key.client != client {
+            return Err(format!("key issued to '{}', not '{client}'", key.client));
+        }
+        if !self.pki.verify(key) {
+            return Err(format!("key for '{client}' rejected by PKI"));
+        }
+        let addr = match self.addrs.get(client) {
+            Some(a) => a.clone(),
+            None => {
+                let a = format!("10.8.{}.{}", self.next_addr / 256, self.next_addr % 256);
+                self.next_addr += 1;
+                self.addrs.insert(client.to_string(), a.clone());
+                a
+            }
+        };
+        self.tunnels.insert(client.to_string(), TunnelEndpoint::new(host, &addr, cost));
+        Ok(addr)
+    }
+
+    /// Client disconnects (shutdown, crash, cable pull).
+    pub fn disconnect(&mut self, client: &str) {
+        self.tunnels.remove(client);
+    }
+
+    pub fn is_connected(&self, client: &str) -> bool {
+        self.tunnels.get(client).map(|t| t.established).unwrap_or(false)
+    }
+
+    pub fn connected_clients(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.tunnels.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn endpoint(&self, client: &str) -> Option<&TunnelEndpoint> {
+        self.tunnels.get(client)
+    }
+
+    /// One-way delay µs, server → client's tunnel endpoint.
+    pub fn server_to_client_us(
+        &self,
+        net: &Network,
+        client: &str,
+        packet: &Packet,
+        rng: &mut SplitMix64,
+    ) -> Option<f64> {
+        self.tunnels.get(client)?.one_way_from_server_us(net, self.server, packet, rng)
+    }
+
+    /// One-way delay µs, client → client: ALWAYS two tunnel legs via the
+    /// hub (the paper's defining routing property).
+    pub fn client_to_client_us(
+        &self,
+        net: &Network,
+        from: &str,
+        to: &str,
+        packet: &Packet,
+        rng: &mut SplitMix64,
+    ) -> Option<f64> {
+        let leg1 = self.tunnels.get(from)?.one_way_to_server_us(net, self.server, packet, rng)?;
+        let leg2 = self.tunnels.get(to)?.one_way_from_server_us(net, self.server, packet, rng)?;
+        Some(leg1 + HUB_FORWARD_US + leg2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::topology::LinkProfile;
+
+    fn lan3() -> (Network, DeviceId, DeviceId, DeviceId) {
+        let mut n = Network::new();
+        n.jitter_sigma_us = 0.0;
+        let srv = n.add_host("server", 50.0);
+        let sw = n.add_switch("sw", 20.0);
+        let h1 = n.add_host("h1", 60.0);
+        let h2 = n.add_host("h2", 60.0);
+        let g = LinkProfile::gigabit();
+        n.link(srv, sw, g);
+        n.link(sw, h1, g);
+        n.link(sw, h2, g);
+        (n, srv, h1, h2)
+    }
+
+    #[test]
+    fn connect_requires_valid_key() {
+        let (_, srv, h1, _) = lan3();
+        let mut hub = VpnHub::new(srv, 9);
+        let key = hub.provision("n01");
+        assert!(hub.connect("n01", &key, h1, TunnelCost::default()).is_ok());
+        assert!(hub.is_connected("n01"));
+    }
+
+    #[test]
+    fn wrong_name_or_forged_key_rejected() {
+        let (_, srv, h1, _) = lan3();
+        let mut hub = VpnHub::new(srv, 9);
+        let key = hub.provision("n01");
+        assert!(hub.connect("n02", &key, h1, TunnelCost::default()).is_err());
+        let mut forged = key.clone();
+        forged.tag[3] ^= 1;
+        assert!(hub.connect("n01", &forged, h1, TunnelCost::default()).is_err());
+    }
+
+    #[test]
+    fn addresses_are_unique() {
+        let (_, srv, h1, h2) = lan3();
+        let mut hub = VpnHub::new(srv, 9);
+        let k1 = hub.provision("n01");
+        let k2 = hub.provision("n02");
+        let a1 = hub.connect("n01", &k1, h1, TunnelCost::default()).unwrap();
+        let a2 = hub.connect("n02", &k2, h2, TunnelCost::default()).unwrap();
+        assert_ne!(a1, a2);
+    }
+
+    #[test]
+    fn node_to_node_passes_through_hub() {
+        let (n, srv, h1, h2) = lan3();
+        let mut hub = VpnHub::new(srv, 9);
+        let k1 = hub.provision("n01");
+        let k2 = hub.provision("n02");
+        hub.connect("n01", &k1, h1, TunnelCost::default()).unwrap();
+        hub.connect("n02", &k2, h2, TunnelCost::default()).unwrap();
+        let mut rng = SplitMix64::new(4);
+        let p = Packet::icmp_echo();
+        let c2c = hub.client_to_client_us(&n, "n01", "n02", &p, &mut rng).unwrap();
+        let mut rng2 = SplitMix64::new(4);
+        let s2c1 = hub.server_to_client_us(&n, "n01", &p, &mut rng2).unwrap();
+        let s2c2 = hub.server_to_client_us(&n, "n02", &p, &mut rng2).unwrap();
+        // Two legs + forward cost: strictly more than either single leg.
+        assert!(c2c > s2c1.max(s2c2));
+        assert!((c2c - (s2c1 + s2c2 + HUB_FORWARD_US)).abs() < 1.0);
+    }
+
+    #[test]
+    fn reconnect_reuses_address_forever() {
+        // Regression: a fault-storm's reconnect churn must not exhaust the
+        // address space (next_addr used to be a u8 that overflowed).
+        let (_, srv, h1, _) = lan3();
+        let mut hub = VpnHub::new(srv, 9);
+        let key = hub.provision("n01");
+        let first = hub.connect("n01", &key, h1, TunnelCost::default()).unwrap();
+        for _ in 0..1000 {
+            hub.disconnect("n01");
+            let again = hub.connect("n01", &key, h1, TunnelCost::default()).unwrap();
+            assert_eq!(again, first);
+        }
+    }
+
+    #[test]
+    fn disconnect_stops_traffic() {
+        let (n, srv, h1, _) = lan3();
+        let mut hub = VpnHub::new(srv, 9);
+        let key = hub.provision("n01");
+        hub.connect("n01", &key, h1, TunnelCost::default()).unwrap();
+        hub.disconnect("n01");
+        let mut rng = SplitMix64::new(4);
+        assert!(hub
+            .server_to_client_us(&n, "n01", &Packet::icmp_echo(), &mut rng)
+            .is_none());
+    }
+}

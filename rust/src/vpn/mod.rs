@@ -1,0 +1,19 @@
+//! VPN substrate (paper §2.1).
+//!
+//! Every Gridlan client opens a tunnel to the server at OS start-up.  Key
+//! facts the paper relies on, all modeled here:
+//!
+//! * **authorization**: a client participates only if the administrator
+//!   issued it a private key ([`pki`]);
+//! * **hub routing**: *all* node↔node traffic passes through the server —
+//!   two tunnel traversals ([`hub`]);
+//! * **latency cost**: encapsulation + cipher work adds delay on every
+//!   packet — a large share of Table 2's ~900 µs overhead ([`tunnel`]).
+
+pub mod hub;
+pub mod pki;
+pub mod tunnel;
+
+pub use hub::VpnHub;
+pub use pki::{ClientKey, Pki};
+pub use tunnel::{TunnelCost, TunnelEndpoint};

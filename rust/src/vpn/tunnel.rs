@@ -1,0 +1,134 @@
+//! Tunnel cost model: what a packet pays for riding the VPN.
+//!
+//! OpenVPN in the paper's configuration is a user-space process: each
+//! packet crosses the tun device, gets HMAC'd + encrypted, and is re-sent
+//! over UDP.  Per direction that is
+//!
+//!   tun traversal + user/kernel context switches  (fixed µs)
+//! + cipher + HMAC                                 (µs per KB)
+//! + bigger on-wire frame                          (handled by netsim via
+//!                                                  the VPN_HEADER bytes)
+//!
+//! Defaults are calibrated so Table 2 reproduces: the paper's node pings
+//! sit ~700–900 µs RTT above the host pings, split between VPN and the
+//! virtio layer (see `vm::hypervisor`).
+
+use crate::netsim::packet::{Layer, Packet};
+use crate::netsim::topology::{DeviceId, Network};
+use crate::util::rng::SplitMix64;
+
+/// Per-direction tunnel processing costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunnelCost {
+    /// Fixed per-packet cost of encapsulation (tun + context switch), µs.
+    pub encap_us: f64,
+    /// Fixed per-packet cost of decapsulation, µs.
+    pub decap_us: f64,
+    /// Cipher+HMAC throughput cost, µs per KB of payload.
+    pub crypto_us_per_kb: f64,
+}
+
+impl Default for TunnelCost {
+    fn default() -> Self {
+        // Calibrated to the paper's measured overhead (see DESIGN.md §5):
+        // ~175 µs fixed per direction -> ~350 µs RTT fixed.
+        Self { encap_us: 90.0, decap_us: 85.0, crypto_us_per_kb: 6.0 }
+    }
+}
+
+impl TunnelCost {
+    /// Processing delay for one direction, µs.
+    pub fn one_way_us(&self, payload_bytes: u32) -> f64 {
+        self.encap_us + self.decap_us + self.crypto_us_per_kb * payload_bytes as f64 / 1024.0
+    }
+}
+
+/// One end of an established tunnel (client side).
+#[derive(Debug, Clone)]
+pub struct TunnelEndpoint {
+    /// The client host device carrying this tunnel.
+    pub host: DeviceId,
+    /// The virtual subnet address of this endpoint (for display only).
+    pub vpn_addr: String,
+    pub cost: TunnelCost,
+    pub established: bool,
+}
+
+impl TunnelEndpoint {
+    pub fn new(host: DeviceId, vpn_addr: &str, cost: TunnelCost) -> Self {
+        Self { host, vpn_addr: vpn_addr.to_string(), cost, established: true }
+    }
+
+    /// One-way delay (µs) for `packet` from this client host to the server
+    /// through the tunnel: physical path of the *encapsulated* frame plus
+    /// tunnel processing.  `None` if disconnected.
+    pub fn one_way_to_server_us(
+        &self,
+        net: &Network,
+        server: DeviceId,
+        packet: &Packet,
+        rng: &mut SplitMix64,
+    ) -> Option<f64> {
+        if !self.established {
+            return None;
+        }
+        let encapped = packet.clone().push_layer(Layer::Vpn);
+        let wire = net.sample_one_way(self.host, server, encapped.wire_bytes(), rng)? as f64 / 1e3;
+        Some(wire + self.cost.one_way_us(packet.wire_bytes()))
+    }
+
+    /// Same cost from server to this client (symmetric model).
+    pub fn one_way_from_server_us(
+        &self,
+        net: &Network,
+        server: DeviceId,
+        packet: &Packet,
+        rng: &mut SplitMix64,
+    ) -> Option<f64> {
+        self.one_way_to_server_us(net, server, packet, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::topology::LinkProfile;
+
+    fn net() -> (Network, DeviceId, DeviceId) {
+        let mut n = Network::new();
+        n.jitter_sigma_us = 0.0;
+        let srv = n.add_host("server", 50.0);
+        let sw = n.add_switch("sw", 20.0);
+        let host = n.add_host("host", 60.0);
+        n.link(srv, sw, LinkProfile::gigabit());
+        n.link(sw, host, LinkProfile::gigabit());
+        (n, srv, host)
+    }
+
+    #[test]
+    fn tunnel_adds_processing_and_header_cost() {
+        let (n, srv, host) = net();
+        let mut rng = SplitMix64::new(1);
+        let p = Packet::icmp_echo();
+        let raw = n.one_way_delay_us(host, srv, p.wire_bytes()).unwrap();
+        let ep = TunnelEndpoint::new(host, "10.8.0.2", TunnelCost::default());
+        let tun = ep.one_way_to_server_us(&n, srv, &p, &mut rng).unwrap();
+        let floor = TunnelCost::default().one_way_us(p.wire_bytes());
+        assert!(tun > raw + floor * 0.9, "tun={tun} raw={raw}");
+    }
+
+    #[test]
+    fn disconnected_tunnel_drops() {
+        let (n, srv, host) = net();
+        let mut rng = SplitMix64::new(1);
+        let mut ep = TunnelEndpoint::new(host, "10.8.0.2", TunnelCost::default());
+        ep.established = false;
+        assert!(ep.one_way_to_server_us(&n, srv, &Packet::icmp_echo(), &mut rng).is_none());
+    }
+
+    #[test]
+    fn crypto_cost_scales_with_size() {
+        let c = TunnelCost::default();
+        assert!(c.one_way_us(10_240) > c.one_way_us(102) + 50.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Workloads the paper's users run on the Gridlan.
+//!
+//! * [`ep`] — the NPB "Embarrassingly Parallel" benchmark (the paper's
+//!   Fig. 3 workload): class definitions, work accounting, verification
+//!   sums, and the splitting of a job into per-core process work;
+//! * [`montecarlo`] — Monte Carlo campaigns (§4's first example use-case);
+//! * [`sweep`] — parameter-sweep curves (§4's second example);
+//! * [`trace`] — synthetic multi-user job traces for the scheduler
+//!   ablation (A1).
+
+pub mod ep;
+pub mod montecarlo;
+pub mod npb;
+pub mod sweep;
+pub mod trace;
+
+pub use ep::{EpClass, EpJob};
+pub use montecarlo::MonteCarloCampaign;
+pub use npb::{NpbKernel, Suitability};
+pub use sweep::ParameterSweep;
+pub use trace::TraceGenerator;

@@ -1,0 +1,71 @@
+//! Monte Carlo campaigns (paper §4): "a statistical average of several
+//! simulations of the same experiment must be performed" — each replica is
+//! an independent job; the Gridlan's sweet spot.
+
+use crate::rm::script::PbsScript;
+
+/// A campaign of independent replicas.
+#[derive(Debug, Clone)]
+pub struct MonteCarloCampaign {
+    pub name: String,
+    pub replicas: u32,
+    /// Pairs of EP-equivalent work per replica (we express MC work in the
+    /// same currency the perf model speaks).
+    pub pairs_per_replica: u64,
+    pub queue: String,
+}
+
+impl MonteCarloCampaign {
+    pub fn new(name: &str, replicas: u32, pairs_per_replica: u64) -> Self {
+        Self { name: name.to_string(), replicas, pairs_per_replica, queue: "gridlan".into() }
+    }
+
+    /// One qsub script per replica, single core each (the §4 pattern).
+    pub fn scripts(&self) -> Vec<PbsScript> {
+        (0..self.replicas)
+            .map(|i| {
+                PbsScript::parse(&format!(
+                    "#PBS -N {}-r{:03}\n#PBS -q {}\n#PBS -l nodes=1:ppn=1\n./mc.x --seed {}\n",
+                    self.name, i, self.queue, i
+                ))
+                .expect("generated script parses")
+            })
+            .collect()
+    }
+
+    /// Payload string the coordinator hands the runtime for replica `i`:
+    /// an EP pair range disjoint per replica.
+    pub fn payload(&self, i: u32) -> String {
+        format!("mc:{}:{}", i as u64 * self.pairs_per_replica, self.pairs_per_replica)
+    }
+
+    pub fn total_pairs(&self) -> u64 {
+        self.replicas as u64 * self.pairs_per_replica
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripts_are_single_core_and_named() {
+        let c = MonteCarloCampaign::new("ising", 8, 1 << 20);
+        let scripts = c.scripts();
+        assert_eq!(scripts.len(), 8);
+        for (i, s) in scripts.iter().enumerate() {
+            assert_eq!(s.request.total_cores(), 1);
+            assert_eq!(s.queue.as_deref(), Some("gridlan"));
+            assert!(s.name.as_ref().unwrap().contains(&format!("r{i:03}")));
+        }
+    }
+
+    #[test]
+    fn payloads_are_disjoint_ranges() {
+        let c = MonteCarloCampaign::new("x", 3, 100);
+        assert_eq!(c.payload(0), "mc:0:100");
+        assert_eq!(c.payload(1), "mc:100:100");
+        assert_eq!(c.payload(2), "mc:200:100");
+        assert_eq!(c.total_pairs(), 300);
+    }
+}

@@ -1,0 +1,140 @@
+//! NPB suite communication-pattern models: the paper's §4/§6 suitability
+//! analysis, quantified for the rest of the NAS Parallel Benchmarks.
+//!
+//! The paper's conclusion: the Gridlan fits (a) independent computations,
+//! (b) tightly-coupled computations *within one node*, and (c) parallel
+//! computations whose interconnect time is negligible.  This module models
+//! each NPB kernel's per-iteration compute/message profile (classic
+//! published characterizations, normalized per process) and classifies it
+//! with [`crate::mpi::pattern::CommPattern`].
+
+use crate::mpi::pattern::CommPattern;
+
+/// An NPB kernel with its communication character.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NpbKernel {
+    /// Embarrassingly Parallel — no communication.
+    Ep,
+    /// Integer Sort — all-to-all key exchange every iteration.
+    Is,
+    /// Conjugate Gradient — frequent small irregular messages.
+    Cg,
+    /// 3-D FFT — all-to-all transposes of large volumes.
+    Ft,
+    /// Multigrid — nearest-neighbour halo exchanges.
+    Mg,
+    /// Block tridiagonal solver — structured medium messages.
+    Bt,
+}
+
+impl NpbKernel {
+    pub fn all() -> [NpbKernel; 6] {
+        [NpbKernel::Ep, NpbKernel::Is, NpbKernel::Cg, NpbKernel::Ft, NpbKernel::Mg, NpbKernel::Bt]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NpbKernel::Ep => "EP",
+            NpbKernel::Is => "IS",
+            NpbKernel::Cg => "CG",
+            NpbKernel::Ft => "FT",
+            NpbKernel::Mg => "MG",
+            NpbKernel::Bt => "BT",
+        }
+    }
+
+    /// Per-iteration, per-process profile at class-A-like scale on ~8
+    /// processes (compute µs, messages/iter, bytes/message).  Values are
+    /// order-of-magnitude characterizations from the NPB literature —
+    /// what matters for the §4 analysis is their *ratios*.
+    pub fn pattern(self) -> CommPattern {
+        match self {
+            NpbKernel::Ep => CommPattern { compute_us: 1.0e6, msgs_per_iter: 0.0, msg_bytes: 0 },
+            NpbKernel::Is => CommPattern { compute_us: 9_000.0, msgs_per_iter: 8.0, msg_bytes: 2_000_000 },
+            NpbKernel::Cg => CommPattern { compute_us: 3_500.0, msgs_per_iter: 24.0, msg_bytes: 16_000 },
+            NpbKernel::Ft => CommPattern { compute_us: 50_000.0, msgs_per_iter: 8.0, msg_bytes: 4_000_000 },
+            NpbKernel::Mg => CommPattern { compute_us: 8_000.0, msgs_per_iter: 12.0, msg_bytes: 16_000 },
+            NpbKernel::Bt => CommPattern { compute_us: 30_000.0, msgs_per_iter: 12.0, msg_bytes: 160_000 },
+        }
+    }
+
+    /// The paper's three-way verdict for a given interconnect.
+    pub fn verdict(self, latency_us: f64, us_per_byte: f64) -> Suitability {
+        let eff = self.pattern().efficiency(latency_us, us_per_byte);
+        if eff >= 0.95 {
+            Suitability::Ideal
+        } else if eff >= 0.70 {
+            Suitability::UserJudgement
+        } else {
+            Suitability::SingleNodeOnly
+        }
+    }
+}
+
+/// Where a job should run on the Gridlan (paper §6's three cases).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Suitability {
+    /// Scatter freely across nodes.
+    Ideal,
+    /// The §4 "intermediate case": user decides (e.g. 70/30).
+    UserJudgement,
+    /// Keep all processes inside one node (case b of the conclusion).
+    SingleNodeOnly,
+}
+
+/// Gridlan node-to-node interconnect figures (measured in M1/T2):
+/// ~1400 µs RTT latency per message, gigabit wire underneath + VPN crypto.
+pub const GRIDLAN_LAT_US: f64 = 1400.0;
+pub const GRIDLAN_US_PER_BYTE: f64 = 0.014;
+
+/// Conventional cluster interconnect for comparison.
+pub const CLUSTER_LAT_US: f64 = 50.0;
+pub const CLUSTER_US_PER_BYTE: f64 = 0.008;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ep_is_ideal_everywhere() {
+        assert_eq!(NpbKernel::Ep.verdict(GRIDLAN_LAT_US, GRIDLAN_US_PER_BYTE), Suitability::Ideal);
+        assert_eq!(NpbKernel::Ep.verdict(CLUSTER_LAT_US, CLUSTER_US_PER_BYTE), Suitability::Ideal);
+    }
+
+    #[test]
+    fn communication_heavy_kernels_stay_single_node_on_gridlan() {
+        for k in [NpbKernel::Is, NpbKernel::Cg] {
+            assert_eq!(
+                k.verdict(GRIDLAN_LAT_US, GRIDLAN_US_PER_BYTE),
+                Suitability::SingleNodeOnly,
+                "{}",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_rescues_most_kernels() {
+        // The same kernels are fine (or at least user-judgement) on a
+        // proper cluster interconnect — the paper's point that this
+        // analysis "should be performed regardless of the cluster".
+        for k in NpbKernel::all() {
+            let grid = k.pattern().efficiency(GRIDLAN_LAT_US, GRIDLAN_US_PER_BYTE);
+            let clus = k.pattern().efficiency(CLUSTER_LAT_US, CLUSTER_US_PER_BYTE);
+            assert!(clus >= grid, "{}: cluster {clus} < gridlan {grid}", k.name());
+        }
+        assert_ne!(
+            NpbKernel::Mg.verdict(CLUSTER_LAT_US, CLUSTER_US_PER_BYTE),
+            Suitability::SingleNodeOnly
+        );
+    }
+
+    #[test]
+    fn verdicts_monotone_in_latency() {
+        for k in NpbKernel::all() {
+            let lo = k.pattern().efficiency(10.0, 0.001);
+            let hi = k.pattern().efficiency(10_000.0, 0.02);
+            assert!(lo >= hi, "{}", k.name());
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Parameter sweeps (paper §4): "the goal of the calculation is to
+//! determine a curve from some simulation test, and each point of the
+//! curve is independently obtained from other points using different
+//! simulation parameters."
+
+use crate::rm::script::PbsScript;
+
+/// A 1-D parameter sweep producing one curve.
+#[derive(Debug, Clone)]
+pub struct ParameterSweep {
+    pub name: String,
+    pub param: String,
+    pub values: Vec<f64>,
+    /// EP-equivalent pairs of work per point; work may vary per point.
+    pub pairs_per_point: Vec<u64>,
+    pub cores_per_point: u32,
+    pub queue: String,
+}
+
+impl ParameterSweep {
+    /// Uniform-cost sweep over [lo, hi] with `n` points.
+    pub fn linspace(name: &str, param: &str, lo: f64, hi: f64, n: usize, pairs: u64) -> Self {
+        assert!(n >= 2);
+        let values = (0..n)
+            .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+            .collect();
+        Self {
+            name: name.to_string(),
+            param: param.to_string(),
+            values,
+            pairs_per_point: vec![pairs; n],
+            cores_per_point: 1,
+            queue: "gridlan".into(),
+        }
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn scripts(&self) -> Vec<PbsScript> {
+        self.values
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                PbsScript::parse(&format!(
+                    "#PBS -N {}-p{:03}\n#PBS -q {}\n#PBS -l nodes=1:ppn={}\n./sim.x --{}={}\n",
+                    self.name, i, self.queue, self.cores_per_point, self.param, v
+                ))
+                .expect("generated script parses")
+            })
+            .collect()
+    }
+
+    /// Payload for point `i` (EP pair range, per-point size).
+    pub fn payload(&self, i: usize) -> String {
+        let offset: u64 = self.pairs_per_point[..i].iter().sum();
+        format!("sweep:{}:{}", offset, self.pairs_per_point[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linspace_endpoints() {
+        let s = ParameterSweep::linspace("visc", "nu", 0.1, 1.0, 10, 1 << 18);
+        assert_eq!(s.n_points(), 10);
+        assert!((s.values[0] - 0.1).abs() < 1e-12);
+        assert!((s.values[9] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scripts_embed_param_values() {
+        let s = ParameterSweep::linspace("visc", "nu", 0.0, 1.0, 3, 100);
+        let scripts = s.scripts();
+        assert_eq!(scripts.len(), 3);
+        assert!(scripts[1].commands[0].contains("--nu=0.5"));
+    }
+
+    #[test]
+    fn payloads_tile_the_work() {
+        let mut s = ParameterSweep::linspace("x", "p", 0.0, 1.0, 3, 0);
+        s.pairs_per_point = vec![10, 20, 30];
+        assert_eq!(s.payload(0), "sweep:0:10");
+        assert_eq!(s.payload(1), "sweep:10:20");
+        assert_eq!(s.payload(2), "sweep:30:30");
+    }
+}

@@ -1,0 +1,112 @@
+//! Synthetic multi-user job traces for the scheduler ablation (A1).
+//!
+//! Mimics a small lab's submission pattern: bursts of small jobs (students
+//! iterating), occasional wide jobs (someone's big run), submitted over a
+//! working day.
+
+use crate::rm::alloc::ResourceRequest;
+use crate::sim::clock::{SimTime, DUR_SEC};
+use crate::util::rng::SplitMix64;
+
+/// One synthetic submission.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceJob {
+    pub at: SimTime,
+    pub owner: String,
+    pub request: ResourceRequest,
+    /// Actual compute duration (what the workload would take on one
+    /// reference core; the perf model rescales per placement).
+    pub compute: SimTime,
+    /// The walltime the user *requested* (over-estimate, like real users).
+    pub walltime: SimTime,
+}
+
+/// Trace generator.
+#[derive(Debug, Clone)]
+pub struct TraceGenerator {
+    pub users: u32,
+    pub horizon: SimTime,
+    /// Mean inter-arrival per user.
+    pub mean_gap: SimTime,
+    /// P(wide job) vs small job.
+    pub wide_fraction: f64,
+}
+
+impl TraceGenerator {
+    pub fn lab_day() -> Self {
+        Self {
+            users: 5,
+            horizon: 8 * 3600 * DUR_SEC,
+            mean_gap: 1800 * DUR_SEC,
+            wide_fraction: 0.15,
+        }
+    }
+
+    pub fn generate(&self, rng: &mut SplitMix64) -> Vec<TraceJob> {
+        let mut jobs = Vec::new();
+        for u in 0..self.users {
+            let mut t: SimTime = (rng.next_f64() * self.mean_gap as f64) as SimTime;
+            while t < self.horizon {
+                let wide = rng.next_f64() < self.wide_fraction;
+                let (request, compute_secs) = if wide {
+                    (
+                        ResourceRequest { nodes: 2 + rng.gen_range(3) as u32, ppn: 4 },
+                        1200.0 + rng.next_f64() * 2400.0,
+                    )
+                } else {
+                    (
+                        ResourceRequest { nodes: 1, ppn: 1 + rng.gen_range(4) as u32 },
+                        120.0 + rng.next_f64() * 900.0,
+                    )
+                };
+                let compute = (compute_secs * DUR_SEC as f64) as SimTime;
+                // Users over-request walltime 1.5-4x.
+                let walltime = (compute as f64 * (1.5 + 2.5 * rng.next_f64())) as SimTime;
+                jobs.push(TraceJob {
+                    at: t,
+                    owner: format!("user{u:02}"),
+                    request,
+                    compute,
+                    walltime,
+                });
+                t += (rng.next_f64() * 2.0 * self.mean_gap as f64) as SimTime + DUR_SEC;
+            }
+        }
+        jobs.sort_by_key(|j| j.at);
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_sorted() {
+        let gen = TraceGenerator::lab_day();
+        let a = gen.generate(&mut SplitMix64::new(5));
+        let b = gen.generate(&mut SplitMix64::new(5));
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn jobs_within_horizon_and_sane() {
+        let gen = TraceGenerator::lab_day();
+        let jobs = gen.generate(&mut SplitMix64::new(6));
+        for j in &jobs {
+            assert!(j.at < gen.horizon);
+            assert!(j.walltime >= j.compute, "users over-estimate");
+            assert!(j.request.total_cores() >= 1);
+        }
+    }
+
+    #[test]
+    fn mix_of_wide_and_narrow() {
+        let gen = TraceGenerator { users: 20, ..TraceGenerator::lab_day() };
+        let jobs = gen.generate(&mut SplitMix64::new(7));
+        let wide = jobs.iter().filter(|j| j.request.nodes > 1).count();
+        assert!(wide > 0 && wide < jobs.len());
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration: full job lifecycles across boot, VPN, RM, monitor and the
+//! fault machinery — modules composed the way the paper's deployment is.
+
+use gridlan::config::{Config, SchedPolicy};
+use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::coordinator::scenario::{run_trace, Scenario};
+use gridlan::host::faults::FaultPlan;
+use gridlan::rm::alloc::ResourceRequest;
+use gridlan::rm::job::JobState;
+use gridlan::rm::queue::NodePool;
+use gridlan::rm::script::PbsScript;
+use gridlan::sim::clock::DUR_SEC;
+use gridlan::workload::trace::{TraceGenerator, TraceJob};
+use gridlan::util::rng::SplitMix64;
+
+fn job(at_secs: u64, nodes: u32, ppn: u32, compute_secs: u64) -> TraceJob {
+    TraceJob {
+        at: at_secs * DUR_SEC,
+        owner: "itest".into(),
+        request: ResourceRequest { nodes, ppn },
+        compute: compute_secs * DUR_SEC,
+        walltime: compute_secs * 4 * DUR_SEC,
+    }
+}
+
+#[test]
+fn paper_workflow_qsub_to_completion() {
+    // The §2.4 procedure, steps 1-4, against a booted grid.
+    let mut g = Gridlan::table1();
+    g.boot_all(0);
+    let script = PbsScript::parse(
+        "#PBS -N npb-ep\n#PBS -q gridlan\n#PBS -l nodes=4:ppn=4\n#PBS -l walltime=01:00:00\nmpirun ./ep\n",
+    )
+    .unwrap();
+    let id = g.pbs.qsub(&script, "attila", "", 0).unwrap();
+    let sched = g.scheduler();
+    let started = g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), DUR_SEC);
+    assert_eq!(started.len(), 1);
+    let alloc = g.pbs.job(id).unwrap().allocation.clone().unwrap();
+    assert_eq!(alloc.total_cores(), 16);
+    // Every allocated node is an online gridlan node.
+    for node in alloc.nodes() {
+        assert!(g.nodes[node].state.is_running());
+    }
+    g.pbs.complete(id, 0, 3000 * DUR_SEC);
+    assert!(g.pbs.job(id).unwrap().succeeded());
+}
+
+#[test]
+fn multi_queue_isolation() {
+    // The paper's "pre-existing cluster" coexistence: gridlan jobs never
+    // land on cluster nodes and vice versa.
+    let mut cfg = Config::table1();
+    cfg.cluster_partition = Some(("opteron".into(), 1, 64));
+    let mut g = Gridlan::build(cfg);
+    g.boot_all(0);
+
+    let grid_job = PbsScript::parse("#PBS -q gridlan\n#PBS -l nodes=1:ppn=8\n./a\n").unwrap();
+    let batch_job = PbsScript::parse("#PBS -q batch\n#PBS -l nodes=1:ppn=32\n./b\n").unwrap();
+    let gid = g.pbs.qsub(&grid_job, "u1", "", 0).unwrap();
+    let bid = g.pbs.qsub(&batch_job, "u2", "", 0).unwrap();
+    let sched = g.scheduler();
+    g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), 1);
+    g.pbs.schedule_cycle(NodePool::Cluster, sched.as_ref(), 1);
+    let galloc = g.pbs.job(gid).unwrap().allocation.clone().unwrap();
+    let balloc = g.pbs.job(bid).unwrap().allocation.clone().unwrap();
+    assert!(galloc.nodes().all(|n| n.starts_with('n')));
+    assert!(balloc.nodes().all(|n| n.starts_with("opteron")));
+}
+
+#[test]
+fn requeued_job_reruns_elsewhere_or_later() {
+    let mut g = Gridlan::table1();
+    g.boot_all(0);
+    let script = PbsScript::parse("#PBS -q gridlan\n#PBS -l nodes=1:ppn=6\n./x\n").unwrap();
+    let id = g.pbs.qsub(&script, "u", "", 0).unwrap();
+    let sched = g.scheduler();
+    g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), 1);
+    let first = g.pbs.job(id).unwrap().allocation.clone().unwrap();
+    let first_node = first.nodes().next().unwrap().clone();
+    // Node dies; job requeued; node stays down.
+    let victims = g.pbs.node_down(&first_node, 100 * DUR_SEC);
+    assert_eq!(victims, vec![id]);
+    assert_eq!(g.pbs.job(id).unwrap().state, JobState::Queued);
+    // Next cycle must place it on a different (online) node if one fits.
+    g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), 101 * DUR_SEC);
+    let job = g.pbs.job(id).unwrap();
+    if job.state == JobState::Running {
+        let second = job.allocation.clone().unwrap();
+        assert!(second.nodes().all(|n| *n != first_node));
+    } else {
+        // Only n01/n02 can host ppn=6; if it was n02 that died and n01 is
+        // full this would queue — but the grid is empty, so Running is the
+        // only acceptable state unless the dead node was the only fit.
+        assert!(matches!(job.state, JobState::Queued));
+        assert_eq!(first_node, "n01"); // ppn=6 fits n01 (12) and n02 (6)
+    }
+}
+
+#[test]
+fn scenario_scales_to_hundreds_of_jobs() {
+    let gen = TraceGenerator { users: 12, ..TraceGenerator::lab_day() };
+    let mut rng = SplitMix64::new(99);
+    let trace = gen.generate(&mut rng);
+    assert!(trace.len() > 80, "want a busy trace, got {}", trace.len());
+    let n = trace.len() as u64;
+    let scenario = Scenario { horizon: gen.horizon * 6, ..Default::default() };
+    let report = run_trace(Gridlan::table1(), trace, &scenario);
+    assert_eq!(report.metrics.jobs_completed + report.metrics.jobs_killed, n);
+    assert!(report.metrics.jobs_completed as f64 / n as f64 > 0.95);
+    assert!(report.events_executed > 1000);
+}
+
+#[test]
+fn backfill_not_worse_than_fifo_on_wait() {
+    let mk = |policy| {
+        let mut cfg = Config::table1();
+        cfg.sched = policy;
+        let trace = vec![
+            job(0, 3, 6, 1800), // wide head job (blocks once grid busy)
+            job(1, 1, 6, 1800),
+            job(2, 1, 1, 60),
+            job(2, 1, 1, 60),
+            job(2, 1, 1, 60),
+        ];
+        let scenario = Scenario { horizon: 6 * 3600 * DUR_SEC, ..Default::default() };
+        run_trace(Gridlan::build(cfg), trace, &scenario).metrics
+    };
+    let fifo = mk(SchedPolicy::Fifo);
+    let bf = mk(SchedPolicy::Backfill);
+    assert_eq!(fifo.jobs_completed, 5);
+    assert_eq!(bf.jobs_completed, 5);
+    assert!(
+        bf.mean_wait_secs() <= fifo.mean_wait_secs() + 1.0,
+        "backfill {} vs fifo {}",
+        bf.mean_wait_secs(),
+        fifo.mean_wait_secs()
+    );
+}
+
+#[test]
+fn survives_extreme_fault_storm() {
+    // Stress: MTBF minutes-scale — everything flaps constantly.
+    let faults = FaultPlan {
+        mtbf_power_off: 900 * DUR_SEC,
+        mtbf_net_drop: 1200 * DUR_SEC,
+        mtbf_vm_crash: 1500 * DUR_SEC,
+        mean_outage: 120 * DUR_SEC,
+    };
+    let trace: Vec<TraceJob> = (0..10).map(|i| job(i * 60, 1, 2, 300)).collect();
+    let scenario = Scenario { horizon: 12 * 3600 * DUR_SEC, faults, ..Default::default() };
+    let report = run_trace(Gridlan::table1(), trace, &scenario);
+    // No deadlock, no loss: every job eventually completes.
+    assert_eq!(report.metrics.jobs_completed, 10, "{:?}", report.metrics);
+    assert!(report.metrics.jobs_requeued > 0);
+    assert!(report.metrics.goodput() < 1.0);
+}
+
+#[test]
+fn script_folder_tracks_incomplete_jobs() {
+    let mut g = Gridlan::table1();
+    g.boot_all(0);
+    let script = PbsScript::parse("#PBS -N keep\n#PBS -q gridlan\n#PBS -l nodes=1:ppn=1\n./x\n").unwrap();
+    let id1 = g.pbs.qsub(&script, "u", "", 0).unwrap();
+    let id2 = g.pbs.qsub(&script, "u", "", 0).unwrap();
+    g.folder.register(&mut g.server_fs, id1, &script);
+    g.folder.register(&mut g.server_fs, id2, &script);
+    assert_eq!(g.folder.pending_count(), 2);
+    // id1 completes (its last command removes the script).
+    let sched = g.scheduler();
+    g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), 1);
+    g.pbs.complete(id1, 0, 100);
+    g.folder.job_completed(&mut g.server_fs, id1);
+    // id2 is still pending -> it survives in the folder for recovery.
+    let survivors = g.folder.survivors();
+    assert_eq!(survivors.len(), 1);
+    assert_eq!(survivors[0].0, id2);
+}

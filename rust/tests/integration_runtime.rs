@@ -1,0 +1,78 @@
+//! Integration: the PJRT runtime against the AOT artifacts — real compute
+//! through the whole L1→L2→HLO→runtime chain.  Skips (with a note) when
+//! artifacts are absent; `make artifacts` produces them.
+
+use gridlan::runtime::engine::EpEngine;
+use gridlan::runtime::manifest::Manifest;
+use gridlan::workload::ep::{ep_scalar, EpClass, EpJob, EpTally};
+
+fn engine() -> Option<EpEngine> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(EpEngine::load(&dir).expect("engine"))
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn every_chunk_size_matches_the_scalar_oracle() {
+    let Some(mut e) = engine() else { return };
+    let manifest = Manifest::load(&Manifest::default_dir()).unwrap();
+    for art in &manifest.artifacts {
+        let t = e.run_pairs(0, art.total_pairs).unwrap();
+        let s = ep_scalar(0, art.total_pairs);
+        assert!(
+            (t.sx - s.sx).abs() < 1e-7,
+            "{}: sx {} vs {}",
+            art.name,
+            t.sx,
+            s.sx
+        );
+        assert_eq!(t.nacc, s.nacc, "{}", art.name);
+        assert_eq!(t.q, s.q, "{}", art.name);
+    }
+}
+
+#[test]
+fn sliced_class_s_verifies_like_the_paper_fig3_protocol() {
+    // Split class S over 26 "processes" (the Fig. 3 protocol), run each
+    // slice through PJRT, merge, verify against NPB constants.
+    let Some(mut e) = engine() else { return };
+    let job = EpJob::new(EpClass::S, 26);
+    let mut total = EpTally::default();
+    for s in job.slices() {
+        total.merge(&e.run_pairs(s.pair_offset, s.pair_count).unwrap());
+    }
+    assert_eq!(total.pairs, EpClass::S.pairs());
+    assert_eq!(total.verify(EpClass::S), Some(true), "sx={} sy={} nacc={}", total.sx, total.sy, total.nacc);
+}
+
+#[test]
+fn slice_decomposition_invariant_to_proc_count() {
+    let Some(mut e) = engine() else { return };
+    // The same 1M-pair range split 1-way vs 7-way must tally identically.
+    let whole = e.run_pairs(0, 1 << 20).unwrap();
+    let mut parts = EpTally::default();
+    let job = EpJob { class: EpClass::S, n_procs: 7 };
+    let mut offset = 0u64;
+    for s in job.slices().iter().take(7) {
+        let count = (1u64 << 20) / 7 + if s.proc < ((1u64 << 20) % 7) as u32 { 1 } else { 0 };
+        parts.merge(&e.run_pairs(offset, count).unwrap());
+        offset += count;
+    }
+    assert_eq!(offset, 1 << 20);
+    assert!((whole.sx - parts.sx).abs() < 1e-7);
+    assert_eq!(whole.nacc, parts.nacc);
+}
+
+#[test]
+fn throughput_is_sane() {
+    let Some(mut e) = engine() else { return };
+    e.run_pairs(0, 1 << 18).unwrap();
+    let rate = e.measured_rate_mpairs().unwrap();
+    // CPU PJRT on vectorized f64 EP: anywhere from 1 to 1000 Mpairs/s is
+    // plausible; below 0.1 means the HLO path degenerated to scalar.
+    assert!(rate > 0.1, "suspiciously slow: {rate} Mpairs/s");
+}
