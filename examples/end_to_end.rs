@@ -5,14 +5,14 @@
 //! 3. reproduce the Fig. 3 speed-up series and its headline numbers;
 //! 4. run NPB-EP **class S for real** through the resource manager: the
 //!    job is split into 26 per-core slices exactly as Fig. 3's protocol
-//!    scatters processes, each slice executes the AOT Pallas/JAX HLO via
-//!    PJRT (L1+L2+runtime), the tallies merge, and the result is checked
-//!    against the official NPB class-S verification sums;
+//!    scatters processes, each slice executes on the active
+//!    `ComputeBackend` (scalar by default; PJRT HLO with
+//!    `--features pjrt` + artifacts), the tallies merge, and the result
+//!    is checked against the official NPB class-S verification sums;
 //! 5. report the measured host throughput and the model's extrapolation
 //!    to the paper's class-D scale.
 //!
-//! Run: `make artifacts && cargo run --release --example end_to_end`
-//! Results are recorded in EXPERIMENTS.md.
+//! Run: `cargo run --release --example end_to_end`
 
 use gridlan::bench::{fig3, mpilat, table1, table2};
 use gridlan::coordinator::gridlan::Gridlan;
@@ -60,16 +60,13 @@ fn main() {
     }
     assert!(checks.iter().all(|(_, ok)| *ok), "Fig 3 shape check failed");
 
-    // ---- 4. REAL compute: class S through the RM + PJRT ----------------
-    println!("\n== real NPB-EP class S through resource manager + PJRT ==");
-    let mut engine = match EpEngine::load_default() {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("PJRT engine unavailable ({e}); run `make artifacts`");
-            std::process::exit(2);
-        }
-    };
-    println!("artifacts loaded: {:?}", engine.chunk_names());
+    // ---- 4. REAL compute: class S through the RM + backend -------------
+    println!("\n== real NPB-EP class S through resource manager + compute backend ==");
+    let mut engine = EpEngine::auto();
+    if let Some(note) = engine.fallback_note.take() {
+        println!("note: {note}");
+    }
+    println!("compute backend: {}", engine.backend_name());
 
     // Submit one job per Gridlan core, each owning one Fig.3-style slice.
     let job = EpJob::new(EpClass::S, 26);
@@ -92,10 +89,9 @@ fn main() {
     let mut total = EpTally::default();
     for id in &ids {
         let payload = g.pbs.job(*id).unwrap().payload.clone();
-        let mut parts = payload.split(':').skip(1);
-        let offset: u64 = parts.next().unwrap().parse().unwrap();
-        let count: u64 = parts.next().unwrap().parse().unwrap();
-        let tally = engine.run_pairs(offset, count).expect("pjrt slice");
+        let (offset, count) =
+            gridlan::coordinator::scenario::parse_pair_range(&payload).expect("ep payload");
+        let tally = engine.run_pairs(offset, count).expect("backend slice");
         total.merge(&tally);
         g.pbs.complete(*id, 0, 200 * DUR_SEC);
     }
@@ -109,7 +105,11 @@ fn main() {
     assert!(verified, "class S sums drifted");
     assert_eq!(total.pairs, EpClass::S.pairs());
     let rate = engine.measured_rate_mpairs().unwrap();
-    println!("  measured PJRT throughput: {rate:.1} Mpairs/s ({} pairs via PJRT)", engine.pjrt_pairs);
+    println!(
+        "  measured backend throughput: {rate:.1} Mpairs/s ({} pairs on '{}')",
+        engine.pairs_executed(),
+        engine.backend_name()
+    );
 
     // ---- 5. extrapolate to the paper's scale ---------------------------
     let cal = Calibration::new(rate);

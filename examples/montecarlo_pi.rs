@@ -2,17 +2,19 @@
 //! EP acceptance ratio, with replicas fanned out across the Gridlan as
 //! independent single-core jobs.
 //!
-//! Each replica covers a disjoint slice of the NPB random stream; when the
-//! PJRT artifacts are present the compute is REAL (the Pallas-lowered HLO
-//! running on the CPU client), otherwise the exact scalar fallback runs.
+//! Each replica covers a disjoint slice of the NPB random stream and the
+//! compute is REAL on the active `ComputeBackend` — the pure-Rust scalar
+//! backend by default, or the PJRT HLO path in `--features pjrt` builds
+//! with artifacts present.
 //!
 //! Run: `cargo run --release --example montecarlo_pi`
 
 use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::coordinator::scenario::parse_pair_range;
 use gridlan::rm::queue::NodePool;
 use gridlan::runtime::engine::EpEngine;
 use gridlan::sim::clock::DUR_SEC;
-use gridlan::workload::ep::{ep_scalar, EpTally};
+use gridlan::workload::ep::EpTally;
 use gridlan::workload::montecarlo::MonteCarloCampaign;
 
 fn main() {
@@ -36,24 +38,18 @@ fn main() {
     let started = g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), DUR_SEC);
     println!("scheduler started {} of {} replicas immediately", started.len(), ids.len());
 
-    // Execute the replica payloads (real PJRT if artifacts exist).
-    let mut engine = EpEngine::load_default().ok();
-    match &engine {
-        Some(_) => println!("compute: REAL (PJRT artifacts)"),
-        None => println!("compute: scalar fallback (run `make artifacts` for PJRT)"),
+    // Execute the replica payloads for real on the compute backend.
+    let mut engine = EpEngine::auto();
+    if let Some(note) = engine.fallback_note.take() {
+        println!("note: {note}");
     }
+    println!("compute: REAL on the '{}' backend", engine.backend_name());
     let mut total = EpTally::default();
     for id in &ids {
         let payload = g.pbs.job(*id).unwrap().payload.clone();
         // payload = "mc:<offset>:<count>"
-        let mut parts = payload.split(':').skip(1);
-        let offset: u64 = parts.next().unwrap().parse().unwrap();
-        let count: u64 = parts.next().unwrap().parse().unwrap();
-        let tally = match engine.as_mut() {
-            Some(e) => e.run_pairs(offset, count).expect("pjrt run"),
-            None => ep_scalar(offset, count),
-        };
-        total.merge(&tally);
+        let (offset, count) = parse_pair_range(&payload).expect("mc payload");
+        total.merge(&engine.run_pairs(offset, count).expect("backend run"));
     }
 
     // π/4 = P(x²+y² ≤ 1) for uniform pairs on (-1,1)².

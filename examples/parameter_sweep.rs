@@ -9,7 +9,7 @@
 //! Run: `cargo run --release --example parameter_sweep`
 
 use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::coordinator::scenario::{run_trace, Scenario};
+use gridlan::coordinator::scenario::{parse_pair_range, run_trace, Scenario};
 use gridlan::rm::alloc::ResourceRequest;
 use gridlan::sim::clock::DUR_SEC;
 use gridlan::util::table::{secs, Align, Table};
@@ -49,9 +49,7 @@ fn main() {
         .align(&[Align::Right, Align::Right, Align::Right]);
     for (i, &gamma) in sweep.values.iter().enumerate() {
         let payload = sweep.payload(i);
-        let mut parts = payload.split(':').skip(1);
-        let offset: u64 = parts.next().unwrap().parse().unwrap();
-        let count: u64 = parts.next().unwrap().parse().unwrap();
+        let (offset, count) = parse_pair_range(&payload).expect("sweep payload");
         let tally = ep_scalar(offset, count);
         // Lorentzian response + small MC jitter from the tally.
         let jitter = (tally.sx / tally.nacc.max(1) as f64) * 0.05;

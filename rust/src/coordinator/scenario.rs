@@ -15,9 +15,11 @@ use crate::rm::job::JobId;
 use crate::rm::mom::Mom;
 use crate::rm::queue::NodePool;
 use crate::rm::script::PbsScript;
+use crate::runtime::engine::EpEngine;
 use crate::sim::clock::{SimTime, DUR_SEC};
 use crate::sim::Simulator;
 use crate::vm::node::NodeState;
+use crate::workload::ep::{EpClass, EpJob, EpSlice, EpTally};
 use crate::workload::trace::TraceJob;
 use std::collections::BTreeMap;
 
@@ -128,6 +130,85 @@ pub fn run_trace(mut g: Gridlan, trace: Vec<TraceJob>, scenario: &Scenario) -> S
         events_executed: sim.executed(),
         final_time: sim.now(),
     }
+}
+
+// ------------------------------------------------------ real EP compute
+
+/// Run a set of EP slices as single-core jobs through the resource
+/// manager, executing each slice's pair range for REAL on the engine's
+/// [`crate::runtime::backend::ComputeBackend`].  The grid must be booted
+/// (`Gridlan::boot_all` or a scenario) or the scheduler will stall.
+///
+/// Slices are submitted with `ep:<offset>:<count>` payloads, scheduled in
+/// as many cycles as the pool width requires, executed, and completed —
+/// the paper's Fig. 3 scatter protocol with the compute payload attached.
+pub fn run_ep_slices(
+    g: &mut Gridlan,
+    engine: &mut EpEngine,
+    slices: &[EpSlice],
+    now: SimTime,
+) -> Result<EpTally, String> {
+    let mut ids = Vec::with_capacity(slices.len());
+    for s in slices {
+        let script = PbsScript::parse(&format!(
+            "#PBS -N ep-slice-{:03}\n#PBS -q gridlan\n#PBS -l nodes=1:ppn=1\n./ep.x\n",
+            s.proc
+        ))
+        .map_err(|e| e.to_string())?;
+        let payload = format!("ep:{}:{}", s.pair_offset, s.pair_count);
+        let id = g.pbs.qsub(&script, "gridlan", &payload, now).map_err(|e| e.to_string())?;
+        ids.push(id);
+    }
+    let sched = g.scheduler();
+    let mut total = EpTally::default();
+    let mut done = 0usize;
+    let mut t = now;
+    while done < ids.len() {
+        t += DUR_SEC;
+        let started = g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), t);
+        if started.is_empty() {
+            return Err(format!(
+                "scheduler stalled with {} of {} slices unplaced (is the grid booted?)",
+                ids.len() - done,
+                ids.len()
+            ));
+        }
+        for (id, _alloc) in started {
+            let payload = g.pbs.job(id).ok_or("scheduled job vanished")?.payload.clone();
+            let (offset, count) =
+                parse_pair_range(&payload).ok_or_else(|| format!("bad payload '{payload}'"))?;
+            total.merge(&engine.run_pairs(offset, count)?);
+            t += DUR_SEC;
+            g.pbs.complete(id, 0, t);
+            done += 1;
+        }
+    }
+    Ok(total)
+}
+
+/// [`run_ep_slices`] for a whole NPB class split `n_procs` ways (the
+/// Fig. 3 protocol: class S over 26 single-core processes).
+pub fn run_ep_job(
+    g: &mut Gridlan,
+    engine: &mut EpEngine,
+    class: EpClass,
+    n_procs: u32,
+    now: SimTime,
+) -> Result<EpTally, String> {
+    run_ep_slices(g, engine, &EpJob::new(class, n_procs).slices(), now)
+}
+
+/// Parse an `ep:<offset>:<count>` / `mc:...` / `sweep:...` payload into
+/// its pair range.
+pub fn parse_pair_range(payload: &str) -> Option<(u64, u64)> {
+    let mut parts = payload.split(':');
+    let _tag = parts.next()?;
+    let offset = parts.next()?.parse().ok()?;
+    let count = parts.next()?.parse().ok()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((offset, count))
 }
 
 // ---------------------------------------------------------------- events
@@ -449,6 +530,61 @@ mod tests {
         assert!(report.metrics.faults > 0);
         assert!(report.metrics.watchdog_restarts > 0, "watchdog never fired");
         assert_eq!(report.metrics.jobs_completed, 8);
+    }
+
+    #[test]
+    fn ep_slices_through_rm_match_the_oracle() {
+        // Real compute through qsub -> schedule -> backend -> complete:
+        // the merged tally equals the scalar oracle over the union range.
+        let mut g = Gridlan::build(Config::table1());
+        g.boot_all(0);
+        let mut engine = EpEngine::scalar();
+        let slices: Vec<EpSlice> = (0..4)
+            .map(|i| EpSlice { proc: i, pair_offset: i as u64 * 50_000, pair_count: 50_000 })
+            .collect();
+        let total = run_ep_slices(&mut g, &mut engine, &slices, 0).unwrap();
+        let oracle = crate::workload::ep::ep_scalar(0, 200_000);
+        assert_eq!(total.nacc, oracle.nacc);
+        assert_eq!(total.q, oracle.q);
+        assert!((total.sx - oracle.sx).abs() < 1e-7);
+        assert_eq!(engine.pairs_executed(), 200_000);
+        // Every slice ran to successful completion in the RM.
+        assert_eq!(g.pbs.jobs().filter(|j| j.succeeded()).count(), 4);
+    }
+
+    #[test]
+    fn ep_job_wider_than_the_pool_still_completes() {
+        // 40 single-core slices on a 26-core pool: needs multiple
+        // scheduling cycles; the merge must still be exact.
+        let mut g = Gridlan::build(Config::table1());
+        g.boot_all(0);
+        let mut engine = EpEngine::scalar();
+        let slices: Vec<EpSlice> = (0..40)
+            .map(|i| EpSlice { proc: i, pair_offset: i as u64 * 4_096, pair_count: 4_096 })
+            .collect();
+        let total = run_ep_slices(&mut g, &mut engine, &slices, 0).unwrap();
+        let oracle = crate::workload::ep::ep_scalar(0, 40 * 4_096);
+        assert_eq!(total.nacc, oracle.nacc);
+        assert_eq!(total.pairs, 40 * 4_096);
+    }
+
+    #[test]
+    fn unbooted_grid_reports_a_stall() {
+        let mut g = Gridlan::build(Config::table1());
+        let mut engine = EpEngine::scalar();
+        let slices = [EpSlice { proc: 0, pair_offset: 0, pair_count: 1024 }];
+        let err = run_ep_slices(&mut g, &mut engine, &slices, 0).unwrap_err();
+        assert!(err.contains("stalled"), "{err}");
+    }
+
+    #[test]
+    fn pair_range_payloads_parse() {
+        assert_eq!(parse_pair_range("ep:0:1024"), Some((0, 1024)));
+        assert_eq!(parse_pair_range("mc:65536:131072"), Some((65536, 131072)));
+        assert_eq!(parse_pair_range("sweep:10:20"), Some((10, 20)));
+        assert_eq!(parse_pair_range("trace:5"), None);
+        assert_eq!(parse_pair_range("ep:1:2:3"), None);
+        assert_eq!(parse_pair_range("ep:x:2"), None);
     }
 
     #[test]

@@ -7,10 +7,13 @@
 //! Architecture (see DESIGN.md):
 //! * **L3 (this crate)** — the Gridlan coordinator and every substrate it
 //!   needs, on a deterministic discrete-event simulation;
-//! * **L2/L1 (python, build-time only)** — the NPB-EP compute payload as a
-//!   JAX graph wrapping a Pallas kernel, AOT-lowered to HLO text;
-//! * **runtime** — loads the HLO artifacts via PJRT (`xla` crate) and runs
-//!   real EP chunks from simulated jobs.
+//! * **runtime** — real EP compute for simulated jobs behind the
+//!   [`runtime::backend::ComputeBackend`] trait: the default pure-Rust
+//!   scalar backend (zero external dependencies; what CI runs), or the
+//!   optional PJRT artifact path (`--features pjrt`);
+//! * **L2/L1 (python, build-time only, optional)** — the NPB-EP compute
+//!   payload as a JAX graph wrapping a Pallas kernel, AOT-lowered to HLO
+//!   text for the PJRT backend.
 
 pub mod bench;
 pub mod boot;

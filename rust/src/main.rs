@@ -9,7 +9,8 @@
 //! gridlan bench fig3 [--runs N] [--class D]
 //! gridlan boot                           # per-node PXE boot plans
 //! gridlan demo                           # qsub/qstat walkthrough
-//! gridlan ep --pairs N [--offset K]      # run REAL EP via PJRT artifacts
+//! gridlan ep --pairs N [--offset K]      # run REAL EP on the compute backend
+//! gridlan ep --class S --rm [--procs N]  # ... through the resource manager
 //! gridlan trace [--sched fifo|backfill] [--faults X]
 //! ```
 //!
@@ -18,7 +19,7 @@
 use gridlan::bench;
 use gridlan::config::{Config, SchedPolicy};
 use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::coordinator::scenario::{run_trace, Scenario};
+use gridlan::coordinator::scenario::{run_ep_job, run_trace, Scenario};
 use gridlan::host::faults::FaultPlan;
 use gridlan::perf::speedmodel::GridlanPool;
 use gridlan::rm::script::PbsScript;
@@ -166,22 +167,44 @@ fn demo_cmd(args: &[String]) -> i32 {
 }
 
 fn ep_cmd(args: &[String]) -> i32 {
-    let pairs = match (opt(args, "--pairs"), opt(args, "--class")) {
+    let class = opt(args, "--class").and_then(|c| EpClass::from_name(&c));
+    let pairs = match (opt(args, "--pairs"), class) {
         (Some(p), _) => p.parse().unwrap_or(1 << 16),
-        (None, Some(c)) => EpClass::from_name(&c).map(|c| c.pairs()).unwrap_or(1 << 16),
+        (None, Some(c)) => c.pairs(),
         _ => 1 << 16,
     };
     let offset = opt_u64(args, "--offset", 0);
-    println!("running EP over pairs [{offset}, {}) via PJRT...", offset + pairs);
-    let mut engine = match EpEngine::load_default() {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("engine: {e}\n(run `make artifacts` first)");
-            return 2;
-        }
-    };
+    let mut engine = EpEngine::auto();
+    if let Some(note) = engine.fallback_note.take() {
+        eprintln!("note: {note}");
+    }
+
     let t0 = std::time::Instant::now();
-    match engine.run_pairs(offset, pairs) {
+    let result = if args.iter().any(|a| a == "--rm") {
+        // Through the resource manager: boot the Table-1 grid, scatter
+        // single-core slices, execute each for real (Fig. 3 protocol).
+        // (--pairs/--offset don't apply here: the class defines the range.)
+        let class = class.unwrap_or(EpClass::S);
+        let procs = opt_u64(args, "--procs", 26) as u32;
+        let mut g = Gridlan::build(load_config(args));
+        g.boot_all(0);
+        println!(
+            "dispatching class {} ({} pairs) over {procs} single-core RM jobs on the '{}' backend...",
+            class.name(),
+            class.pairs(),
+            engine.backend_name()
+        );
+        run_ep_job(&mut g, &mut engine, class, procs, 0)
+    } else {
+        println!(
+            "running EP over pairs [{offset}, {}) on the '{}' backend...",
+            offset + pairs,
+            engine.backend_name()
+        );
+        engine.run_pairs(offset, pairs)
+    };
+
+    match result {
         Ok(t) => {
             println!("sx   = {:.15e}", t.sx);
             println!("sy   = {:.15e}", t.sy);
@@ -192,12 +215,13 @@ fn ep_cmd(args: &[String]) -> i32 {
                 }
             }
             println!(
-                "wall {}  ({:.2} Mpairs/s; {} pairs via PJRT)",
+                "wall {}  ({:.2} Mpairs/s; {} pairs on '{}')",
                 secs(t0.elapsed().as_secs_f64()),
-                pairs as f64 / t0.elapsed().as_secs_f64() / 1e6,
-                engine.pjrt_pairs
+                t.pairs as f64 / t0.elapsed().as_secs_f64() / 1e6,
+                engine.pairs_executed(),
+                engine.backend_name()
             );
-            if offset == 0 && pairs == EpClass::S.pairs() {
+            if t.pairs == EpClass::S.pairs() && (offset == 0 || args.iter().any(|a| a == "--rm")) {
                 println!("class S verification: {:?}", t.verify(EpClass::S));
             }
             0
@@ -259,11 +283,12 @@ USAGE: gridlan <subcommand> [options]
   bench fig3   [--runs N] [--class S|W|A|B|C|D]
   boot                         per-node PXE/TFTP/nfsroot boot plans
   demo                         qsub/qstat end-to-end walkthrough
-  ep --pairs N | --class S     run REAL EP via the PJRT artifacts
+  ep --pairs N | --class S     run REAL EP on the compute backend
+  ep --class S --rm [--procs N]  ... as single-core jobs through the RM
   trace [--sched fifo|backfill] [--faults SCALE]
   help
 
 Common options: --config FILE (JSON deployment; default = paper Table 1)
-Env: GRIDLAN_LOG=debug|info|warn, GRIDLAN_ARTIFACTS=dir"
+Env: GRIDLAN_LOG=debug|info|warn, GRIDLAN_ARTIFACTS=dir (pjrt builds)"
     );
 }

@@ -1,0 +1,186 @@
+//! The pluggable compute backend: who actually executes EP pair ranges.
+//!
+//! The resource-management fabric (RM, scheduler, scenario runner) is
+//! decoupled from the compute payload behind [`ComputeBackend`], mirroring
+//! how grid middleware separates brokering from execution.  Two
+//! implementations exist:
+//!
+//! * [`ScalarBackend`] — pure Rust, zero external dependencies, always
+//!   available: the `workload::ep::ep_scalar` oracle run in cache-friendly
+//!   chunks.  This is the default and what CI exercises.
+//! * [`PjrtBackend`](super::pjrt::PjrtBackend) (`--features pjrt`) — the
+//!   AOT HLO artifact path; needs `make artifacts` plus the external
+//!   `xla` crate (see runtime/pjrt.rs for the gating story).
+
+use crate::workload::ep::{ep_scalar, EpTally};
+use std::time::Instant;
+
+/// An executor of EP work, identified by pair ranges in the global NPB
+/// random stream.  Implementations must be *exact*: the tally over
+/// `[offset, offset+count)` equals the scalar oracle's, bit-for-bit on the
+/// integer fields and to float round-off on the sums.
+pub trait ComputeBackend {
+    /// Short human-readable backend name ("scalar", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Execute EP over global pairs `[offset, offset + count)`.
+    fn run_pairs(&mut self, offset: u64, count: u64) -> Result<EpTally, String>;
+
+    /// Total pairs executed by this backend so far.
+    fn pairs_executed(&self) -> u64;
+
+    /// Wall time spent inside compute calls, seconds.
+    fn compute_secs(&self) -> f64;
+
+    /// Measured throughput so far (Mpairs/s); None before any run.
+    fn measured_rate_mpairs(&self) -> Option<f64> {
+        if self.compute_secs() > 0.0 && self.pairs_executed() > 0 {
+            Some(self.pairs_executed() as f64 / self.compute_secs() / 1e6)
+        } else {
+            None
+        }
+    }
+}
+
+/// Default chunk granularity for the scalar backend: large enough to
+/// amortize the jump-ahead seek, small enough to keep tallies in cache.
+pub const SCALAR_CHUNK_PAIRS: u64 = 1 << 16;
+
+/// The always-available pure-Rust backend.
+#[derive(Debug, Clone)]
+pub struct ScalarBackend {
+    chunk_pairs: u64,
+    pairs: u64,
+    secs: f64,
+}
+
+impl ScalarBackend {
+    pub fn new() -> Self {
+        Self::with_chunk(SCALAR_CHUNK_PAIRS)
+    }
+
+    /// A backend that executes in chunks of `chunk_pairs` (the tests sweep
+    /// this to prove tally merging is geometry-independent).
+    pub fn with_chunk(chunk_pairs: u64) -> Self {
+        assert!(chunk_pairs > 0, "chunk_pairs must be >= 1");
+        Self { chunk_pairs, pairs: 0, secs: 0.0 }
+    }
+
+    pub fn chunk_pairs(&self) -> u64 {
+        self.chunk_pairs
+    }
+}
+
+impl Default for ScalarBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ComputeBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn run_pairs(&mut self, offset: u64, count: u64) -> Result<EpTally, String> {
+        let t0 = Instant::now();
+        let mut tally = EpTally::default();
+        let mut at = offset;
+        let mut left = count;
+        while left > 0 {
+            let n = left.min(self.chunk_pairs);
+            tally.merge(&ep_scalar(at, n));
+            at += n;
+            left -= n;
+        }
+        self.secs += t0.elapsed().as_secs_f64();
+        self.pairs += count;
+        Ok(tally)
+    }
+
+    fn pairs_executed(&self) -> u64 {
+        self.pairs
+    }
+
+    fn compute_secs(&self) -> f64 {
+        self.secs
+    }
+}
+
+/// Build the best backend available in this build: the PJRT path when the
+/// `pjrt` feature is on AND its artifacts load, otherwise the scalar
+/// backend.  Returns the backend plus an optional note explaining a
+/// fallback (callers print it so `--features pjrt` without artifacts is
+/// loud but not fatal).
+#[cfg(feature = "pjrt")]
+pub fn default_backend() -> (Box<dyn ComputeBackend>, Option<String>) {
+    match super::pjrt::PjrtBackend::load_default() {
+        Ok(b) => (Box::new(b), None),
+        Err(e) => (
+            Box::new(ScalarBackend::new()),
+            Some(format!("pjrt backend unavailable ({e}); falling back to scalar")),
+        ),
+    }
+}
+
+/// Build the best backend available in this build (default configuration:
+/// always the scalar backend, never a note).
+#[cfg(not(feature = "pjrt"))]
+pub fn default_backend() -> (Box<dyn ComputeBackend>, Option<String>) {
+    (Box::new(ScalarBackend::new()), None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_matches_oracle_exactly() {
+        let mut b = ScalarBackend::new();
+        let t = b.run_pairs(0, 10_000).unwrap();
+        let s = ep_scalar(0, 10_000);
+        assert!((t.sx - s.sx).abs() < 1e-9);
+        assert!((t.sy - s.sy).abs() < 1e-9);
+        assert_eq!(t.q, s.q);
+        assert_eq!(t.nacc, s.nacc);
+        assert_eq!(t.pairs, 10_000);
+    }
+
+    #[test]
+    fn chunk_geometry_is_invisible() {
+        // The same range through wildly different chunkings tallies the
+        // same (integer fields exactly; sums to round-off).
+        let reference = ep_scalar(5_000, 70_001);
+        for chunk in [1u64, 7, 1 << 10, 1 << 16, 1 << 20] {
+            let mut b = ScalarBackend::with_chunk(chunk);
+            let t = b.run_pairs(5_000, 70_001).unwrap();
+            assert_eq!(t.nacc, reference.nacc, "chunk={chunk}");
+            assert_eq!(t.q, reference.q, "chunk={chunk}");
+            assert!((t.sx - reference.sx).abs() < 1e-7, "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut b = ScalarBackend::new();
+        assert!(b.measured_rate_mpairs().is_none());
+        b.run_pairs(0, 1 << 16).unwrap();
+        b.run_pairs(1 << 16, 1 << 16).unwrap();
+        assert_eq!(b.pairs_executed(), 2 << 16);
+        assert!(b.compute_secs() > 0.0);
+        assert!(b.measured_rate_mpairs().unwrap() > 0.01);
+    }
+
+    #[test]
+    fn default_backend_always_runs() {
+        let (mut b, _note) = default_backend();
+        let t = b.run_pairs(0, 2_048).unwrap();
+        assert_eq!(t.nacc, ep_scalar(0, 2_048).nacc);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk_pairs")]
+    fn zero_chunk_rejected() {
+        ScalarBackend::with_chunk(0);
+    }
+}

@@ -1,12 +1,17 @@
-//! PJRT runtime: load the AOT HLO artifacts and run real EP compute.
+//! The compute runtime: executes real EP work for simulated jobs.
 //!
-//! This is the only module that touches the `xla` crate.  Python never
-//! runs here — `make artifacts` produced HLO *text* (see aot.py for why
-//! text, not serialized protos), and this module compiles + executes it
-//! on the PJRT CPU client.
+//! The [`backend::ComputeBackend`] trait decouples the grid fabric from
+//! the compute payload.  The default [`backend::ScalarBackend`] runs the
+//! exact scalar EP oracle with zero external dependencies; the optional
+//! PJRT path (`--features pjrt` + a vendored `xla` crate) executes the
+//! AOT HLO artifacts produced by python/compile/aot.py instead.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
+pub use backend::{default_backend, ComputeBackend, ScalarBackend};
 pub use engine::EpEngine;
 pub use manifest::{ArtifactInfo, Manifest};

@@ -148,7 +148,9 @@ impl Json {
 
     // --------------------------------------------------------- serializing
 
-    /// Compact serialization.
+    /// Compact serialization.  (Deliberately an inherent method — `Json`
+    /// has no Display impl, and the call sites read naturally.)
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s, None, 0);

@@ -6,5 +6,6 @@ pub mod json;
 pub mod log;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod table;

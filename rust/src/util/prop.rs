@@ -47,8 +47,10 @@ impl Gen {
             let raw = r.get(self.replay_idx).copied().unwrap_or(0);
             self.replay_idx += 1;
             if max_exclusive == 0 { 0 } else { raw % max_exclusive }
+        } else if max_exclusive == 0 {
+            0
         } else {
-            if max_exclusive == 0 { 0 } else { self.rng.gen_range(max_exclusive) }
+            self.rng.gen_range(max_exclusive)
         };
         self.draws.push(v);
         v

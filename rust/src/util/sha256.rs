@@ -1,0 +1,162 @@
+//! Self-contained SHA-256 and HMAC-SHA256 (FIPS 180-4 / RFC 2104).
+//!
+//! The offline vendor set carries no crypto crates, and the VPN PKI
+//! ([`crate::vpn::pki`]) needs a real keyed MAC for its trust relation.
+//! This is the straightforward single-block-at-a-time implementation —
+//! tags are 32 bytes and verified against the standard test vectors.
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+/// SHA-256 digest of `data`.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = H0;
+    // Padding: 0x80, zeros to 56 mod 64, then the bit length big-endian.
+    let bitlen = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+
+    let mut w = [0u32; 64];
+    for block in msg.chunks_exact(64) {
+        for (i, word) in w.iter_mut().take(16).enumerate() {
+            *word = u32::from_be_bytes(block[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16].wrapping_add(s0).wrapping_add(w[i - 7]).wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh.wrapping_add(s1).wrapping_add(ch).wrapping_add(K[i]).wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        for (state, v) in h.iter_mut().zip([a, b, c, d, e, f, g, hh]) {
+            *state = state.wrapping_add(v);
+        }
+    }
+
+    let mut out = [0u8; 32];
+    for (chunk, v) in out.chunks_exact_mut(4).zip(h) {
+        chunk.copy_from_slice(&v.to_be_bytes());
+    }
+    out
+}
+
+/// HMAC-SHA256 over the concatenation of `parts` (multi-field API so
+/// callers don't have to pre-concatenate their message fields).
+pub fn hmac_sha256(key: &[u8], parts: &[&[u8]]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut inner = Vec::with_capacity(64 + parts.iter().map(|p| p.len()).sum::<usize>());
+    for b in k {
+        inner.push(b ^ 0x36);
+    }
+    for p in parts {
+        inner.extend_from_slice(p);
+    }
+    let inner_hash = sha256(&inner);
+    let mut outer = Vec::with_capacity(96);
+    for b in k {
+        outer.push(b ^ 0x5c);
+    }
+    outer.extend_from_slice(&inner_hash);
+    sha256(&outer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn fips_vectors() {
+        assert_eq!(
+            hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(&sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(&sha256(b"The quick brown fox jumps over the lazy dog")),
+            "d7a8fbb307d7809469ca9abcb0082e4f8d5651e46d3cdb762d02d0bf37c9e592"
+        );
+    }
+
+    #[test]
+    fn padding_boundaries() {
+        // 55/56/64 bytes straddle the length-field block boundary.
+        assert_eq!(
+            hex(&sha256(&[b'x'; 55])),
+            "d5e285683cd4efc02d021a5c62014694958901005d6f71e89e0989fac77e4072"
+        );
+        assert_eq!(
+            hex(&sha256(&[b'x'; 56])),
+            "04c26261370ee7541549d16dee320c723e3fd14671e66a099afe0a377c16888e"
+        );
+        assert_eq!(
+            hex(&sha256(&[b'x'; 64])),
+            "7ce100971f64e7001e8fe5a51973ecdfe1ced42befe7ee8d5fd6219506b5393c"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case_1() {
+        // RFC 4231 test case 1: key = 20x 0x0b, data = "Hi There".
+        let tag = hmac_sha256(&[0x0b; 20], &[b"Hi There"]);
+        assert_eq!(
+            hex(&tag),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn hmac_long_key_and_split_parts() {
+        // Keys longer than the block size are pre-hashed.
+        let long = vec![b'k'; 100];
+        let t1 = hmac_sha256(&long, &[b"mm", b"mm"]);
+        let t2 = hmac_sha256(&long, &[b"mmmm"]);
+        assert_eq!(t1, t2);
+        // Keyedness: different keys give different tags.
+        assert_ne!(hmac_sha256(b"a", &[b"x"]), hmac_sha256(b"b", &[b"x"]));
+        // Message sensitivity.
+        assert_ne!(hmac_sha256(b"k", &[b"x"]), hmac_sha256(b"k", &[b"y"]));
+    }
+}

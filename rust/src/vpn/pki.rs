@@ -8,11 +8,8 @@
 //! Verification recomputes the tag — no client can mint a key without the
 //! CA secret, and revocation is by serial.
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
+use crate::util::sha256::hmac_sha256;
 use std::collections::{HashMap, HashSet};
-
-type HmacSha256 = Hmac<Sha256>;
 
 /// A key issued to one client.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -44,13 +41,7 @@ impl Pki {
     }
 
     fn tag_for(&self, client: &str, serial: u64) -> [u8; 32] {
-        let mut mac = HmacSha256::new_from_slice(&self.ca_secret).expect("hmac key");
-        mac.update(client.as_bytes());
-        mac.update(&serial.to_le_bytes());
-        let out = mac.finalize().into_bytes();
-        let mut tag = [0u8; 32];
-        tag.copy_from_slice(&out);
-        tag
+        hmac_sha256(&self.ca_secret, &[client.as_bytes(), &serial.to_le_bytes()])
     }
 
     /// Administrator operation: issue (or re-issue) a key for a client.

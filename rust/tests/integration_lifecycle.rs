@@ -3,13 +3,15 @@
 
 use gridlan::config::{Config, SchedPolicy};
 use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::coordinator::scenario::{run_trace, Scenario};
+use gridlan::coordinator::scenario::{run_ep_slices, run_trace, Scenario};
 use gridlan::host::faults::FaultPlan;
 use gridlan::rm::alloc::ResourceRequest;
 use gridlan::rm::job::JobState;
 use gridlan::rm::queue::NodePool;
 use gridlan::rm::script::PbsScript;
+use gridlan::runtime::engine::EpEngine;
 use gridlan::sim::clock::DUR_SEC;
+use gridlan::workload::ep::{ep_scalar, EpSlice};
 use gridlan::workload::trace::{TraceGenerator, TraceJob};
 use gridlan::util::rng::SplitMix64;
 
@@ -44,6 +46,28 @@ fn paper_workflow_qsub_to_completion() {
     }
     g.pbs.complete(id, 0, 3000 * DUR_SEC);
     assert!(g.pbs.job(id).unwrap().succeeded());
+}
+
+#[test]
+fn qsub_slices_run_real_compute_through_the_backend() {
+    // The full §2.4 user journey with an actual payload: EP slices are
+    // qsub'd, scheduled onto booted nodes, and each slice's pair range is
+    // executed for REAL on the scalar `ComputeBackend` before completion.
+    let mut g = Gridlan::table1();
+    g.boot_all(0);
+    let mut engine = EpEngine::scalar();
+    let slices: Vec<EpSlice> = (0..8u32)
+        .map(|p| EpSlice { proc: p, pair_offset: p as u64 * 32_768, pair_count: 32_768 })
+        .collect();
+    let total = run_ep_slices(&mut g, &mut engine, &slices, 0).unwrap();
+    let oracle = ep_scalar(0, 8 * 32_768);
+    assert_eq!(total.pairs, 8 * 32_768);
+    assert_eq!(total.nacc, oracle.nacc, "backend compute drifted from the oracle");
+    assert_eq!(total.q, oracle.q);
+    assert!((total.sx - oracle.sx).abs() < 1e-7);
+    assert_eq!(engine.pairs_executed(), 8 * 32_768, "all compute went through the backend");
+    // Every slice job completed successfully in the resource manager.
+    assert_eq!(g.pbs.jobs().filter(|j| j.succeeded()).count(), 8);
 }
 
 #[test]

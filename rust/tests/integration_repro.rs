@@ -4,8 +4,10 @@
 use gridlan::bench::{fig3, mpilat, table1, table2};
 use gridlan::config::Config;
 use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::perf::calibrate::Calibration;
 use gridlan::perf::speedmodel::{ComparisonServer, GridlanPool};
-use gridlan::workload::ep::EpClass;
+use gridlan::runtime::engine::EpEngine;
+use gridlan::workload::ep::{ep_scalar, EpClass};
 
 #[test]
 fn t1_inventory_reproduces_table1() {
@@ -97,6 +99,45 @@ fn f3_gridlan_wins_at_every_core_count_up_to_26() {
         let s = server.elapsed_secs(EpClass::D.pairs(), n);
         assert!(worst < s, "n={n}: gridlan worst {worst:.0}s vs server {s:.0}s");
     }
+}
+
+#[test]
+fn f3_protocol_runs_real_compute_on_the_backend() {
+    // The Fig. 3 measurement protocol with REAL compute: scatter a pair
+    // range over Fig. 3-style slices, execute each on the scalar
+    // `ComputeBackend`, and check the merged physics against the oracle.
+    let mut engine = EpEngine::scalar();
+    let total_pairs = 1u64 << 18;
+    let n_slices = 13u64;
+    let mut merged = gridlan::workload::ep::EpTally::default();
+    for p in 0..n_slices {
+        let base = total_pairs / n_slices;
+        let count = base + if p < total_pairs % n_slices { 1 } else { 0 };
+        let offset = p * base + p.min(total_pairs % n_slices);
+        merged.merge(&engine.run_pairs(offset, count).unwrap());
+    }
+    let oracle = ep_scalar(0, total_pairs);
+    assert_eq!(merged.pairs, total_pairs);
+    assert_eq!(merged.nacc, oracle.nacc);
+    assert_eq!(merged.q, oracle.q);
+    assert!((merged.sx - oracle.sx).abs() < 1e-7);
+    // Acceptance ratio ~ pi/4, like the paper's EP verification.
+    let rate = merged.nacc as f64 / merged.pairs as f64;
+    assert!((rate - std::f64::consts::FRAC_PI_4).abs() < 0.01, "rate={rate}");
+}
+
+#[test]
+fn measured_backend_rate_calibrates_the_speed_model() {
+    // The perf model's calibration hook accepts a real measured rate from
+    // the backend (what end_to_end does to extrapolate to class D).
+    let mut engine = EpEngine::scalar();
+    engine.run_pairs(0, 1 << 18).unwrap();
+    let rate = engine.measured_rate_mpairs().unwrap();
+    let cal = Calibration::new(rate);
+    let secs = cal.secs_for(EpClass::D.pairs());
+    assert!(secs > 0.0 && secs.is_finite());
+    // Linear consistency: double the pairs, double the predicted time.
+    assert!((cal.secs_for(2 << 20) / cal.secs_for(1 << 20) - 2.0).abs() < 1e-9);
 }
 
 #[test]

@@ -1,0 +1,231 @@
+//! Integration: resource-manager behaviour across queue, scheduler, and
+//! job-lifecycle layers — FIFO vs backfill ordering, submission-time
+//! rejection against pool capacity, and job-state transitions.
+
+use gridlan::rm::alloc::{match_request, Allocation, FreeNode, ResourceRequest};
+use gridlan::rm::job::{JobId, JobState};
+use gridlan::rm::queue::{NodePool, Queue};
+use gridlan::rm::sched::{BackfillScheduler, FifoScheduler, PendingJob, RunningJob, Scheduler};
+use gridlan::rm::script::PbsScript;
+use gridlan::rm::server::{NodePower, PbsServer};
+use gridlan::sim::clock::DUR_SEC;
+
+fn grid_server() -> PbsServer {
+    let mut s = PbsServer::new();
+    for (name, cores) in [("n01", 12), ("n02", 6), ("n03", 4), ("n04", 4)] {
+        s.register_node(name, cores, NodePool::Gridlan);
+        s.node_up(name);
+    }
+    s
+}
+
+fn script(nodes: u32, ppn: u32, wall: &str) -> PbsScript {
+    PbsScript::parse(&format!(
+        "#PBS -q gridlan\n#PBS -l nodes={nodes}:ppn={ppn},walltime={wall}\n./job.x\n"
+    ))
+    .unwrap()
+}
+
+// ------------------------------------------------- FIFO vs backfill order
+
+#[test]
+fn fifo_blocks_at_head_where_backfill_overtakes() {
+    // One running wide job; queue = [wider-than-free head, small shortie].
+    // FIFO starts nothing; backfill starts exactly the shortie, and only
+    // because it finishes before the head's shadow time.
+    let running = vec![RunningJob {
+        id: JobId(90),
+        allocation: Allocation { cores: [("n01".to_string(), 10u32)].into_iter().collect() },
+        expected_end: 7_200 * DUR_SEC,
+    }];
+    let free = vec![
+        FreeNode { name: "n01".into(), free_cores: 2 },
+        FreeNode { name: "n02".into(), free_cores: 6 },
+    ];
+    let pending = vec![
+        PendingJob {
+            id: JobId(1),
+            request: ResourceRequest { nodes: 1, ppn: 10 },
+            walltime: 3_600 * DUR_SEC,
+            queue_priority: 0,
+        },
+        PendingJob {
+            id: JobId(2),
+            request: ResourceRequest { nodes: 1, ppn: 2 },
+            walltime: 600 * DUR_SEC,
+            queue_priority: 0,
+        },
+    ];
+    let fifo = FifoScheduler.select(&pending, &free, &running, 0);
+    assert!(fifo.is_empty(), "strict FIFO must not overtake the blocked head");
+    let bf = BackfillScheduler.select(&pending, &free, &running, 0);
+    assert_eq!(bf.len(), 1);
+    assert_eq!(bf[0].0, JobId(2));
+}
+
+#[test]
+fn backfill_respects_the_head_job_reservation() {
+    // Same shape, but the backfill candidate would outlive the head's
+    // shadow start: it must NOT start.
+    let running = vec![RunningJob {
+        id: JobId(90),
+        allocation: Allocation { cores: [("n01".to_string(), 10u32)].into_iter().collect() },
+        expected_end: 300 * DUR_SEC,
+    }];
+    let free = vec![FreeNode { name: "n01".into(), free_cores: 2 }];
+    let pending = vec![
+        PendingJob {
+            id: JobId(1),
+            request: ResourceRequest { nodes: 1, ppn: 10 },
+            walltime: 3_600 * DUR_SEC,
+            queue_priority: 0,
+        },
+        PendingJob {
+            id: JobId(2),
+            request: ResourceRequest { nodes: 1, ppn: 2 },
+            walltime: 900 * DUR_SEC,
+            queue_priority: 0,
+        },
+    ];
+    let bf = BackfillScheduler.select(&pending, &free, &running, 0);
+    assert!(bf.is_empty(), "backfill must not delay the head job");
+}
+
+#[test]
+fn queue_priority_orders_the_pending_list() {
+    // Two queues on the same pool: the higher-priority queue drains first
+    // even when its jobs were submitted later.
+    let mut s = grid_server();
+    s.add_queue(Queue {
+        name: "urgent".into(),
+        pool: NodePool::Gridlan,
+        max_running: 0,
+        priority: 99,
+        enabled: true,
+    });
+    let lo = s.qsub(&script(1, 4, "01:00:00"), "u", "", 0).unwrap();
+    let mut urgent = script(1, 4, "01:00:00");
+    urgent.queue = Some("urgent".into());
+    let hi = s.qsub(&urgent, "u", "", 10).unwrap();
+    let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 20);
+    assert_eq!(d.len(), 2);
+    assert_eq!(d[0].0, hi, "urgent queue scheduled first");
+    assert_eq!(d[1].0, lo);
+}
+
+// -------------------------------------- rejection against pool capacity
+
+#[test]
+fn oversized_requests_are_rejected_at_submission() {
+    let mut s = grid_server();
+    // ppn exceeding every node: rejected even though the pool total fits.
+    let err = s.qsub(&script(1, 13, "00:10:00"), "u", "", 0).unwrap_err();
+    assert!(err.contains("ppn"), "{err}");
+    // Total cores exceeding the pool (28 > 26): rejected.
+    let err = s.qsub(&script(7, 4, "00:10:00"), "u", "", 0).unwrap_err();
+    assert!(err.contains("capacity") || err.contains("exceeds"), "{err}");
+    // Boundary: exactly the pool's widest node is accepted.
+    assert!(s.qsub(&script(1, 12, "00:10:00"), "u", "", 0).is_ok());
+    // Nothing rejected left residue in the job table.
+    assert_eq!(s.qstat().len(), 1);
+}
+
+#[test]
+fn match_request_never_splits_a_chunk_across_nodes() {
+    // nodes=1:ppn=10 with 6+6 free must fail even though 12 cores exist.
+    let free = vec![
+        FreeNode { name: "a".into(), free_cores: 6 },
+        FreeNode { name: "b".into(), free_cores: 6 },
+    ];
+    assert!(match_request(&ResourceRequest { nodes: 1, ppn: 10 }, &free).is_none());
+    // But nodes=2:ppn=5 fits, one chunk per node.
+    let a = match_request(&ResourceRequest { nodes: 2, ppn: 5 }, &free).unwrap();
+    assert_eq!(a.total_cores(), 10);
+    assert_eq!(a.node_count(), 2);
+}
+
+#[test]
+fn offline_capacity_does_not_count() {
+    let mut s = grid_server();
+    s.set_node_power("n01", NodePower::Offline);
+    // 16 cores requested; 26 registered but only 14 online.
+    let id = s.qsub(&script(4, 4, "01:00:00"), "u", "", 0).unwrap();
+    let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+    assert!(d.is_empty());
+    assert_eq!(s.job(id).unwrap().state, JobState::Queued);
+    s.node_up("n01");
+    assert_eq!(s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 2).len(), 1);
+}
+
+// --------------------------------------------------- job-state lifecycle
+
+#[test]
+fn job_states_step_through_the_torque_alphabet() {
+    let mut s = grid_server();
+    let id = s.qsub(&script(1, 4, "01:00:00"), "u", "", 100).unwrap();
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Queued);
+    assert_eq!(job.state.letter(), 'Q');
+    assert_eq!(job.submitted_at, 100);
+    assert!(job.started_at.is_none() && job.allocation.is_none());
+
+    s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 500);
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Running);
+    assert_eq!(job.started_at, Some(500));
+    assert_eq!(job.allocation.as_ref().unwrap().total_cores(), 4);
+    assert_eq!(job.wait_time(), Some(400));
+
+    s.complete(id, 0, 2_500);
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Completed);
+    assert_eq!(job.run_time(), Some(2_000));
+    assert_eq!(job.turnaround(), Some(2_400));
+    assert!(job.succeeded());
+}
+
+#[test]
+fn requeue_resets_lifecycle_and_counts() {
+    let mut s = grid_server();
+    let id = s.qsub(&script(1, 6, "01:00:00"), "u", "", 0).unwrap();
+    s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 10);
+    let node = s
+        .job(id)
+        .unwrap()
+        .allocation
+        .as_ref()
+        .unwrap()
+        .nodes()
+        .next()
+        .unwrap()
+        .clone();
+    let victims = s.node_down(&node, 50);
+    assert_eq!(victims, vec![id]);
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Queued);
+    assert_eq!(job.requeues, 1);
+    assert!(job.started_at.is_none());
+    assert!(job.allocation.is_none());
+    // A failed/killed job is never "succeeded", even once Completed.
+    s.node_up(&node);
+    s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 100);
+    s.qdel(id, 200).unwrap();
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Completed);
+    assert_eq!(job.exit_code, None);
+    assert!(!job.succeeded());
+}
+
+#[test]
+fn nonzero_exit_completes_but_does_not_succeed() {
+    let mut s = grid_server();
+    let id = s.qsub(&script(1, 2, "00:30:00"), "u", "", 0).unwrap();
+    s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+    s.complete(id, 1, 600);
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Completed);
+    assert_eq!(job.exit_code, Some(1));
+    assert!(!job.succeeded());
+    // Cores were released regardless of exit status.
+    assert_eq!(s.pool_utilization(NodePool::Gridlan).0, 0);
+}

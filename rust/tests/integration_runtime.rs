@@ -1,64 +1,60 @@
-//! Integration: the PJRT runtime against the AOT artifacts — real compute
-//! through the whole L1→L2→HLO→runtime chain.  Skips (with a note) when
-//! artifacts are absent; `make artifacts` produces them.
+//! Integration: the compute runtime end-to-end — REAL compute through the
+//! `ComputeBackend` trait, in every build.
+//!
+//! The scalar backend needs no artifacts, no Python, and no network, so
+//! nothing here skips.  (The PJRT artifact path is exercised separately
+//! under `--features pjrt`.)
 
+use gridlan::runtime::backend::{ComputeBackend, ScalarBackend};
 use gridlan::runtime::engine::EpEngine;
-use gridlan::runtime::manifest::Manifest;
 use gridlan::workload::ep::{ep_scalar, EpClass, EpJob, EpTally};
-
-fn engine() -> Option<EpEngine> {
-    let dir = Manifest::default_dir();
-    if dir.join("manifest.json").exists() {
-        Some(EpEngine::load(&dir).expect("engine"))
-    } else {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        None
-    }
-}
 
 #[test]
 fn every_chunk_size_matches_the_scalar_oracle() {
-    let Some(mut e) = engine() else { return };
-    let manifest = Manifest::load(&Manifest::default_dir()).unwrap();
-    for art in &manifest.artifacts {
-        let t = e.run_pairs(0, art.total_pairs).unwrap();
-        let s = ep_scalar(0, art.total_pairs);
-        assert!(
-            (t.sx - s.sx).abs() < 1e-7,
-            "{}: sx {} vs {}",
-            art.name,
-            t.sx,
-            s.sx
-        );
-        assert_eq!(t.nacc, s.nacc, "{}", art.name);
-        assert_eq!(t.q, s.q, "{}", art.name);
+    // The backend's chunked execution must be invisible: any chunk
+    // geometry over the same range tallies identically to the oracle.
+    let range = 150_001u64;
+    let oracle = ep_scalar(0, range);
+    for chunk in [1u64 << 10, 1 << 12, (1 << 14) + 17, 1 << 16, 1 << 18] {
+        let mut e = EpEngine::with_backend(Box::new(ScalarBackend::with_chunk(chunk)));
+        let t = e.run_pairs(0, range).unwrap();
+        assert!((t.sx - oracle.sx).abs() < 1e-7, "chunk {chunk}: sx {} vs {}", t.sx, oracle.sx);
+        assert_eq!(t.nacc, oracle.nacc, "chunk {chunk}");
+        assert_eq!(t.q, oracle.q, "chunk {chunk}");
+        assert_eq!(e.pairs_executed(), range, "chunk {chunk}");
     }
 }
 
 #[test]
 fn sliced_class_s_verifies_like_the_paper_fig3_protocol() {
     // Split class S over 26 "processes" (the Fig. 3 protocol), run each
-    // slice through PJRT, merge, verify against NPB constants.
-    let Some(mut e) = engine() else { return };
+    // slice through the backend, merge, verify against NPB constants.
+    let mut e = EpEngine::auto();
     let job = EpJob::new(EpClass::S, 26);
     let mut total = EpTally::default();
     for s in job.slices() {
         total.merge(&e.run_pairs(s.pair_offset, s.pair_count).unwrap());
     }
     assert_eq!(total.pairs, EpClass::S.pairs());
-    assert_eq!(total.verify(EpClass::S), Some(true), "sx={} sy={} nacc={}", total.sx, total.sy, total.nacc);
+    assert_eq!(
+        total.verify(EpClass::S),
+        Some(true),
+        "sx={} sy={} nacc={}",
+        total.sx,
+        total.sy,
+        total.nacc
+    );
 }
 
 #[test]
 fn slice_decomposition_invariant_to_proc_count() {
-    let Some(mut e) = engine() else { return };
     // The same 1M-pair range split 1-way vs 7-way must tally identically.
+    let mut e = EpEngine::scalar();
     let whole = e.run_pairs(0, 1 << 20).unwrap();
     let mut parts = EpTally::default();
-    let job = EpJob { class: EpClass::S, n_procs: 7 };
     let mut offset = 0u64;
-    for s in job.slices().iter().take(7) {
-        let count = (1u64 << 20) / 7 + if s.proc < ((1u64 << 20) % 7) as u32 { 1 } else { 0 };
+    for p in 0..7u64 {
+        let count = (1u64 << 20) / 7 + if p < ((1u64 << 20) % 7) { 1 } else { 0 };
         parts.merge(&e.run_pairs(offset, count).unwrap());
         offset += count;
     }
@@ -69,10 +65,36 @@ fn slice_decomposition_invariant_to_proc_count() {
 
 #[test]
 fn throughput_is_sane() {
-    let Some(mut e) = engine() else { return };
+    let mut e = EpEngine::auto();
     e.run_pairs(0, 1 << 18).unwrap();
     let rate = e.measured_rate_mpairs().unwrap();
-    // CPU PJRT on vectorized f64 EP: anywhere from 1 to 1000 Mpairs/s is
-    // plausible; below 0.1 means the HLO path degenerated to scalar.
-    assert!(rate > 0.1, "suspiciously slow: {rate} Mpairs/s");
+    // Even a debug-build scalar backend should clear 0.01 Mpairs/s; below
+    // that something degenerated (e.g. per-pair jump-ahead reseeking).
+    assert!(rate > 0.01, "suspiciously slow: {rate} Mpairs/s");
+}
+
+#[test]
+fn backend_accounting_is_consistent() {
+    let mut b = ScalarBackend::new();
+    assert_eq!(b.pairs_executed(), 0);
+    b.run_pairs(1_000, 2_000).unwrap();
+    b.run_pairs(0, 500).unwrap();
+    assert_eq!(b.pairs_executed(), 2_500);
+    assert!(b.compute_secs() >= 0.0);
+    assert_eq!(b.name(), "scalar");
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_feature {
+    use gridlan::runtime::pjrt::PjrtBackend;
+
+    #[test]
+    fn pjrt_without_artifacts_reports_cleanly() {
+        // In offline builds there are no artifacts (and no `xla` crate):
+        // loading must fail with a diagnostic, never panic — callers fall
+        // back to the scalar backend.
+        let dir = std::path::Path::new("/nonexistent-gridlan-artifacts");
+        let err = PjrtBackend::load(dir).unwrap_err();
+        assert!(!err.is_empty());
+    }
 }
