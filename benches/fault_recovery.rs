@@ -20,6 +20,7 @@ fn trace() -> Vec<TraceJob> {
             request: ResourceRequest { nodes: 1, ppn: 1 + (i % 4) as u32 },
             compute: (300 + 120 * (i % 4) as u64) * DUR_SEC,
             walltime: 3600 * DUR_SEC,
+            payload: gridlan::workload::trace::JobPayload::Synthetic,
         })
         .collect()
 }

@@ -80,6 +80,7 @@ fn main() {
             request: gridlan::rm::alloc::ResourceRequest { nodes: 3, ppn: 6 },
             compute: 1800 * DUR_SEC,
             walltime: 3600 * DUR_SEC,
+            payload: gridlan::workload::trace::JobPayload::Synthetic,
         }];
         for i in 0..12 {
             trace.push(gridlan::workload::trace::TraceJob {
@@ -88,6 +89,7 @@ fn main() {
                 request: gridlan::rm::alloc::ResourceRequest { nodes: 1, ppn: 1 },
                 compute: 120 * DUR_SEC,
                 walltime: 240 * DUR_SEC,
+                payload: gridlan::workload::trace::JobPayload::Synthetic,
             });
         }
         let scenario = Scenario { horizon: 6 * 3600 * DUR_SEC, ..Default::default() };

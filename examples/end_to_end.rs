@@ -112,10 +112,15 @@ fn main() {
     );
 
     // ---- 5. extrapolate to the paper's scale ---------------------------
-    let cal = Calibration::new(rate);
+    // Calibration::host_mpairs is a single-core rate, but the auto engine
+    // may be the multi-threaded backend: measure one core explicitly.
+    let mut one_core = EpEngine::scalar();
+    one_core.run_pairs(0, 1 << 20).expect("scalar calibration run");
+    let core_rate = one_core.measured_rate_mpairs().unwrap();
+    let cal = Calibration::new(core_rate);
     println!("\n== extrapolation to class D (the paper's Fig. 3 workload) ==");
     println!(
-        "  this host, 1 core:        {}",
+        "  this host, 1 core ({core_rate:.1} Mpairs/s): {}",
         secs(cal.secs_for(EpClass::D.pairs()))
     );
     println!("  model, 26 Gridlan cores:  {:.0} s (paper: ~212 s)", series.full_pool_secs);

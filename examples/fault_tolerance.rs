@@ -21,6 +21,7 @@ fn main() {
             request: ResourceRequest { nodes: 1, ppn: 2 + (i % 3) as u32 },
             compute: (600 + 60 * (i % 5) as u64) * DUR_SEC,
             walltime: 3600 * DUR_SEC,
+            payload: gridlan::workload::trace::JobPayload::Synthetic,
         })
         .collect();
 

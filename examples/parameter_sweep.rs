@@ -4,7 +4,9 @@
 //!
 //! Sweeps a damping parameter, runs every point as an independent Gridlan
 //! job through the event-driven scenario (so queueing/placement is
-//! realistic), then prints the resulting curve.
+//! realistic) with a REAL EP compute payload — each point's Monte-Carlo
+//! noise comes from the tally its own job executed on the backend —
+//! then prints the resulting curve.
 //!
 //! Run: `cargo run --release --example parameter_sweep`
 
@@ -13,44 +15,51 @@ use gridlan::coordinator::scenario::{parse_pair_range, run_trace, Scenario};
 use gridlan::rm::alloc::ResourceRequest;
 use gridlan::sim::clock::DUR_SEC;
 use gridlan::util::table::{secs, Align, Table};
-use gridlan::workload::ep::ep_scalar;
 use gridlan::workload::sweep::ParameterSweep;
-use gridlan::workload::trace::TraceJob;
+use gridlan::workload::trace::{JobPayload, TraceJob};
 
 fn main() {
     let sweep = ParameterSweep::linspace("resonance", "gamma", 0.05, 0.50, 10, 1 << 16);
     println!("sweep: {} points of '{}'", sweep.n_points(), sweep.param);
 
     // Run the sweep's jobs through the full scheduler/scenario machinery:
-    // all points submitted at t=0, one core each.
+    // all points submitted at t=0, each carrying its own disjoint EP pair
+    // range as a real-compute payload.
     let trace: Vec<TraceJob> = (0..sweep.n_points())
-        .map(|_i| TraceJob {
-            at: 0,
-            owner: "sweeper".into(),
-            request: ResourceRequest { nodes: 1, ppn: sweep.cores_per_point },
-            compute: 300 * DUR_SEC,
-            walltime: 900 * DUR_SEC,
+        .map(|i| {
+            let (offset, count) = parse_pair_range(&sweep.payload(i)).expect("sweep payload");
+            TraceJob {
+                at: 0,
+                owner: "sweeper".into(),
+                request: ResourceRequest { nodes: 1, ppn: sweep.cores_per_point },
+                compute: 300 * DUR_SEC,
+                walltime: 900 * DUR_SEC,
+                payload: JobPayload::Ep { offset, count },
+            }
         })
         .collect();
     let g = Gridlan::table1();
     let scenario = Scenario { horizon: 2 * 3600 * DUR_SEC, ..Default::default() };
     let report = run_trace(g, trace, &scenario);
     println!(
-        "all {} points completed; makespan {} (incl. PXE boots), mean wait {}",
+        "all {} points completed ({} pairs computed for REAL); makespan {} (incl. PXE boots), mean wait {}",
         report.metrics.jobs_completed,
+        report.metrics.ep_pairs_executed,
         secs(report.metrics.makespan as f64 / 1e9),
         secs(report.metrics.mean_wait_secs()),
     );
     assert_eq!(report.metrics.jobs_completed as usize, sweep.n_points());
+    assert_eq!(report.metrics.ep_jobs_completed as usize, sweep.n_points());
 
     // The actual per-point "physics": a toy resonance curve whose noise
-    // comes from each point's own EP slice (deterministic, disjoint).
+    // comes from the EP tally each point's job executed on the backend.
+    // Job ids are sequential in submission order, so the id-ordered tally
+    // map lines up with the sweep's points.
+    let tallies: Vec<_> = report.ep_tallies.values().collect();
     let mut t = Table::new(&["gamma", "response", "mc-noise"])
         .align(&[Align::Right, Align::Right, Align::Right]);
     for (i, &gamma) in sweep.values.iter().enumerate() {
-        let payload = sweep.payload(i);
-        let (offset, count) = parse_pair_range(&payload).expect("sweep payload");
-        let tally = ep_scalar(offset, count);
+        let tally = tallies[i];
         // Lorentzian response + small MC jitter from the tally.
         let jitter = (tally.sx / tally.nacc.max(1) as f64) * 0.05;
         let response = 1.0 / ((0.2 - gamma).powi(2) + gamma * gamma) + jitter;

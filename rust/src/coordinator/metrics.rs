@@ -21,6 +21,12 @@ pub struct Metrics {
     pub faults: u64,
     /// Watchdog restarts triggered.
     pub watchdog_restarts: u64,
+    /// Real-compute (EP payload) jobs completed.
+    pub ep_jobs_completed: u64,
+    /// Real-compute jobs whose backend execution failed (exit != 0).
+    pub ep_jobs_failed: u64,
+    /// EP pairs actually executed on the compute backend.
+    pub ep_pairs_executed: u64,
 }
 
 impl Metrics {

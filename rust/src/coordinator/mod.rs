@@ -4,7 +4,8 @@
 //! * [`gridlan`] — construction from a [`crate::config::Config`], node
 //!   boot, Table-2 measurements, EP job helpers;
 //! * [`scenario`] — the event-driven runner: job traces, monitor sweeps,
-//!   watchdog polls and fault injection on the DES engine;
+//!   watchdog polls, fault injection and real EP compute on the DES
+//!   engine;
 //! * [`metrics`] — utilization/goodput accounting.
 
 pub mod gridlan;
@@ -13,4 +14,4 @@ pub mod scenario;
 
 pub use gridlan::Gridlan;
 pub use metrics::Metrics;
-pub use scenario::{Scenario, ScenarioReport};
+pub use scenario::{run_scenario, run_trace, Scenario, ScenarioReport, ScenarioRun};

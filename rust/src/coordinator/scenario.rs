@@ -1,15 +1,25 @@
 //! Event-driven scenario runner: job traces + monitor sweeps + watchdog
-//! polls + fault injection, all on the DES engine.
+//! polls + fault injection + REAL compute, all on the DES engine.
 //!
 //! This is where the paper's §2.6 feedback loop actually closes: the
 //! 5-minute server pinger marks nodes on/off, the client watchdog asks the
 //! status service and restarts dead VMs, pbs_server requeues the jobs that
 //! were running there (the §4 script-folder technique), and the scheduler
 //! re-places them once nodes return.
+//!
+//! Compute-bearing jobs are first-class citizens: a
+//! [`JobPayload::Ep`] trace entry is scheduled by the RM like any other
+//! job, its duration comes from the speed model (pairs over the slowest
+//! allocated core's EP rate), and its pair range is executed for REAL on
+//! the scenario's [`EpEngine`] at completion time.  A fault that kills a
+//! running EP job loses the attempt — the requeued job re-executes the
+//! same pair range later, and because ranges address the global NPB
+//! stream, the re-executed tally is bit-identical and the merged result
+//! stays exact.
 
 use super::gridlan::Gridlan;
 use super::metrics::Metrics;
-use crate::host::faults::{FaultKind, FaultPlan};
+use crate::host::faults::{FaultEvent, FaultKind, FaultPlan};
 use crate::host::watchdog::{Watchdog, WatchdogAction};
 use crate::rm::job::JobId;
 use crate::rm::mom::Mom;
@@ -20,7 +30,7 @@ use crate::sim::clock::{SimTime, DUR_SEC};
 use crate::sim::Simulator;
 use crate::vm::node::NodeState;
 use crate::workload::ep::{EpClass, EpJob, EpSlice, EpTally};
-use crate::workload::trace::TraceJob;
+use crate::workload::trace::{JobPayload, TraceJob};
 use std::collections::BTreeMap;
 
 /// Reference core rate used to normalize trace job compute times
@@ -34,6 +44,9 @@ pub struct Scenario {
     /// Scheduler cycle period (Torque's scheduler iteration).
     pub sched_period: SimTime,
     pub faults: FaultPlan,
+    /// Deterministic, hand-placed fault events applied in addition to the
+    /// generated plan (tests use these to hit exact race windows).
+    pub scripted_faults: Vec<FaultEvent>,
 }
 
 impl Default for Scenario {
@@ -42,6 +55,7 @@ impl Default for Scenario {
             horizon: 12 * 3600 * DUR_SEC,
             sched_period: 10 * DUR_SEC,
             faults: FaultPlan::none(),
+            scripted_faults: Vec::new(),
         }
     }
 }
@@ -52,38 +66,77 @@ pub struct ScenarioReport {
     pub metrics: Metrics,
     pub events_executed: u64,
     pub final_time: SimTime,
+    /// Per-job EP tallies, recorded at each compute job's completion.
+    pub ep_tallies: BTreeMap<JobId, EpTally>,
+}
+
+impl ScenarioReport {
+    /// Merge of all per-job EP tallies, in job-id order (deterministic).
+    pub fn ep_total(&self) -> EpTally {
+        let mut total = EpTally::default();
+        for t in self.ep_tallies.values() {
+            total.merge(t);
+        }
+        total
+    }
+}
+
+/// A finished scenario run: the report plus the system and engine handed
+/// back to the caller (for post-run inspection of RM state, backend
+/// accounting, node histories...).
+pub struct ScenarioRun {
+    pub report: ScenarioReport,
+    pub gridlan: Gridlan,
+    pub engine: EpEngine,
 }
 
 struct World {
     g: Gridlan,
     m: Metrics,
+    engine: EpEngine,
     watchdogs: BTreeMap<String, Watchdog>,
     /// Per-job start generation guard for completion events.
     started_gen: BTreeMap<JobId, SimTime>,
+    /// Per-node boot generation: bumped whenever a boot begins or the
+    /// node dies, so in-flight boot-completion events land stale.
+    boot_gen: BTreeMap<String, u64>,
+    /// Per-job EP tallies (recorded at completion).
+    ep_tallies: BTreeMap<JobId, EpTally>,
 }
 
-/// Run a trace of jobs through the Gridlan under a fault plan.
-/// Nodes boot event-driven at t=0; jobs are submitted at their trace
-/// times; the run ends when the horizon passes AND the queue drains (or a
-/// hard cap of 4x horizon).
-pub fn run_trace(mut g: Gridlan, trace: Vec<TraceJob>, scenario: &Scenario) -> ScenarioReport {
+/// Run a trace of jobs through the Gridlan under a fault plan, with real
+/// compute on `engine` for [`JobPayload::Ep`] entries.  Nodes still `Off`
+/// boot event-driven from t=0 (already-booted grids keep their state);
+/// jobs are submitted at their trace times; the run ends when the horizon
+/// passes AND the queue drains (or a hard cap of 4x horizon).
+pub fn run_scenario(
+    g: Gridlan,
+    trace: Vec<TraceJob>,
+    scenario: &Scenario,
+    engine: EpEngine,
+) -> ScenarioRun {
     let mut sim: Simulator<World> = Simulator::new();
     let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
-
-    // --- initial boots (event-driven: node comes up after its plan).
-    for name in &names {
-        g.connect_client(name).expect("provisioned");
-        let plan = g.boot_plan(name);
-        let total = plan.total();
-        g.nodes.get_mut(name).unwrap().advance(NodeState::PoweringOn, 0);
-        let n = name.clone();
-        sim.schedule_at(total, move |_s, w: &mut World| {
-            node_up(w, &n, 0);
-        });
-    }
-
     let watchdogs = names.iter().map(|n| (n.clone(), Watchdog::new(n))).collect();
-    let mut world = World { g, m: Metrics::default(), watchdogs, started_gen: BTreeMap::new() };
+    let mut world = World {
+        g,
+        m: Metrics::default(),
+        engine,
+        watchdogs,
+        started_gen: BTreeMap::new(),
+        boot_gen: BTreeMap::new(),
+        ep_tallies: BTreeMap::new(),
+    };
+
+    // --- initial boots (event-driven: an Off node comes up after its
+    // plan; a grid pre-booted via `boot_all` keeps its Up nodes).
+    for name in &names {
+        if world.g.nodes[name].state == NodeState::Off {
+            world.g.connect_client(name).expect("provisioned");
+            world.g.nodes.get_mut(name).unwrap().advance(NodeState::PoweringOn, 0);
+            begin_boot(&mut sim, &mut world, name);
+        }
+    }
 
     // --- job submissions.
     for (i, tj) in trace.iter().enumerate() {
@@ -106,9 +159,11 @@ pub fn run_trace(mut g: Gridlan, trace: Vec<TraceJob>, scenario: &Scenario) -> S
         });
     }
 
-    // --- faults.
+    // --- faults (generated plan + scripted extras).
     let mut frng = world.g.rng.fork();
-    for ev in scenario.faults.generate(&names, scenario.horizon, &mut frng) {
+    let mut faults = scenario.faults.generate(&names, scenario.horizon, &mut frng);
+    faults.extend(scenario.scripted_faults.iter().cloned());
+    for ev in faults {
         world.m.faults += 1;
         sim.schedule_at(ev.at, move |s, w: &mut World| {
             apply_fault(s, w, &ev.client, ev.kind, ev.outage);
@@ -125,65 +180,70 @@ pub fn run_trace(mut g: Gridlan, trace: Vec<TraceJob>, scenario: &Scenario) -> S
             break;
         }
     }
-    ScenarioReport {
+    let report = ScenarioReport {
         metrics: world.m,
         events_executed: sim.executed(),
         final_time: sim.now(),
-    }
+        ep_tallies: world.ep_tallies,
+    };
+    ScenarioRun { report, gridlan: world.g, engine: world.engine }
+}
+
+/// [`run_scenario`] with a scalar engine, keeping only the report — the
+/// deterministic workhorse for benches and ablations.
+pub fn run_trace(g: Gridlan, trace: Vec<TraceJob>, scenario: &Scenario) -> ScenarioReport {
+    run_scenario(g, trace, scenario, EpEngine::scalar()).report
 }
 
 // ------------------------------------------------------ real EP compute
 
 /// Run a set of EP slices as single-core jobs through the resource
-/// manager, executing each slice's pair range for REAL on the engine's
-/// [`crate::runtime::backend::ComputeBackend`].  The grid must be booted
-/// (`Gridlan::boot_all` or a scenario) or the scheduler will stall.
-///
-/// Slices are submitted with `ep:<offset>:<count>` payloads, scheduled in
-/// as many cycles as the pool width requires, executed, and completed —
-/// the paper's Fig. 3 scatter protocol with the compute payload attached.
+/// manager on the event-driven scenario path: each slice is submitted
+/// with an `ep:<offset>:<count>` payload, scheduled by the RM (booting
+/// any still-Off nodes first), timed by the speed model, and executed for
+/// REAL on the engine's [`crate::runtime::backend::ComputeBackend`] at
+/// completion — the paper's Fig. 3 scatter protocol with the compute
+/// payload attached.
 pub fn run_ep_slices(
     g: &mut Gridlan,
     engine: &mut EpEngine,
     slices: &[EpSlice],
     now: SimTime,
 ) -> Result<EpTally, String> {
-    let mut ids = Vec::with_capacity(slices.len());
-    for s in slices {
-        let script = PbsScript::parse(&format!(
-            "#PBS -N ep-slice-{:03}\n#PBS -q gridlan\n#PBS -l nodes=1:ppn=1\n./ep.x\n",
-            s.proc
-        ))
-        .map_err(|e| e.to_string())?;
-        let payload = format!("ep:{}:{}", s.pair_offset, s.pair_count);
-        let id = g.pbs.qsub(&script, "gridlan", &payload, now).map_err(|e| e.to_string())?;
-        ids.push(id);
-    }
-    let sched = g.scheduler();
-    let mut total = EpTally::default();
-    let mut done = 0usize;
-    let mut t = now;
-    while done < ids.len() {
-        t += DUR_SEC;
-        let started = g.pbs.schedule_cycle(NodePool::Gridlan, sched.as_ref(), t);
-        if started.is_empty() {
+    let trace: Vec<TraceJob> = slices.iter().map(|s| s.trace_job(now, 3600 * DUR_SEC)).collect();
+    let scenario = Scenario {
+        horizon: now.saturating_add(3600 * DUR_SEC),
+        ..Default::default()
+    };
+    // Leave a minimal (clientless) placeholder in *g while the real
+    // instance runs the scenario; it is overwritten right after.
+    let mut placeholder_cfg = g.config.clone();
+    placeholder_cfg.clients.clear();
+    placeholder_cfg.cluster_partition = None;
+    let g_owned = std::mem::replace(g, Gridlan::build(placeholder_cfg));
+    let engine_owned = std::mem::replace(engine, EpEngine::scalar());
+    let run = run_scenario(g_owned, trace, &scenario, engine_owned);
+    *g = run.gridlan;
+    *engine = run.engine;
+    let done = run.report.ep_tallies.len();
+    if done < slices.len() {
+        // Distinguish a backend failure (job completed with exit != 0, no
+        // tally) from a scheduling stall — counted per-run, so failures
+        // left in the job table by earlier calls don't misattribute.
+        let failed = run.report.metrics.ep_jobs_failed;
+        if failed > 0 {
             return Err(format!(
-                "scheduler stalled with {} of {} slices unplaced (is the grid booted?)",
-                ids.len() - done,
-                ids.len()
+                "compute backend failed on {failed} of {} slices",
+                slices.len()
             ));
         }
-        for (id, _alloc) in started {
-            let payload = g.pbs.job(id).ok_or("scheduled job vanished")?.payload.clone();
-            let (offset, count) =
-                parse_pair_range(&payload).ok_or_else(|| format!("bad payload '{payload}'"))?;
-            total.merge(&engine.run_pairs(offset, count)?);
-            t += DUR_SEC;
-            g.pbs.complete(id, 0, t);
-            done += 1;
-        }
+        return Err(format!(
+            "scheduler stalled with {} of {} slices incomplete (pool too narrow or nodes never booted)",
+            slices.len() - done,
+            slices.len()
+        ));
     }
-    Ok(total)
+    Ok(run.report.ep_total())
 }
 
 /// [`run_ep_slices`] for a whole NPB class split `n_procs` ways (the
@@ -213,20 +273,40 @@ pub fn parse_pair_range(payload: &str) -> Option<(u64, u64)> {
 
 // ---------------------------------------------------------------- events
 
-fn node_up(w: &mut World, name: &str, _gen: u64) {
+/// Arm a boot-completion event for `name` under a fresh boot generation.
+/// Any later crash/power-off bumps the generation, so a completion event
+/// scheduled before the fault lands stale and leaves the node alone.
+fn begin_boot(sim: &mut Simulator<World>, w: &mut World, name: &str) {
+    let gen = {
+        let e = w.boot_gen.entry(name.to_string()).or_insert(0);
+        *e += 1;
+        *e
+    };
+    let total = w.g.boot_plan(name).total();
+    let n = name.to_string();
+    sim.schedule_in(total, move |_s, w| node_up(w, &n, gen));
+}
+
+fn node_up(w: &mut World, name: &str, gen: u64) {
+    // Stale boot completion: the node crashed or powered off (bumping the
+    // generation) after this boot started.  Regression guard — the old
+    // code broke out of the state walk at `Crashed` and still marked the
+    // node schedulable.
+    if w.boot_gen.get(name).copied().unwrap_or(0) != gen {
+        return;
+    }
     let node = w.g.nodes.get_mut(name).unwrap();
-    if node.state == NodeState::Up || node.state == NodeState::Off {
-        return; // crashed-then-recovered races resolve harmlessly
+    use NodeState::*;
+    if !matches!(node.state, PoweringOn | Dhcp | Tftp | NfsMount) {
+        return; // only a mid-boot node can complete a boot
     }
     // Jump through remaining boot states (plan time already elapsed).
-    use NodeState::*;
     while node.state != Up {
         let next = match node.state {
             PoweringOn => Dhcp,
             Dhcp => Tftp,
             Tftp => NfsMount,
-            NfsMount => Up,
-            Crashed | Off | Up => break,
+            _ => Up,
         };
         let t = node.history.last().map(|&(_, t)| t).unwrap_or(0);
         node.advance(next, t);
@@ -235,14 +315,18 @@ fn node_up(w: &mut World, name: &str, _gen: u64) {
 }
 
 fn submit(sim: &mut Simulator<World>, w: &mut World, tj: &TraceJob, i: usize) {
+    let kind = match tj.payload {
+        JobPayload::Synthetic => "trace",
+        JobPayload::Ep { .. } => "ep",
+    };
     let script = PbsScript {
-        name: Some(format!("trace-{i:04}")),
+        name: Some(format!("{kind}-{i:04}")),
         queue: Some("gridlan".into()),
         request: tj.request,
         walltime: Some(tj.walltime),
         commands: vec!["./work.x".into()],
     };
-    let payload = format!("trace:{}", tj.compute);
+    let payload = tj.payload.encode(tj.compute);
     match w.g.pbs.qsub(&script, &tj.owner, &payload, sim.now()) {
         Ok(id) => {
             w.g.folder.register(&mut w.g.server_fs, id, &script);
@@ -265,21 +349,30 @@ fn run_sched(sim: &mut Simulator<World>, w: &mut World) {
     let now = sim.now();
     let decisions = w.g.pbs.schedule_cycle(NodePool::Gridlan, scheduler.as_ref(), now);
     for (id, alloc) in decisions {
-        // Duration: trace compute normalized by the slowest allocated
-        // client (Turbo + hypervisor), plus MOM prologue/epilogue.
-        let compute: SimTime = w
-            .g
-            .pbs
-            .job(id)
-            .and_then(|j| j.payload.strip_prefix("trace:").and_then(|c| c.parse().ok()))
-            .unwrap_or(60 * DUR_SEC);
-        let mut worst_factor: f64 = 0.0;
+        let payload = w.g.pbs.job(id).map(|j| j.payload.clone()).unwrap_or_default();
+        // Slowest allocated core rate (Turbo + hypervisor aware).
+        let mut min_rate = f64::INFINITY;
         for (node, cores) in &alloc.cores {
             let busy = w.g.pbs.node(node).map(|n| n.busy_cores).unwrap_or(*cores);
             let rate = w.g.client(node).map(|c| c.guest_ep_rate(busy)).unwrap_or(REF_RATE_MPAIRS);
-            worst_factor = worst_factor.max(REF_RATE_MPAIRS / rate);
+            min_rate = min_rate.min(rate);
         }
-        let duration = Mom::wrap_runtime((compute as f64 * worst_factor.max(0.1)) as SimTime);
+        if !min_rate.is_finite() {
+            min_rate = REF_RATE_MPAIRS;
+        }
+        let compute: SimTime = if let Some((_offset, count)) = parse_pair_range(&payload) {
+            // Real-compute payload: pairs at the slowest core's EP rate.
+            (count as f64 * 1e3 / min_rate.max(1e-6)) as SimTime
+        } else {
+            // Synthetic payload: trace compute normalized to the slowest
+            // allocated client.
+            let base: SimTime = payload
+                .strip_prefix("trace:")
+                .and_then(|c| c.parse().ok())
+                .unwrap_or(60 * DUR_SEC);
+            (base as f64 * (REF_RATE_MPAIRS / min_rate).max(0.1)) as SimTime
+        };
+        let duration = Mom::wrap_runtime(compute);
         w.started_gen.insert(id, now);
         sim.schedule_in(duration, move |s, w| job_done(s, w, id, now));
     }
@@ -294,13 +387,31 @@ fn job_done(sim: &mut Simulator<World>, w: &mut World, id: JobId, started: SimTi
     if job.state != crate::rm::job::JobState::Running || job.started_at != Some(started) {
         return;
     }
-    let cores = job.allocation.as_ref().map(|a| a.total_cores()).unwrap_or(0);
-    let wait = job.wait_time().unwrap_or(0);
-    w.g.pbs.complete(id, 0, sim.now());
+    // Real compute happens here, at completion time: a killed attempt
+    // never executed, so a requeued job re-executes its whole range on
+    // the later attempt — bit-identically, keeping the merge exact.
+    let payload = job.payload.clone();
+    let mut exit_code = 0;
+    if let Some((offset, count)) = parse_pair_range(&payload) {
+        match w.engine.run_pairs(offset, count) {
+            Ok(tally) => {
+                if let Some(prev) = w.ep_tallies.insert(id, tally) {
+                    assert_eq!(prev, tally, "re-executed EP range must tally bit-identically");
+                }
+                w.m.ep_jobs_completed += 1;
+                w.m.ep_pairs_executed += count;
+            }
+            Err(_) => {
+                w.m.ep_jobs_failed += 1;
+                exit_code = 1;
+            }
+        }
+    }
+    let rec = w.g.pbs.complete(id, exit_code, sim.now());
     w.g.folder.job_completed(&mut w.g.server_fs, id);
     w.m.jobs_completed += 1;
-    w.m.total_wait += wait;
-    w.m.core_secs_useful += cores as f64 * (sim.now() - started) as f64 / 1e9;
+    w.m.total_wait += rec.wait;
+    w.m.core_secs_useful += rec.allocation.total_cores() as f64 * (sim.now() - started) as f64 / 1e9;
     w.m.makespan = w.m.makespan.max(sim.now());
     sim.schedule_in(DUR_SEC, |s, w| run_sched(s, w));
 }
@@ -332,9 +443,7 @@ fn watchdog_poll(sim: &mut Simulator<World>, w: &mut World, name: &str) {
             if matches!(node.state, NodeState::Crashed | NodeState::Off) {
                 node.advance(NodeState::PoweringOn, now);
                 w.m.watchdog_restarts += 1;
-                let plan = w.g.boot_plan(name);
-                let n = name.to_string();
-                sim.schedule_in(plan.total(), move |_s, w| node_up(w, &n, 0));
+                begin_boot(sim, w, name);
             }
         }
         WatchdogAction::ReconnectVpn if powered => {
@@ -378,6 +487,10 @@ fn apply_fault(
         w.m.core_secs_wasted += wasted;
         victims.len()
     };
+    // The node is about to die: invalidate any in-flight boot completion.
+    let kill_boot_gen = |w: &mut World| {
+        *w.boot_gen.entry(client.to_string()).or_insert(0) += 1;
+    };
     match kind {
         FaultKind::ClientPowerOff => {
             if let Some(c) = w.g.clients.iter_mut().find(|c| c.name == client) {
@@ -388,6 +501,7 @@ fn apply_fault(
                 c.vpn_connected = false;
             }
             w.g.hub.disconnect(client);
+            kill_boot_gen(w);
             let node = w.g.nodes.get_mut(client).unwrap();
             if node.state != NodeState::Off {
                 node.advance(NodeState::Off, now);
@@ -403,9 +517,7 @@ fn apply_fault(
                 let node = w.g.nodes.get_mut(&c).unwrap();
                 if node.state == NodeState::Off {
                     node.advance(NodeState::PoweringOn, s.now());
-                    let plan = w.g.boot_plan(&c);
-                    let c2 = c.clone();
-                    s.schedule_in(plan.total(), move |_s, w| node_up(w, &c2, 0));
+                    begin_boot(s, w, &c);
                 }
             });
         }
@@ -426,6 +538,7 @@ fn apply_fault(
             });
         }
         FaultKind::VmCrash => {
+            kill_boot_gen(w);
             let node = w.g.nodes.get_mut(client).unwrap();
             if !matches!(node.state, NodeState::Off | NodeState::Crashed) {
                 node.advance(NodeState::Crashed, now);
@@ -441,6 +554,9 @@ mod tests {
     use super::*;
     use crate::config::Config;
     use crate::rm::alloc::ResourceRequest;
+    use crate::rm::server::NodePower;
+    use crate::sim::clock::DUR_MS;
+    use crate::workload::ep::ep_scalar;
 
     fn quick_trace(n: usize, cores: u32, compute_secs: u64) -> Vec<TraceJob> {
         (0..n)
@@ -450,6 +566,7 @@ mod tests {
                 request: ResourceRequest { nodes: 1, ppn: cores },
                 compute: compute_secs * DUR_SEC,
                 walltime: compute_secs * 3 * DUR_SEC,
+                payload: JobPayload::Synthetic,
             })
             .collect()
     }
@@ -533,6 +650,68 @@ mod tests {
     }
 
     #[test]
+    fn stale_boot_completion_after_crash_stays_offline() {
+        // Regression (the `_gen` guard was unused): a boot-completion
+        // event scheduled before a VmCrash must not mark the crashed node
+        // schedulable when it fires afterward.
+        let mut sim: Simulator<World> = Simulator::new();
+        let g = Gridlan::build(Config::table1());
+        let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
+        let watchdogs = names.iter().map(|n| (n.clone(), Watchdog::new(n))).collect();
+        let mut w = World {
+            g,
+            m: Metrics::default(),
+            engine: EpEngine::scalar(),
+            watchdogs,
+            started_gen: BTreeMap::new(),
+            boot_gen: BTreeMap::new(),
+            ep_tallies: BTreeMap::new(),
+        };
+        w.g.connect_client("n01").unwrap();
+        let total = w.g.boot_plan("n01").total();
+        w.g.nodes.get_mut("n01").unwrap().advance(NodeState::PoweringOn, 0);
+        begin_boot(&mut sim, &mut w, "n01");
+        // Crash strictly inside the boot window; no watchdog is armed, so
+        // nothing may legitimately bring the node back.
+        sim.schedule_at(total / 2, |s, w| {
+            apply_fault(s, w, "n01", FaultKind::VmCrash, 60 * DUR_SEC);
+        });
+        sim.run_until(&mut w, total * 2);
+        assert_eq!(w.g.nodes["n01"].state, NodeState::Crashed);
+        assert_eq!(
+            w.g.pbs.node("n01").unwrap().power,
+            NodePower::Offline,
+            "stale boot completion marked a crashed node schedulable"
+        );
+    }
+
+    #[test]
+    fn ep_payload_jobs_compute_for_real_in_a_scenario() {
+        // EP payload entries inside run_trace: scheduled by the RM, timed
+        // by the speed model, executed on the engine at completion.
+        let g = Gridlan::build(Config::table1());
+        let trace: Vec<TraceJob> = (0..6)
+            .map(|i| {
+                EpSlice { proc: i, pair_offset: i as u64 * 40_000, pair_count: 40_000 }
+                    .trace_job((i as u64) * DUR_SEC, 3600 * DUR_SEC)
+            })
+            .collect();
+        let scenario = Scenario { horizon: 3600 * DUR_SEC, ..Default::default() };
+        let run = run_scenario(g, trace, &scenario, EpEngine::scalar());
+        assert_eq!(run.report.metrics.jobs_completed, 6);
+        assert_eq!(run.report.metrics.ep_jobs_completed, 6);
+        assert_eq!(run.report.metrics.ep_pairs_executed, 240_000);
+        assert_eq!(run.engine.pairs_executed(), 240_000);
+        let total = run.report.ep_total();
+        let oracle = ep_scalar(0, 240_000);
+        assert_eq!(total.nacc, oracle.nacc);
+        assert_eq!(total.q, oracle.q);
+        assert!((total.sx - oracle.sx).abs() < 1e-7);
+        // EP jobs waited for the event-driven PXE boots like everyone.
+        assert!(run.report.metrics.makespan > 60 * DUR_SEC);
+    }
+
+    #[test]
     fn ep_slices_through_rm_match_the_oracle() {
         // Real compute through qsub -> schedule -> backend -> complete:
         // the merged tally equals the scalar oracle over the union range.
@@ -569,12 +748,15 @@ mod tests {
     }
 
     #[test]
-    fn unbooted_grid_reports_a_stall() {
+    fn unbooted_grid_boots_event_driven_for_ep_slices() {
+        // run_ep_slices on a cold grid now PXE-boots the nodes as part of
+        // the scenario instead of stalling.
         let mut g = Gridlan::build(Config::table1());
         let mut engine = EpEngine::scalar();
         let slices = [EpSlice { proc: 0, pair_offset: 0, pair_count: 1024 }];
-        let err = run_ep_slices(&mut g, &mut engine, &slices, 0).unwrap_err();
-        assert!(err.contains("stalled"), "{err}");
+        let total = run_ep_slices(&mut g, &mut engine, &slices, 0).unwrap();
+        assert_eq!(total.nacc, ep_scalar(0, 1024).nacc);
+        assert!(g.nodes.values().any(|n| n.state.is_running()), "boot never happened");
     }
 
     #[test]
@@ -594,5 +776,49 @@ mod tests {
         let r2 = run_trace(Gridlan::build(Config::table1()), quick_trace(5, 2, 60), &s);
         assert_eq!(r1.metrics, r2.metrics);
         assert_eq!(r1.events_executed, r2.events_executed);
+    }
+
+    #[test]
+    fn scripted_fault_requeues_an_ep_job_and_tally_stays_exact() {
+        // A VmCrash storm placed precisely inside the EP job's MOM
+        // prologue: the first attempt dies before computing anything, the
+        // requeued attempt re-executes the whole range after the watchdog
+        // resurrects the grid, and the recorded tally is still exact.
+        let mut g = Gridlan::build(Config::table1());
+        g.boot_all(0);
+        let (offset, count) = (5_000u64, 2_000_000u64);
+        let at = 1000 * DUR_SEC;
+        let trace =
+            vec![EpSlice { proc: 0, pair_offset: offset, pair_count: count }.trace_job(at, 3600 * DUR_SEC)];
+        // The sched tick at t=1000s starts the job (submission lands first
+        // at the same timestamp); MOM's prologue alone lasts 350 ms, so a
+        // crash of every client 200 ms in is strictly inside the run.
+        let scripted: Vec<FaultEvent> = ["n01", "n02", "n03", "n04"]
+            .iter()
+            .map(|n| FaultEvent {
+                at: at + 200 * DUR_MS,
+                client: n.to_string(),
+                kind: FaultKind::VmCrash,
+                outage: 60 * DUR_SEC,
+            })
+            .collect();
+        let scenario =
+            Scenario { horizon: 2 * 3600 * DUR_SEC, scripted_faults: scripted, ..Default::default() };
+        let run = run_scenario(g, trace, &scenario, EpEngine::scalar());
+        let m = &run.report.metrics;
+        assert_eq!(m.jobs_completed, 1, "{m:?}");
+        assert!(m.jobs_requeued >= 1, "crash must interrupt the running EP job: {m:?}");
+        assert!(m.watchdog_restarts > 0, "watchdog must resurrect the grid");
+        let job = run.gridlan.pbs.jobs().find(|j| j.requeues > 0).expect("requeued job");
+        assert!(job.succeeded());
+        // Killed attempt computed nothing; the final attempt computed the
+        // range exactly once.
+        assert_eq!(run.engine.pairs_executed(), count);
+        let tally = run.report.ep_tallies.values().next().unwrap();
+        let oracle = ep_scalar(offset, count);
+        assert_eq!(tally.nacc, oracle.nacc);
+        assert_eq!(tally.q, oracle.q);
+        assert_eq!(tally.pairs, oracle.pairs);
+        assert!((tally.sx - oracle.sx).abs() < 1e-7);
     }
 }

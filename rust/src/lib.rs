@@ -8,9 +8,11 @@
 //! * **L3 (this crate)** — the Gridlan coordinator and every substrate it
 //!   needs, on a deterministic discrete-event simulation;
 //! * **runtime** — real EP compute for simulated jobs behind the
-//!   [`runtime::backend::ComputeBackend`] trait: the default pure-Rust
-//!   scalar backend (zero external dependencies; what CI runs), or the
-//!   optional PJRT artifact path (`--features pjrt`);
+//!   [`runtime::backend::ComputeBackend`] trait: the pure-Rust scalar
+//!   backend (zero external dependencies; bit-deterministic), the
+//!   multi-threaded backend (`std::thread` fan-out with an exact merge;
+//!   the default on multi-core hosts), or the optional PJRT artifact
+//!   path (`--features pjrt`);
 //! * **L2/L1 (python, build-time only, optional)** — the NPB-EP compute
 //!   payload as a JAX graph wrapping a Pallas kernel, AOT-lowered to HLO
 //!   text for the PJRT backend.

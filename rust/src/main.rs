@@ -10,8 +10,9 @@
 //! gridlan boot                           # per-node PXE boot plans
 //! gridlan demo                           # qsub/qstat walkthrough
 //! gridlan ep --pairs N [--offset K]      # run REAL EP on the compute backend
+//! gridlan ep --pairs N --threads 4       # ... on the multi-threaded backend
 //! gridlan ep --class S --rm [--procs N]  # ... through the resource manager
-//! gridlan trace [--sched fifo|backfill] [--faults X]
+//! gridlan trace [--sched fifo|backfill] [--faults X] [--ep-slices N]
 //! ```
 //!
 //! (arg parsing is hand-rolled: the offline vendor set has no clap.)
@@ -27,7 +28,7 @@ use gridlan::runtime::engine::EpEngine;
 use gridlan::sim::clock::DUR_SEC;
 use gridlan::util::rng::SplitMix64;
 use gridlan::util::table::secs;
-use gridlan::workload::ep::EpClass;
+use gridlan::workload::ep::{EpClass, EpJob};
 use gridlan::workload::trace::TraceGenerator;
 
 fn main() {
@@ -174,7 +175,19 @@ fn ep_cmd(args: &[String]) -> i32 {
         _ => 1 << 16,
     };
     let offset = opt_u64(args, "--offset", 0);
-    let mut engine = EpEngine::auto();
+    let mut engine = match opt(args, "--threads") {
+        Some(raw) => match raw.parse::<usize>() {
+            Ok(n) if n >= 1 => {
+                println!("forcing the threaded backend over {n} OS threads");
+                EpEngine::threaded(n)
+            }
+            _ => {
+                eprintln!("ep: invalid --threads value '{raw}' (want a positive integer)");
+                return 2;
+            }
+        },
+        None => EpEngine::auto(),
+    };
     if let Some(note) = engine.fallback_note.take() {
         eprintln!("note: {note}");
     }
@@ -249,9 +262,18 @@ fn trace_cmd(args: &[String]) -> i32 {
     };
     let gen = TraceGenerator::lab_day();
     let mut rng = SplitMix64::new(cfg.seed ^ 0xABCD);
-    let trace = gen.generate(&mut rng);
+    let mut trace = gen.generate(&mut rng);
+    // Optional real-compute payload: class S split over N single-core EP
+    // jobs mixed into the trace (the event-driven Fig. 3 protocol).
+    let ep_slices = opt_u64(args, "--ep-slices", 0) as u32;
+    if ep_slices > 0 {
+        for s in EpJob::new(EpClass::S, ep_slices).slices() {
+            trace.push(s.trace_job(0, 3600 * DUR_SEC));
+        }
+        trace.sort_by_key(|j| j.at);
+    }
     println!(
-        "running {} trace jobs under {:?} scheduler (fault scale {fault_scale})...",
+        "running {} trace jobs ({ep_slices} with real EP payloads) under {:?} scheduler (fault scale {fault_scale})...",
         trace.len(),
         cfg.sched
     );
@@ -268,6 +290,11 @@ fn trace_cmd(args: &[String]) -> i32 {
     println!("  makespan    {}", secs(m.makespan as f64 / 1e9));
     println!("  goodput     {:.1}%", 100.0 * m.goodput());
     println!("  sim events  {}", report.events_executed);
+    if ep_slices > 0 {
+        let total = report.ep_total();
+        println!("  ep pairs    {} (over {} jobs)", m.ep_pairs_executed, m.ep_jobs_completed);
+        println!("  class S verification: {:?}", total.verify(EpClass::S));
+    }
     0
 }
 
@@ -284,8 +311,9 @@ USAGE: gridlan <subcommand> [options]
   boot                         per-node PXE/TFTP/nfsroot boot plans
   demo                         qsub/qstat end-to-end walkthrough
   ep --pairs N | --class S     run REAL EP on the compute backend
+  ep ... --threads N           force the multi-threaded backend (N OS threads)
   ep --class S --rm [--procs N]  ... as single-core jobs through the RM
-  trace [--sched fifo|backfill] [--faults SCALE]
+  trace [--sched fifo|backfill] [--faults SCALE] [--ep-slices N]
   help
 
 Common options: --config FILE (JSON deployment; default = paper Table 1)

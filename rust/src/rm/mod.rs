@@ -30,4 +30,4 @@ pub use job::{Job, JobId, JobState};
 pub use queue::Queue;
 pub use sched::{BackfillScheduler, FifoScheduler, Scheduler};
 pub use script::PbsScript;
-pub use server::{NodeInfo, NodePower, PbsServer};
+pub use server::{CompletionRecord, NodeInfo, NodePower, PbsServer};

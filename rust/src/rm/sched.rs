@@ -79,8 +79,11 @@ impl Scheduler for FifoScheduler {
 /// EASY backfill: like FIFO, but when the head job blocks, compute its
 /// shadow start time from running-job completions and let later jobs run
 /// now if (a) they fit in current free capacity and (b) they will finish
-/// before the shadow time OR don't touch the cores the head job needs.
-/// Conservative approximation: condition (b) is `now + walltime <= shadow`.
+/// before the shadow time OR their allocation doesn't touch the nodes the
+/// head job's shadow allocation needs.  When no shadow exists (the head
+/// can never start with the currently-online nodes, even after every
+/// running job releases), nothing started now can delay it further, so
+/// any fitting job may backfill.
 pub struct BackfillScheduler;
 
 impl Scheduler for BackfillScheduler {
@@ -113,29 +116,42 @@ impl Scheduler for BackfillScheduler {
         if idx >= pending.len() {
             return out;
         }
-        // Head job blocked: find its shadow time by replaying completions.
+        // Head job blocked: find its shadow (time + allocation witness)
+        // by replaying completions.
         let head = &pending[idx];
         let shadow = shadow_time(&head.request, &free, running);
         // Backfill the rest.
         for job in &pending[idx + 1..] {
-            if shadow.map(|s| now.saturating_add(job.walltime) <= s).unwrap_or(false) {
-                if let Some(alloc) = match_request(&job.request, &free) {
-                    apply(&mut free, &alloc);
-                    out.push((job.id, alloc));
+            let Some(alloc) = match_request(&job.request, &free) else { continue };
+            let ok = match &shadow {
+                // (b1) ends before the head could start, or (b2) runs on
+                // nodes the head's shadow allocation never touches — the
+                // witness allocation stays intact either way.
+                Some((t, head_alloc)) => {
+                    now.saturating_add(job.walltime) <= *t
+                        || alloc.cores.keys().all(|n| !head_alloc.cores.contains_key(n))
                 }
+                // No shadow: the online pool can never fit the head, and
+                // backfilled cores drain back into the same pool.
+                None => true,
+            };
+            if ok {
+                apply(&mut free, &alloc);
+                out.push((job.id, alloc));
             }
         }
         out
     }
 }
 
-/// Earliest time the blocked head job could start, assuming running jobs
-/// end at their expected_end and release their cores.
+/// Earliest time the blocked head job could start — and the allocation it
+/// would get then — assuming running jobs end at their expected_end and
+/// release their cores.
 fn shadow_time(
     request: &ResourceRequest,
     free: &[FreeNode],
     running: &[RunningJob],
-) -> Option<SimTime> {
+) -> Option<(SimTime, Allocation)> {
     let mut free = free.to_vec();
     let mut ends: Vec<&RunningJob> = running.iter().collect();
     ends.sort_by_key(|r| r.expected_end);
@@ -148,8 +164,8 @@ fn shadow_time(
                 free.push(FreeNode { name: node.clone(), free_cores: *cores });
             }
         }
-        if match_request(request, &free).is_some() {
-            return Some(r.expected_end);
+        if let Some(alloc) = match_request(request, &free) {
+            return Some((r.expected_end, alloc));
         }
     }
     None
@@ -221,6 +237,37 @@ mod tests {
     }
 
     #[test]
+    fn backfill_on_disjoint_nodes_despite_long_walltime() {
+        // Regression: the doc promises backfill for jobs that either end
+        // before the shadow time OR never touch the head job's cores; the
+        // old code only checked walltime.  Job 3 runs far past the shadow
+        // but fits entirely on n02, which the head's shadow allocation
+        // (all of n01) never uses — it must backfill.
+        let running = vec![RunningJob {
+            id: JobId(99),
+            allocation: Allocation { cores: [("n01".to_string(), 6u32)].into_iter().collect() },
+            expected_end: 1000 * DUR_SEC,
+        }];
+        // n01: 2 free now, 8 after job 99 ends; n02: 4 free.
+        let pending = vec![pj(2, 1, 8, 5000), pj(3, 1, 4, 5000)];
+        let d = BackfillScheduler.select(&pending, &free(&[("n01", 2), ("n02", 4)]), &running, 0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, JobId(3));
+        assert!(d[0].1.cores.contains_key("n02"));
+    }
+
+    #[test]
+    fn no_shadow_still_backfills_fitting_jobs() {
+        // Regression: when the head can never start on the online pool
+        // (shadow None), backfill used to shut off entirely and strand
+        // every fitting job behind it.
+        let pending = vec![pj(2, 1, 16, 100), pj(3, 1, 2, 100)];
+        let d = BackfillScheduler.select(&pending, &free(&[("n01", 8)]), &[], 0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].0, JobId(3));
+    }
+
+    #[test]
     fn backfill_equals_fifo_when_unblocked() {
         let pending = vec![pj(1, 1, 2, 10), pj(2, 1, 2, 10)];
         let f = free(&[("n01", 8)]);
@@ -250,7 +297,9 @@ mod tests {
             &free(&[("n01", 2)]),
             &running,
         );
-        assert_eq!(s, Some(20));
+        let (t, alloc) = s.unwrap();
+        assert_eq!(t, 20);
+        assert_eq!(alloc.cores["n01"], 8);
     }
 
     #[test]
@@ -258,26 +307,46 @@ mod tests {
         prop::check(200, |g| {
             let n_nodes = g.usize_in(1..5);
             let capacities: Vec<u32> = (0..n_nodes).map(|_| g.u64_in(1..17) as u32).collect();
+            // Random running allocations consume part of each node, so the
+            // backfill branch (shadow replay + disjoint-cores clause) is
+            // actually exercised.
+            let mut running: Vec<RunningJob> = Vec::new();
+            let mut busy: Vec<u32> = vec![0; n_nodes];
+            for r in 0..g.usize_in(0..5) {
+                let node = g.usize_in(0..n_nodes);
+                let avail = capacities[node] - busy[node];
+                if avail == 0 {
+                    continue;
+                }
+                let cores = g.u64_in(1..u64::from(avail) + 1) as u32;
+                busy[node] += cores;
+                running.push(RunningJob {
+                    id: JobId(1000 + r as u64),
+                    allocation: Allocation {
+                        cores: [(format!("n{node:02}"), cores)].into_iter().collect(),
+                    },
+                    expected_end: g.u64_in(1..5000) * DUR_SEC,
+                });
+            }
             let f: Vec<FreeNode> = capacities
                 .iter()
                 .enumerate()
-                .map(|(i, &c)| FreeNode { name: format!("n{i:02}"), free_cores: c })
+                .map(|(i, &c)| FreeNode { name: format!("n{i:02}"), free_cores: c - busy[i] })
                 .collect();
             let pending: Vec<PendingJob> = (0..g.usize_in(1..8))
                 .map(|i| pj(i as u64, g.u64_in(1..4) as u32, g.u64_in(1..9) as u32, g.u64_in(1..1000)))
                 .collect();
             for sched in [&FifoScheduler as &dyn Scheduler, &BackfillScheduler] {
-                let d = sched.select(&pending, &f, &[], 0);
-                // Sum of grants per node <= capacity.
+                let d = sched.select(&pending, &f, &running, 0);
+                // Sum of grants per node <= free capacity.
                 let mut used: std::collections::HashMap<&str, u32> = Default::default();
                 for (_, a) in &d {
                     for (n, c) in &a.cores {
                         *used.entry(n.as_str()).or_insert(0) += c;
                     }
                 }
-                for (i, &cap) in capacities.iter().enumerate() {
-                    let name = format!("n{i:02}");
-                    if used.get(name.as_str()).copied().unwrap_or(0) > cap {
+                for fnode in &f {
+                    if used.get(fnode.name.as_str()).copied().unwrap_or(0) > fnode.free_cores {
                         return expect(false, &format!("{} overallocated", sched.name()));
                     }
                 }
@@ -287,6 +356,50 @@ mod tests {
                 ids.dedup();
                 if ids.len() != d.len() {
                     return expect(false, "duplicate starts");
+                }
+                // The no-head-delay invariant: whatever backfilled must not
+                // push the blocked head job's earliest possible start out.
+                if sched.name() == "backfill" {
+                    let started: std::collections::HashSet<u64> =
+                        d.iter().map(|(j, _)| j.0).collect();
+                    let Some(head_pos) = pending.iter().position(|p| !started.contains(&p.id.0))
+                    else {
+                        continue; // everything started: no head to delay
+                    };
+                    let head = &pending[head_pos];
+                    let pos_of = |id: JobId| pending.iter().position(|p| p.id == id).unwrap();
+                    // Free capacity after the FIFO prefix (starts before the head).
+                    let mut free_prefix = f.clone();
+                    for (id, a) in &d {
+                        if pos_of(*id) < head_pos {
+                            apply(&mut free_prefix, a);
+                        }
+                    }
+                    let before = shadow_time(&head.request, &free_prefix, &running);
+                    // World with the backfilled jobs treated as running.
+                    let mut free_after = free_prefix.clone();
+                    let mut running_after = running.clone();
+                    for (id, a) in &d {
+                        let pos = pos_of(*id);
+                        if pos > head_pos {
+                            apply(&mut free_after, a);
+                            running_after.push(RunningJob {
+                                id: *id,
+                                allocation: a.clone(),
+                                expected_end: pending[pos].walltime, // now == 0
+                            });
+                        }
+                    }
+                    let after = shadow_time(&head.request, &free_after, &running_after);
+                    if let Some((t_before, _)) = before {
+                        let ok = matches!(&after, Some((t_after, _)) if *t_after <= t_before);
+                        if !ok {
+                            return expect(
+                                false,
+                                &format!("backfill delayed head: {t_before} -> {after:?}"),
+                            );
+                        }
+                    }
                 }
             }
             prop::Outcome::Pass

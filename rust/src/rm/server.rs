@@ -45,6 +45,24 @@ impl NodeInfo {
 /// Default walltime estimate when a script omits `-l walltime`.
 pub const DEFAULT_WALLTIME: SimTime = 3600 * DUR_SEC;
 
+/// What [`PbsServer::complete`] hands back: the completion hook's view of
+/// the finished job, so time-driven callers (the scenario runner executes
+/// real compute payloads at completion time) can account payload,
+/// placement and wait without a second job-table lookup.
+#[derive(Debug, Clone)]
+pub struct CompletionRecord {
+    pub id: JobId,
+    pub exit_code: i32,
+    /// Opaque workload payload (e.g. `ep:<offset>:<count>`).
+    pub payload: String,
+    /// Where the completing attempt ran.
+    pub allocation: Allocation,
+    /// Start time of the completing attempt.
+    pub started_at: SimTime,
+    /// Queue wait of the completing attempt.
+    pub wait: SimTime,
+}
+
 /// The server.
 pub struct PbsServer {
     nodes: BTreeMap<String, NodeInfo>,
@@ -290,15 +308,24 @@ impl PbsServer {
         self.pending.retain(|&p| p != id);
     }
 
-    /// Job finished (successfully or not).
-    pub fn complete(&mut self, id: JobId, exit_code: i32, now: SimTime) {
+    /// Job finished (successfully or not).  Returns the completion record
+    /// (payload, placement, wait) for time-driven callers.
+    pub fn complete(&mut self, id: JobId, exit_code: i32, now: SimTime) -> CompletionRecord {
         let job = self.jobs.get_mut(&id).expect("complete unknown job");
         assert_eq!(job.state, JobState::Running, "complete non-running job {id}");
         job.state = JobState::Completed;
         job.completed_at = Some(now);
         job.exit_code = Some(exit_code);
-        let alloc = job.allocation.clone().unwrap_or_default();
-        self.release(&alloc);
+        let record = CompletionRecord {
+            id,
+            exit_code,
+            payload: job.payload.clone(),
+            allocation: job.allocation.clone().unwrap_or_default(),
+            started_at: job.started_at.unwrap_or(now),
+            wait: job.wait_time().unwrap_or(0),
+        };
+        self.release(&record.allocation);
+        record
     }
 
     fn release(&mut self, alloc: &Allocation) {
@@ -400,6 +427,20 @@ mod tests {
         s.complete(id, 0, 500);
         assert!(s.job(id).unwrap().succeeded());
         assert_eq!(s.pool_utilization(NodePool::Gridlan).0, 0);
+    }
+
+    #[test]
+    fn completion_record_reports_payload_and_wait() {
+        let mut s = server_with_grid();
+        let id = s.qsub(&ep_script(1, 2), "u", "ep:0:4096", 5).unwrap();
+        s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 25);
+        let rec = s.complete(id, 0, 125);
+        assert_eq!(rec.id, id);
+        assert_eq!(rec.exit_code, 0);
+        assert_eq!(rec.payload, "ep:0:4096");
+        assert_eq!(rec.allocation.total_cores(), 2);
+        assert_eq!(rec.started_at, 25);
+        assert_eq!(rec.wait, 20);
     }
 
     #[test]

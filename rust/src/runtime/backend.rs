@@ -2,12 +2,15 @@
 //!
 //! The resource-management fabric (RM, scheduler, scenario runner) is
 //! decoupled from the compute payload behind [`ComputeBackend`], mirroring
-//! how grid middleware separates brokering from execution.  Two
+//! how grid middleware separates brokering from execution.  Three
 //! implementations exist:
 //!
 //! * [`ScalarBackend`] — pure Rust, zero external dependencies, always
 //!   available: the `workload::ep::ep_scalar` oracle run in cache-friendly
-//!   chunks.  This is the default and what CI exercises.
+//!   chunks.  What deterministic scenario runs and CI exercise.
+//! * [`ThreadedBackend`](super::threaded::ThreadedBackend) — the same
+//!   oracle fanned over N OS threads (`std::thread`, still zero deps) with
+//!   an exact merge; the default on multi-core hosts.
 //! * [`PjrtBackend`](super::pjrt::PjrtBackend) (`--features pjrt`) — the
 //!   AOT HLO artifact path; needs `make artifacts` plus the external
 //!   `xla` crate (see runtime/pjrt.rs for the gating story).
@@ -107,27 +110,40 @@ impl ComputeBackend for ScalarBackend {
     }
 }
 
+/// The best always-available pure-Rust backend for this host: the
+/// [`ThreadedBackend`](super::threaded::ThreadedBackend) across all
+/// hardware threads on a multi-core machine, the [`ScalarBackend`] on a
+/// single-core one.
+fn best_cpu_backend() -> Box<dyn ComputeBackend> {
+    let n = super::threaded::ThreadedBackend::available();
+    if n > 1 {
+        Box::new(super::threaded::ThreadedBackend::new(n))
+    } else {
+        Box::new(ScalarBackend::new())
+    }
+}
+
 /// Build the best backend available in this build: the PJRT path when the
-/// `pjrt` feature is on AND its artifacts load, otherwise the scalar
-/// backend.  Returns the backend plus an optional note explaining a
-/// fallback (callers print it so `--features pjrt` without artifacts is
-/// loud but not fatal).
+/// `pjrt` feature is on AND its artifacts load, otherwise the threaded
+/// (multi-core) or scalar pure-Rust backend.  Returns the backend plus an
+/// optional note explaining a fallback (callers print it so
+/// `--features pjrt` without artifacts is loud but not fatal).
 #[cfg(feature = "pjrt")]
 pub fn default_backend() -> (Box<dyn ComputeBackend>, Option<String>) {
     match super::pjrt::PjrtBackend::load_default() {
         Ok(b) => (Box::new(b), None),
         Err(e) => (
-            Box::new(ScalarBackend::new()),
-            Some(format!("pjrt backend unavailable ({e}); falling back to scalar")),
+            best_cpu_backend(),
+            Some(format!("pjrt backend unavailable ({e}); falling back to cpu")),
         ),
     }
 }
 
 /// Build the best backend available in this build (default configuration:
-/// always the scalar backend, never a note).
+/// threaded on multi-core hosts, scalar otherwise; never a note).
 #[cfg(not(feature = "pjrt"))]
 pub fn default_backend() -> (Box<dyn ComputeBackend>, Option<String>) {
-    (Box::new(ScalarBackend::new()), None)
+    (best_cpu_backend(), None)
 }
 
 #[cfg(test)]

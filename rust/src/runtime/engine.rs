@@ -2,12 +2,14 @@
 //! [`ComputeBackend`].
 //!
 //! `EpEngine::auto()` always succeeds: it picks the PJRT backend when the
-//! `pjrt` feature is on and its artifacts load, and the pure-Rust scalar
-//! backend otherwise — so `gridlan ep`, the examples, and the integration
+//! `pjrt` feature is on and its artifacts load, and otherwise the best
+//! pure-Rust backend for the host (threaded on multi-core, scalar on
+//! single-core) — so `gridlan ep`, the examples, and the integration
 //! tests run real compute in every build, with zero external dependencies
 //! in the default configuration.
 
 use super::backend::{default_backend, ComputeBackend, ScalarBackend};
+use super::threaded::ThreadedBackend;
 use crate::workload::ep::EpTally;
 
 /// The engine.
@@ -27,6 +29,11 @@ impl EpEngine {
     /// Explicitly the pure-Rust scalar backend.
     pub fn scalar() -> EpEngine {
         EpEngine { backend: Box::new(ScalarBackend::new()), fallback_note: None }
+    }
+
+    /// Explicitly the multi-threaded backend over `threads` OS threads.
+    pub fn threaded(threads: usize) -> EpEngine {
+        EpEngine { backend: Box::new(ThreadedBackend::new(threads)), fallback_note: None }
     }
 
     /// Wrap a caller-supplied backend.
@@ -101,6 +108,18 @@ mod tests {
         e.run_pairs(0, 65_536).unwrap();
         let r = e.measured_rate_mpairs().unwrap();
         assert!(r > 0.01, "rate={r} Mpairs/s");
+    }
+
+    #[test]
+    fn threaded_engine_matches_scalar_oracle() {
+        let mut e = EpEngine::threaded(4);
+        assert_eq!(e.backend_name(), "threaded");
+        let t = e.run_pairs(2_000, 130_000).unwrap();
+        let s = ep_scalar(2_000, 130_000);
+        assert_eq!(t.nacc, s.nacc);
+        assert_eq!(t.q, s.q);
+        assert!((t.sx - s.sx).abs() < 1e-7);
+        assert_eq!(e.pairs_executed(), 130_000);
     }
 
     #[test]

@@ -2,16 +2,20 @@
 //!
 //! The [`backend::ComputeBackend`] trait decouples the grid fabric from
 //! the compute payload.  The default [`backend::ScalarBackend`] runs the
-//! exact scalar EP oracle with zero external dependencies; the optional
-//! PJRT path (`--features pjrt` + a vendored `xla` crate) executes the
-//! AOT HLO artifacts produced by python/compile/aot.py instead.
+//! exact scalar EP oracle with zero external dependencies;
+//! [`threaded::ThreadedBackend`] fans a pair range over N OS threads with
+//! an exact merge; the optional PJRT path (`--features pjrt` + a vendored
+//! `xla` crate) executes the AOT HLO artifacts produced by
+//! python/compile/aot.py instead.
 
 pub mod backend;
 pub mod engine;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod threaded;
 
 pub use backend::{default_backend, ComputeBackend, ScalarBackend};
 pub use engine::EpEngine;
 pub use manifest::{ArtifactInfo, Manifest};
+pub use threaded::ThreadedBackend;

@@ -1,0 +1,195 @@
+//! Multi-threaded compute backend: one EP pair range fanned out over N OS
+//! threads.
+//!
+//! EP is embarrassingly parallel and the NPB LCG has O(log n) jump-ahead,
+//! so a `[offset, offset+count)` range splits into contiguous per-thread
+//! spans with zero communication — the same decomposition the paper uses
+//! across Gridlan nodes, applied across cores of one host.  Exactness is
+//! preserved: integer tally fields are bit-identical to the scalar oracle
+//! for any thread count, and the float sums agree to round-off because
+//! each span is summed in stream order and spans merge in index order
+//! (deterministic association).
+//!
+//! Plain `std::thread::scope` — no external dependencies, threads live
+//! only for the duration of one `run_pairs` call.
+
+use super::backend::{ComputeBackend, ScalarBackend, SCALAR_CHUNK_PAIRS};
+use crate::workload::ep::EpTally;
+use std::time::Instant;
+
+/// The multi-threaded pure-Rust backend.
+#[derive(Debug, Clone)]
+pub struct ThreadedBackend {
+    threads: usize,
+    chunk_pairs: u64,
+    pairs: u64,
+    secs: f64,
+}
+
+impl ThreadedBackend {
+    /// A backend fanning work over `threads` OS threads.
+    pub fn new(threads: usize) -> Self {
+        Self::with_chunk(threads, SCALAR_CHUNK_PAIRS)
+    }
+
+    /// Same, with an explicit per-thread chunk granularity (tests sweep
+    /// this to prove the geometry is invisible, like the scalar backend).
+    pub fn with_chunk(threads: usize, chunk_pairs: u64) -> Self {
+        assert!(threads >= 1, "threads must be >= 1");
+        assert!(chunk_pairs > 0, "chunk_pairs must be >= 1");
+        Self { threads, chunk_pairs, pairs: 0, secs: 0.0 }
+    }
+
+    /// Configured thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Hardware parallelism of this host (>= 1).
+    pub fn available() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// Split `[offset, offset+count)` into at most `n` contiguous spans,
+    /// remainder spread over the first spans (the NPB-MPI partition rule).
+    fn spans(offset: u64, count: u64, n: u64) -> Vec<(u64, u64)> {
+        let n = n.clamp(1, count.max(1));
+        let base = count / n;
+        let rem = count % n;
+        let mut out = Vec::with_capacity(n as usize);
+        let mut at = offset;
+        for i in 0..n {
+            let c = base + u64::from(i < rem);
+            if c > 0 {
+                out.push((at, c));
+                at += c;
+            }
+        }
+        out
+    }
+}
+
+impl ComputeBackend for ThreadedBackend {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn run_pairs(&mut self, offset: u64, count: u64) -> Result<EpTally, String> {
+        let t0 = Instant::now();
+        let spans = Self::spans(offset, count, self.threads as u64);
+        let chunk = self.chunk_pairs;
+        let tally = std::thread::scope(|scope| {
+            // Each worker is a private ScalarBackend over its span, so the
+            // chunked stream-order execution path stays single-sourced.
+            let handles: Vec<_> = spans
+                .iter()
+                .map(|&(off, cnt)| {
+                    scope.spawn(move || ScalarBackend::with_chunk(chunk).run_pairs(off, cnt))
+                })
+                .collect();
+            let mut total = EpTally::default();
+            for h in handles {
+                let t = h.join().map_err(|_| "EP worker thread panicked".to_string())??;
+                total.merge(&t); // span (index) order: deterministic float association
+            }
+            Ok::<EpTally, String>(total)
+        })?;
+        self.secs += t0.elapsed().as_secs_f64();
+        self.pairs += count;
+        Ok(tally)
+    }
+
+    fn pairs_executed(&self) -> u64 {
+        self.pairs
+    }
+
+    fn compute_secs(&self) -> f64 {
+        self.secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::ep::ep_scalar;
+
+    #[test]
+    fn matches_oracle_for_any_thread_count() {
+        let reference = ep_scalar(7_000, 190_001);
+        for threads in [1usize, 2, 3, 5, 8] {
+            let mut b = ThreadedBackend::new(threads);
+            let t = b.run_pairs(7_000, 190_001).unwrap();
+            assert_eq!(t.nacc, reference.nacc, "threads={threads}");
+            assert_eq!(t.q, reference.q, "threads={threads}");
+            assert_eq!(t.pairs, reference.pairs, "threads={threads}");
+            assert!((t.sx - reference.sx).abs() < 1e-7, "threads={threads}");
+            assert!((t.sy - reference.sy).abs() < 1e-7, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn single_thread_is_bit_identical_to_scalar_chunking() {
+        // threads=1 with the default chunk does exactly what ScalarBackend
+        // does: the same chunk sums merged in the same order.
+        use crate::runtime::backend::ScalarBackend;
+        let mut s = ScalarBackend::new();
+        let mut t = ThreadedBackend::new(1);
+        let a = s.run_pairs(123, 200_000).unwrap();
+        let b = t.run_pairs(123, 200_000).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = ThreadedBackend::new(4);
+        let mut b = ThreadedBackend::new(4);
+        assert_eq!(a.run_pairs(0, 300_000).unwrap(), b.run_pairs(0, 300_000).unwrap());
+    }
+
+    #[test]
+    fn spans_partition_exactly() {
+        for (count, n) in [(100u64, 7u64), (3, 8), (1 << 20, 4), (1, 1)] {
+            let spans = ThreadedBackend::spans(50, count, n);
+            let total: u64 = spans.iter().map(|&(_, c)| c).sum();
+            assert_eq!(total, count);
+            let mut at = 50u64;
+            for &(off, c) in &spans {
+                assert_eq!(off, at, "contiguous");
+                assert!(c > 0, "no empty spans");
+                at += c;
+            }
+            assert!(spans.len() as u64 <= n.min(count));
+        }
+    }
+
+    #[test]
+    fn more_threads_than_pairs_degenerates_cleanly() {
+        let mut b = ThreadedBackend::new(64);
+        let t = b.run_pairs(0, 3).unwrap();
+        assert_eq!(t.nacc, ep_scalar(0, 3).nacc);
+        assert_eq!(b.pairs_executed(), 3);
+    }
+
+    #[test]
+    fn zero_pairs_is_empty_tally() {
+        let mut b = ThreadedBackend::new(4);
+        let t = b.run_pairs(10, 0).unwrap();
+        assert_eq!(t, EpTally::default());
+    }
+
+    #[test]
+    fn accounting_accumulates() {
+        let mut b = ThreadedBackend::new(2);
+        b.run_pairs(0, 1 << 16).unwrap();
+        b.run_pairs(1 << 16, 1 << 16).unwrap();
+        assert_eq!(b.pairs_executed(), 2 << 16);
+        assert!(b.compute_secs() > 0.0);
+        assert!(b.measured_rate_mpairs().unwrap() > 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "threads")]
+    fn zero_threads_rejected() {
+        ThreadedBackend::new(0);
+    }
+}

@@ -9,7 +9,10 @@
 //! constants (cross-checked against the official NPB values for class S
 //! within the benchmark's 1e-8 relative tolerance — see EXPERIMENTS.md).
 
+use crate::rm::alloc::ResourceRequest;
+use crate::sim::clock::SimTime;
 use crate::util::rng::{NpbLcg, NPB_MASK, NPB_SEED, R46};
+use crate::workload::trace::{JobPayload, TraceJob};
 
 /// EP observables, mergeable across slices/chunks.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -146,6 +149,22 @@ pub struct EpSlice {
     pub proc: u32,
     pub pair_offset: u64,
     pub pair_count: u64,
+}
+
+impl EpSlice {
+    /// This slice as a single-core RM submission at time `at` — the
+    /// Fig. 3 scatter-protocol job shape, carried as a real-compute
+    /// [`JobPayload::Ep`] through the event-driven scenario.
+    pub fn trace_job(&self, at: SimTime, walltime: SimTime) -> TraceJob {
+        TraceJob {
+            at,
+            owner: "gridlan".into(),
+            request: ResourceRequest { nodes: 1, ppn: 1 },
+            compute: 0,
+            walltime,
+            payload: JobPayload::Ep { offset: self.pair_offset, count: self.pair_count },
+        }
+    }
 }
 
 impl EpJob {

@@ -8,6 +8,31 @@ use crate::rm::alloc::ResourceRequest;
 use crate::sim::clock::{SimTime, DUR_SEC};
 use crate::util::rng::SplitMix64;
 
+/// What a submitted job actually runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum JobPayload {
+    /// Synthetic work: occupies the allocation for [`TraceJob::compute`]
+    /// (rescaled by the speed model); no real computation happens.
+    #[default]
+    Synthetic,
+    /// Real EP compute over global pairs `[offset, offset + count)`:
+    /// the duration comes from the speed model (pairs over the slowest
+    /// allocated core's rate) and the range is executed for REAL on the
+    /// scenario's `ComputeBackend` at completion time.
+    Ep { offset: u64, count: u64 },
+}
+
+impl JobPayload {
+    /// The opaque payload string the RM carries (`trace:<ns>` /
+    /// `ep:<offset>:<count>`).
+    pub fn encode(&self, compute: SimTime) -> String {
+        match self {
+            JobPayload::Synthetic => format!("trace:{compute}"),
+            JobPayload::Ep { offset, count } => format!("ep:{offset}:{count}"),
+        }
+    }
+}
+
 /// One synthetic submission.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceJob {
@@ -15,10 +40,13 @@ pub struct TraceJob {
     pub owner: String,
     pub request: ResourceRequest,
     /// Actual compute duration (what the workload would take on one
-    /// reference core; the perf model rescales per placement).
+    /// reference core; the perf model rescales per placement).  Ignored
+    /// for [`JobPayload::Ep`], whose duration derives from its pair count.
     pub compute: SimTime,
     /// The walltime the user *requested* (over-estimate, like real users).
     pub walltime: SimTime,
+    /// What the job runs (synthetic occupancy or real EP compute).
+    pub payload: JobPayload,
 }
 
 /// Trace generator.
@@ -68,6 +96,7 @@ impl TraceGenerator {
                     request,
                     compute,
                     walltime,
+                    payload: JobPayload::Synthetic,
                 });
                 t += (rng.next_f64() * 2.0 * self.mean_gap as f64) as SimTime + DUR_SEC;
             }
@@ -100,6 +129,12 @@ mod tests {
             assert!(j.walltime >= j.compute, "users over-estimate");
             assert!(j.request.total_cores() >= 1);
         }
+    }
+
+    #[test]
+    fn payload_encoding() {
+        assert_eq!(JobPayload::Synthetic.encode(5), "trace:5");
+        assert_eq!(JobPayload::Ep { offset: 10, count: 20 }.encode(999), "ep:10:20");
     }
 
     #[test]

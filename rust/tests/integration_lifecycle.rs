@@ -3,7 +3,7 @@
 
 use gridlan::config::{Config, SchedPolicy};
 use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::coordinator::scenario::{run_ep_slices, run_trace, Scenario};
+use gridlan::coordinator::scenario::{run_ep_slices, run_scenario, run_trace, Scenario};
 use gridlan::host::faults::FaultPlan;
 use gridlan::rm::alloc::ResourceRequest;
 use gridlan::rm::job::JobState;
@@ -12,7 +12,7 @@ use gridlan::rm::script::PbsScript;
 use gridlan::runtime::engine::EpEngine;
 use gridlan::sim::clock::DUR_SEC;
 use gridlan::workload::ep::{ep_scalar, EpSlice};
-use gridlan::workload::trace::{TraceGenerator, TraceJob};
+use gridlan::workload::trace::{JobPayload, TraceGenerator, TraceJob};
 use gridlan::util::rng::SplitMix64;
 
 fn job(at_secs: u64, nodes: u32, ppn: u32, compute_secs: u64) -> TraceJob {
@@ -22,6 +22,7 @@ fn job(at_secs: u64, nodes: u32, ppn: u32, compute_secs: u64) -> TraceJob {
         request: ResourceRequest { nodes, ppn },
         compute: compute_secs * DUR_SEC,
         walltime: compute_secs * 4 * DUR_SEC,
+        payload: JobPayload::Synthetic,
     }
 }
 
@@ -178,6 +179,52 @@ fn survives_extreme_fault_storm() {
     assert_eq!(report.metrics.jobs_completed, 10, "{:?}", report.metrics);
     assert!(report.metrics.jobs_requeued > 0);
     assert!(report.metrics.goodput() < 1.0);
+}
+
+#[test]
+fn mixed_trace_and_ep_jobs_survive_a_fault_storm_exactly() {
+    // The tentpole scenario: synthetic trace jobs and real-compute EP
+    // payload jobs coexist inside one event-driven run under a heavy
+    // FaultPlan.  Requeues happen, yet the merged EP tally is exactly the
+    // scalar oracle over the union pair range, and the whole report is
+    // deterministic run-to-run.
+    let run = || {
+        let mut trace: Vec<TraceJob> = (0..8).map(|i| job(i * 120, 1, 2, 600)).collect();
+        for i in 0..12u64 {
+            trace.push(EpSlice {
+                proc: i as u32,
+                pair_offset: i * 250_000,
+                pair_count: 250_000,
+            }
+            .trace_job((300 + i * 60) * DUR_SEC, 3600 * DUR_SEC));
+        }
+        let faults = FaultPlan {
+            mtbf_power_off: 1800 * DUR_SEC,
+            mtbf_net_drop: 0,
+            mtbf_vm_crash: 2400 * DUR_SEC,
+            mean_outage: 300 * DUR_SEC,
+        };
+        let scenario = Scenario { horizon: 6 * 3600 * DUR_SEC, faults, ..Default::default() };
+        run_scenario(Gridlan::table1(), trace, &scenario, EpEngine::scalar())
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.report.metrics, r2.report.metrics, "reports must be deterministic");
+    assert_eq!(r1.report.ep_tallies, r2.report.ep_tallies, "tallies must be deterministic");
+    let m = &r1.report.metrics;
+    assert_eq!(m.jobs_completed, 8 + 12, "{m:?}");
+    assert_eq!(m.ep_jobs_completed, 12);
+    assert!(m.faults > 0 && m.jobs_requeued > 0, "storm never hit running work: {m:?}");
+    assert_eq!(m.ep_pairs_executed, 12 * 250_000);
+    let total = r1.report.ep_total();
+    let oracle = ep_scalar(0, 12 * 250_000);
+    assert_eq!(total.nacc, oracle.nacc, "merged tally drifted from the oracle");
+    assert_eq!(total.q, oracle.q);
+    assert_eq!(total.pairs, oracle.pairs);
+    assert!((total.sx - oracle.sx).abs() < 1e-7);
+    assert!((total.sy - oracle.sy).abs() < 1e-7);
+    // The engine executed each range exactly once per completion.
+    assert_eq!(r1.engine.pairs_executed(), 12 * 250_000);
 }
 
 #[test]

@@ -7,6 +7,7 @@
 
 use gridlan::runtime::backend::{ComputeBackend, ScalarBackend};
 use gridlan::runtime::engine::EpEngine;
+use gridlan::runtime::threaded::ThreadedBackend;
 use gridlan::workload::ep::{ep_scalar, EpClass, EpJob, EpTally};
 
 #[test]
@@ -22,6 +23,23 @@ fn every_chunk_size_matches_the_scalar_oracle() {
         assert_eq!(t.nacc, oracle.nacc, "chunk {chunk}");
         assert_eq!(t.q, oracle.q, "chunk {chunk}");
         assert_eq!(e.pairs_executed(), range, "chunk {chunk}");
+    }
+}
+
+#[test]
+fn threaded_backend_any_geometry_matches_the_oracle() {
+    // Thread count and chunk size are execution details: any combination
+    // over the same range must tally like the oracle (integer fields
+    // exactly, sums to round-off).
+    let range = 150_001u64;
+    let oracle = ep_scalar(0, range);
+    for (threads, chunk) in [(2usize, 1u64 << 12), (4, 1 << 16), (7, (1 << 14) + 17)] {
+        let mut e = EpEngine::with_backend(Box::new(ThreadedBackend::with_chunk(threads, chunk)));
+        let t = e.run_pairs(0, range).unwrap();
+        assert_eq!(t.nacc, oracle.nacc, "threads {threads} chunk {chunk}");
+        assert_eq!(t.q, oracle.q, "threads {threads} chunk {chunk}");
+        assert!((t.sx - oracle.sx).abs() < 1e-7, "threads {threads} chunk {chunk}");
+        assert_eq!(e.pairs_executed(), range);
     }
 }
 
