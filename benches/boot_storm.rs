@@ -2,84 +2,11 @@
 //! affect PXE/nfsroot boot time (the §5 "iPXE/HTTP alternative" motivation).
 //!
 //! Run: `cargo bench --bench boot_storm`
-
-use gridlan::boot::nfs::NfsExport;
-use gridlan::boot::pxe::{BootParams, BootPlan};
-use gridlan::boot::tftp::{TftpServer, BLKSIZE_DEFAULT, BLKSIZE_PXE};
-use gridlan::config::Config;
-use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::host::client::ClientOs;
-use gridlan::util::table::{secs, Align, Table};
-use gridlan::vm::cpu::CpuModel;
-use gridlan::vm::hypervisor::{Hypervisor, HypervisorKind};
-
-fn scaled_config(n: u32) -> Config {
-    let mut cfg = Config::table1();
-    let template = cfg.clients[0].clone();
-    cfg.clients = (0..n)
-        .map(|i| {
-            let mut c = template.clone();
-            c.name = format!("n{:02}", i + 1);
-            c.cpu = CpuModel::i7_960();
-            c.os = if i % 2 == 0 { ClientOs::Linux } else { ClientOs::Windows };
-            c.switch_hops = 2 + (i % 3);
-            c
-        })
-        .collect();
-    cfg
-}
+//! Writes the deterministic series to `BENCH_boot_storm.json`.
 
 fn main() {
-    // Per-node boot decomposition on the paper's testbed.
-    let mut g = Gridlan::table1();
-    println!("per-node boot plans (paper testbed):");
-    for name in ["n01", "n02", "n03", "n04"] {
-        g.connect_client(name).unwrap();
-        let plan = g.boot_plan(name);
-        print!("  {name}: total {:>8}  ", secs(plan.total() as f64 / 1e9));
-        for (state, dur) in &plan.phases {
-            if *dur > 0 {
-                print!("{state:?}={} ", secs(*dur as f64 / 1e9));
-            }
-        }
-        println!();
-    }
-
-    // Scaling the fleet: slowest boot vs node count (boots overlap; the
-    // TFTP path is per-node lock-step so the curve is flat until the
-    // server link saturates — which the model exposes via us_per_byte).
-    println!("\nboot storm: fleet size vs slowest boot:");
-    let mut t = Table::new(&["nodes", "slowest boot", "mean boot"])
-        .align(&[Align::Right, Align::Right, Align::Right]);
-    for n in [1u32, 4, 8, 16, 32, 64] {
-        let mut g = Gridlan::build(scaled_config(n));
-        let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
-        let mut total = 0u64;
-        let mut slowest = 0u64;
-        for name in &names {
-            g.connect_client(name).unwrap();
-            let p = g.boot_plan(name).total();
-            total += p;
-            slowest = slowest.max(p);
-        }
-        t.row(&[
-            n.to_string(),
-            secs(slowest as f64 / 1e9),
-            secs(total as f64 / n as f64 / 1e9),
-        ]);
-    }
-    print!("{}", t.render());
-
-    // Ablation: TFTP block size (512 vs PXE-negotiated 1432) and the
-    // hypervisor's kernel-init penalty.
-    println!("\nTFTP blksize x hypervisor ablation (n01-like node, 700 µs one-way):");
-    let nfs = NfsExport::debian();
-    let params = BootParams { one_way_us: 700.0, us_per_byte: 0.008, kernel_init_ms: 2800.0 };
-    for blk in [BLKSIZE_DEFAULT, BLKSIZE_PXE] {
-        for hv in [HypervisorKind::QemuKvm, HypervisorKind::VirtualBox, HypervisorKind::PureQemu] {
-            let plan =
-                BootPlan::compute(&Hypervisor::new(hv), &TftpServer::new(blk), &nfs, &params);
-            println!("  blksize {blk:>5}, {hv:?}: {}", secs(plan.total() as f64 / 1e9));
-        }
-    }
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_boot_storm();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

@@ -1,94 +1,15 @@
 //! Runtime perf bench: EP throughput through the `ComputeBackend` trait —
 //! the hot path the simulated jobs run.
 //!
-//! Default builds measure the pure-Rust scalar backend across chunk
-//! geometries and the multi-threaded backend across thread counts (with
-//! speedup vs the scalar baseline); `--features pjrt` additionally tries
-//! the PJRT artifact backend and falls back (exit 0, with a note) when
-//! artifacts or the `xla` crate are missing.
+//! Wall-clock rates stay on stdout; `BENCH_ep_throughput.json` carries the
+//! bit-exact tally invariants.  `GRIDLAN_BENCH_QUICK=1` shrinks the
+//! wall-clock loops without touching the JSON.
 //!
 //! Run: `cargo bench --bench ep_throughput`
 
-use gridlan::runtime::backend::{ComputeBackend, ScalarBackend};
-use gridlan::runtime::engine::EpEngine;
-use gridlan::runtime::threaded::ThreadedBackend;
-use gridlan::workload::ep::ep_scalar;
-
-const TOTAL: u64 = 1 << 22; // 4M pairs per measurement
-
-/// Measure one backend over TOTAL pairs; prints a table row (plus a
-/// speedup column when a baseline rate is given) and returns the rate in
-/// Mpairs/s.
-fn measure(backend: &mut dyn ComputeBackend, label: &str, baseline: Option<f64>) -> f64 {
-    backend.run_pairs(0, 1 << 16).unwrap(); // warm-up (spawn paths, caches)
-    let t0 = std::time::Instant::now();
-    backend.run_pairs(0, TOTAL).unwrap();
-    let dt = t0.elapsed().as_secs_f64();
-    let rate = TOTAL as f64 / dt / 1e6;
-    let speedup = baseline.map(|b| format!(" {:>8.2}x", rate / b.max(1e-9))).unwrap_or_default();
-    println!("{label:>12} {:>14} {:>12.1} {:>14.1}{speedup}", TOTAL, dt * 1e3, rate);
-    rate
-}
-
 fn main() {
-    // Backend selection report (the `--features pjrt` story).
-    let mut auto = EpEngine::auto();
-    if let Some(note) = auto.fallback_note.take() {
-        println!("note: {note}");
-    }
-    println!("active backend: {}\n", auto.backend_name());
-
-    println!("{:>12} {:>14} {:>12} {:>14}", "chunk", "pairs", "wall ms", "Mpairs/s");
-    // Scalar backend across chunk sizes: the chunking overhead (jump-ahead
-    // reseeks per chunk) must vanish by ~64Ki pairs.
-    let mut scalar_rate = 0.0f64;
-    for chunk in [1u64 << 10, 1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20] {
-        let mut b = ScalarBackend::with_chunk(chunk);
-        let r = measure(&mut b, &format!("scalar/{chunk}"), None);
-        if chunk == 1 << 16 {
-            scalar_rate = r;
-        }
-    }
-
-    // Threaded backend across thread counts: the acceptance bar is
-    // >= 1.5x the scalar baseline at 4 threads on a multi-core host.
-    println!(
-        "\n{:>12} {:>14} {:>12} {:>14} {:>9}   ({} hw threads, speedup vs scalar/65536)",
-        "threads",
-        "pairs",
-        "wall ms",
-        "Mpairs/s",
-        "speedup",
-        ThreadedBackend::available()
-    );
-    for threads in [1usize, 2, 4, 8] {
-        let mut b = ThreadedBackend::new(threads);
-        measure(&mut b, &format!("threaded/{threads}"), Some(scalar_rate));
-    }
-
-    // The auto-selected engine end-to-end (what `gridlan ep` uses).
-    let t0 = std::time::Instant::now();
-    auto.run_pairs(0, TOTAL).unwrap();
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "\nauto engine ({}): {:.1} Mpairs/s over {} pairs",
-        auto.backend_name(),
-        TOTAL as f64 / dt / 1e6,
-        TOTAL
-    );
-
-    // Single-call oracle reference (no trait, no chunking, no threads).
-    let t0 = std::time::Instant::now();
-    let tally = ep_scalar(0, 1 << 20);
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "raw oracle:    {:.1} Mpairs/s (1M pairs in {:.1} ms; nacc={})",
-        (1u64 << 20) as f64 / dt / 1e6,
-        dt * 1e3,
-        tally.nacc
-    );
-    println!(
-        "\n(trait dispatch + chunk merging should cost <2% vs the raw oracle \
-         at the default 64Ki chunk; threaded/4 should clear 1.5x scalar.)"
-    );
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_ep_throughput();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

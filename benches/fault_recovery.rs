@@ -2,66 +2,11 @@
 //! quantitative version of §2.6/§4's resilience story.
 //!
 //! Run: `cargo bench --bench fault_recovery`
-
-use gridlan::config::Config;
-use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::coordinator::scenario::{run_trace, Scenario};
-use gridlan::host::faults::FaultPlan;
-use gridlan::rm::alloc::ResourceRequest;
-use gridlan::sim::clock::DUR_SEC;
-use gridlan::util::table::{secs, Align, Table};
-use gridlan::workload::trace::TraceJob;
-
-fn trace() -> Vec<TraceJob> {
-    (0..24)
-        .map(|i| TraceJob {
-            at: i as u64 * 120 * DUR_SEC,
-            owner: format!("u{}", i % 4),
-            request: ResourceRequest { nodes: 1, ppn: 1 + (i % 4) as u32 },
-            compute: (300 + 120 * (i % 4) as u64) * DUR_SEC,
-            walltime: 3600 * DUR_SEC,
-            payload: gridlan::workload::trace::JobPayload::Synthetic,
-        })
-        .collect()
-}
+//! Writes the deterministic series to `BENCH_fault_recovery.json`.
 
 fn main() {
-    let mut t = Table::new(&[
-        "fault scale",
-        "faults",
-        "requeues",
-        "wd restarts",
-        "completed",
-        "goodput",
-        "makespan",
-    ])
-    .title("X1 — resilience under fault pressure (24 jobs, 8h horizon)")
-    .align(&[
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-    ]);
-    for scale in [0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0] {
-        let faults =
-            if scale > 0.0 { FaultPlan::lab_default().scaled(scale) } else { FaultPlan::none() };
-        let scenario = Scenario { horizon: 8 * 3600 * DUR_SEC, faults, ..Default::default() };
-        let report = run_trace(Gridlan::build(Config::table1()), trace(), &scenario);
-        let m = report.metrics;
-        t.row(&[
-            format!("{scale}x"),
-            m.faults.to_string(),
-            m.jobs_requeued.to_string(),
-            m.watchdog_restarts.to_string(),
-            format!("{}/24", m.jobs_completed),
-            format!("{:.1}%", 100.0 * m.goodput()),
-            secs(m.makespan as f64 / 1e9),
-        ]);
-    }
-    print!("{}", t.render());
-    println!("\nexpected shape: goodput decays and makespan stretches with fault scale,");
-    println!("but completion stays 24/24 — the §4 script-folder + watchdog loop holds.");
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_fault_recovery();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

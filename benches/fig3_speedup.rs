@@ -2,36 +2,11 @@
 //! Gridlan vs 64-core comparison server vs ideal t1/n).
 //!
 //! Run: `cargo bench --bench fig3_speedup`
-
-use gridlan::bench::fig3;
-use gridlan::perf::speedmodel::{ComparisonServer, GridlanPool};
-use gridlan::workload::ep::EpClass;
+//! Writes the deterministic series to `BENCH_fig3_speedup.json`.
 
 fn main() {
-    let pool = GridlanPool::table1();
-    let t0 = std::time::Instant::now();
-    let series = fig3::fig3_series(&pool, EpClass::D, 60, 42);
-    print!("{}", fig3::render(&series));
-    for (name, ok) in fig3::shape_checks(&series) {
-        println!("  [{}] {name}", if ok { "ok" } else { "FAIL" });
-    }
-
-    // The deterministic full curve 1..26 (the figure's x-axis), Gridlan
-    // best/worst placement band vs the server.
-    println!("\ndeterministic curve (best placement over 200 draws per n):");
-    println!("{:>5} {:>12} {:>12} {:>12}", "cores", "gridlan best", "gridlan worst", "server");
-    let server = ComparisonServer::opteron();
-    let mut rng = gridlan::util::rng::SplitMix64::new(7);
-    for n in [1u32, 2, 4, 8, 13, 20, 26] {
-        let mut best = f64::INFINITY;
-        let mut worst = 0.0f64;
-        for _ in 0..200 {
-            let t = pool.elapsed_secs(EpClass::D.pairs(), &pool.random_placement(n, &mut rng));
-            best = best.min(t);
-            worst = worst.max(t);
-        }
-        let s = server.elapsed_secs(EpClass::D.pairs(), n);
-        println!("{n:>5} {best:>11.1}s {worst:>11.1}s {s:>11.1}s");
-    }
-    println!("\nwall time: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_fig3_speedup();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

@@ -2,42 +2,11 @@
 //! and collective scaling (context the paper's §4 analysis needs).
 //!
 //! Run: `cargo bench --bench mpi_latency`
-
-use gridlan::bench::mpilat;
-use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::mpi::collectives::{allreduce_us, bcast_us};
-use gridlan::mpi::comm::{Communicator, RankLoc};
-use gridlan::mpi::latency::mpi_latency_test;
-use gridlan::util::rng::SplitMix64;
+//! Writes the deterministic series to `BENCH_mpi_latency.json`.
 
 fn main() {
-    let mut g = Gridlan::table1();
-    g.boot_all(0);
-
-    let rows = mpilat::mpi_latency_rows(&mut g, 500);
-    print!("{}", mpilat::render(&rows));
-
-    // Message-size sweep (node↔node through the hub: the paper's two-leg
-    // routing property shows up as ~2x the server↔node latency).
-    let node = |c: &str| RankLoc::Node {
-        client: c.into(),
-        vnet_us: g.client(c).unwrap().hypervisor.vnet_one_way_us,
-    };
-    let comm = Communicator::new(vec![RankLoc::Server, node("n01"), node("n02"), node("n03"), node("n04")]);
-    println!("\nping-pong RTT vs message size (µs):");
-    println!("{:>10} {:>14} {:>14}", "bytes", "server<->n01", "n01<->n02");
-    let mut rng = SplitMix64::new(5);
-    for bytes in [56u32, 1_024, 16_384, 262_144, 1_048_576] {
-        let s2n = mpi_latency_test(&comm, &g.net, &g.hub, 0, 1, bytes, 50, &mut rng).unwrap();
-        let n2n = mpi_latency_test(&comm, &g.net, &g.hub, 1, 2, bytes, 50, &mut rng).unwrap();
-        println!("{bytes:>10} {:>13.0} {:>13.0}", s2n.mean(), n2n.mean());
-    }
-
-    // Collectives over the hub star.
-    println!("\ncollectives over 5 ranks (µs):");
-    for bytes in [56u32, 65_536] {
-        let b = bcast_us(&comm, &g.net, &g.hub, 0, bytes, &mut rng).unwrap();
-        let ar = allreduce_us(&comm, &g.net, &g.hub, bytes, &mut rng).unwrap();
-        println!("  {bytes:>7} B: bcast {b:>8.0}   allreduce {ar:>8.0}");
-    }
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_mpi_latency();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

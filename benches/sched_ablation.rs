@@ -2,102 +2,11 @@
 //! backfill on the synthetic lab trace, clean and under faults.
 //!
 //! Run: `cargo bench --bench sched_ablation`
-
-use gridlan::config::{Config, SchedPolicy};
-use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::coordinator::scenario::{run_trace, Scenario};
-use gridlan::host::faults::FaultPlan;
-use gridlan::sim::clock::DUR_SEC;
-use gridlan::util::rng::SplitMix64;
-use gridlan::util::table::{secs, Align, Table};
-use gridlan::workload::trace::TraceGenerator;
+//! Writes the deterministic series to `BENCH_sched_ablation.json`.
 
 fn main() {
-    let gen = TraceGenerator::lab_day();
-    let mut t = Table::new(&[
-        "scheduler",
-        "faults",
-        "completed",
-        "mean wait",
-        "makespan",
-        "goodput",
-        "sim events",
-        "wall ms",
-    ])
-    .title("A1 — FIFO vs backfill on the lab-day trace")
-    .align(&[
-        Align::Left,
-        Align::Left,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-        Align::Right,
-    ]);
-
-    for (flabel, fscale) in [("none", 0.0), ("lab x4", 4.0)] {
-        for policy in [SchedPolicy::Fifo, SchedPolicy::Backfill] {
-            let mut cfg = Config::table1();
-            cfg.sched = policy;
-            // Same trace for both policies: same generator seed.
-            let mut rng = SplitMix64::new(1234);
-            let trace = gen.generate(&mut rng);
-            let n = trace.len() as u64;
-            let faults = if fscale > 0.0 {
-                FaultPlan::lab_default().scaled(fscale)
-            } else {
-                FaultPlan::none()
-            };
-            let scenario = Scenario { horizon: gen.horizon * 4, faults, ..Default::default() };
-            let w0 = std::time::Instant::now();
-            let report = run_trace(Gridlan::build(cfg), trace, &scenario);
-            let m = report.metrics;
-            t.row(&[
-                format!("{policy:?}"),
-                flabel.to_string(),
-                format!("{}/{n}", m.jobs_completed),
-                secs(m.mean_wait_secs()),
-                secs(m.makespan as f64 / 1e9),
-                format!("{:.1}%", 100.0 * m.goodput()),
-                report.events_executed.to_string(),
-                format!("{:.0}", w0.elapsed().as_secs_f64() * 1e3),
-            ]);
-        }
-    }
-    print!("{}", t.render());
-    println!("\nexpected shape: backfill lowers mean wait on mixed traces; both complete everything.");
-
-    // Wide-vs-narrow starvation microbenchmark: one wide job at the head,
-    // stream of narrow jobs behind it.
-    println!("\nhead-of-line case (1 wide job then 12 narrow):");
-    for policy in [SchedPolicy::Fifo, SchedPolicy::Backfill] {
-        let mut cfg = Config::table1();
-        cfg.sched = policy;
-        let mut trace = vec![gridlan::workload::trace::TraceJob {
-            at: 0,
-            owner: "big".into(),
-            request: gridlan::rm::alloc::ResourceRequest { nodes: 3, ppn: 6 },
-            compute: 1800 * DUR_SEC,
-            walltime: 3600 * DUR_SEC,
-            payload: gridlan::workload::trace::JobPayload::Synthetic,
-        }];
-        for i in 0..12 {
-            trace.push(gridlan::workload::trace::TraceJob {
-                at: 10 * DUR_SEC,
-                owner: format!("small{i}"),
-                request: gridlan::rm::alloc::ResourceRequest { nodes: 1, ppn: 1 },
-                compute: 120 * DUR_SEC,
-                walltime: 240 * DUR_SEC,
-                payload: gridlan::workload::trace::JobPayload::Synthetic,
-            });
-        }
-        let scenario = Scenario { horizon: 6 * 3600 * DUR_SEC, ..Default::default() };
-        let report = run_trace(Gridlan::build(cfg), trace, &scenario);
-        println!(
-            "  {policy:?}: mean wait {}, makespan {}",
-            secs(report.metrics.mean_wait_secs()),
-            secs(report.metrics.makespan as f64 / 1e9)
-        );
-    }
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_sched_ablation();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

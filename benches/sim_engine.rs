@@ -1,95 +1,15 @@
 //! L3 perf bench: the discrete-event core and the scheduler hot path —
 //! the targets from DESIGN.md §7 (≥1M events/s; sub-100µs qsub→decision).
 //!
+//! Wall-clock rates stay on stdout; `BENCH_sim_engine.json` carries the
+//! deterministic event/cycle counters.  `GRIDLAN_BENCH_QUICK=1` shrinks
+//! the wall-clock loops without touching the JSON.
+//!
 //! Run: `cargo bench --bench sim_engine`
 
-use gridlan::rm::queue::NodePool;
-use gridlan::rm::sched::FifoScheduler;
-use gridlan::rm::script::PbsScript;
-use gridlan::rm::server::PbsServer;
-use gridlan::sim::Simulator;
-
-fn bench_event_engine() {
-    // Self-rescheduling event chains: the pure engine overhead.
-    struct W {
-        count: u64,
-        limit: u64,
-    }
-    fn tick(s: &mut Simulator<W>, w: &mut W) {
-        w.count += 1;
-        if w.count < w.limit {
-            s.schedule_in(1_000, tick);
-        }
-    }
-    const N: u64 = 2_000_000;
-    let mut sim = Simulator::new();
-    let mut w = W { count: 0, limit: N };
-    for _ in 0..64 {
-        sim.schedule_at(0, tick);
-    }
-    w.limit = N;
-    let t0 = std::time::Instant::now();
-    sim.run_to_completion(&mut w);
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "event engine: {} events in {:.3}s = {:.2}M events/s  (target: >=1M/s)",
-        sim.executed(),
-        dt,
-        sim.executed() as f64 / dt / 1e6
-    );
-}
-
-fn bench_sched_cycle() {
-    // qsub -> scheduling decision latency at realistic queue depths.
-    for depth in [1usize, 10, 100, 1000] {
-        let mut s = PbsServer::new();
-        for (name, cores) in [("n01", 12), ("n02", 6), ("n03", 4), ("n04", 4)] {
-            s.register_node(name, cores, NodePool::Gridlan);
-            s.node_up(name);
-        }
-        let script = PbsScript::parse("#PBS -q gridlan\n#PBS -l nodes=1:ppn=2\n./x\n").unwrap();
-        for i in 0..depth {
-            s.qsub(&script, "u", "", i as u64).unwrap();
-        }
-        let t0 = std::time::Instant::now();
-        let mut cycles = 0u64;
-        // Drain the whole queue: schedule, complete, repeat.
-        loop {
-            let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1_000_000);
-            cycles += 1;
-            if d.is_empty() {
-                break;
-            }
-            for (id, _) in d {
-                s.complete(id, 0, 2_000_000);
-            }
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        println!(
-            "sched cycle: depth {depth:>5}: drained in {:.2} ms over {cycles} cycles ({:.1} µs/job)",
-            dt * 1e3,
-            dt * 1e6 / depth as f64
-        );
-    }
-}
-
-fn bench_ping_path() {
-    let mut g = gridlan::coordinator::gridlan::Gridlan::table1();
-    g.boot_all(0);
-    let t0 = std::time::Instant::now();
-    const N: usize = 50_000;
-    let s = g.ping_node("n01", N).unwrap();
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "ping path: {N} node pings in {:.1} ms = {:.2} µs/ping (mean rtt {:.0} µs sim-time)",
-        dt * 1e3,
-        dt * 1e6 / N as f64,
-        s.mean_us()
-    );
-}
-
 fn main() {
-    bench_event_engine();
-    bench_sched_cycle();
-    bench_ping_path();
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_sim_engine();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

@@ -2,42 +2,11 @@
 //! capability table the Fig. 3 model is built on.
 //!
 //! Run: `cargo bench --bench table1_inventory`
-
-use gridlan::bench::table1;
-use gridlan::config::Config;
-use gridlan::host::client::ClientAgent;
-use gridlan::util::table::{Align, Table};
+//! Writes the deterministic series to `BENCH_table1_inventory.json`.
 
 fn main() {
-    let cfg = Config::table1();
-    print!("{}", table1::render_inventory(&cfg));
-
-    println!();
-    let mut t = Table::new(&[
-        "Node",
-        "clock@1",
-        "clock@all",
-        "EP Mpairs/s @1 core",
-        "EP Mpairs/s @all cores",
-        "hypervisor eff",
-    ])
-    .title("Derived per-client capability (Turbo + hypervisor model)")
-    .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
-    for c in ClientAgent::table1() {
-        t.row(&[
-            c.name.clone(),
-            format!("{:.2} GHz", c.cpu.clock_ghz(1)),
-            format!("{:.2} GHz", c.cpu.clock_ghz(c.cpu.cores)),
-            format!("{:.1}", c.guest_ep_rate(1)),
-            format!("{:.1}", c.cpu.cores as f64 * c.guest_ep_rate(c.cpu.cores)),
-            format!("{:.2}", c.hypervisor.cpu_efficiency),
-        ]);
-    }
-    print!("{}", t.render());
-    let total: f64 = ClientAgent::table1()
-        .iter()
-        .map(|c| c.cpu.cores as f64 * c.guest_ep_rate(c.cpu.cores))
-        .sum();
-    println!("\naggregate pool throughput: {total:.0} Mpairs/s (class D = 2^36 pairs → ~{:.0} s)",
-        (1u64 << 36) as f64 / total / 1e6);
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_table1_inventory();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

@@ -3,38 +3,11 @@
 //!
 //! Run: `cargo bench --bench table2_latency`
 //! (plain-main bench: criterion is not in the offline vendor set)
-
-use gridlan::bench::table2::{self, PAPER_TABLE2};
-use gridlan::coordinator::gridlan::Gridlan;
+//! Writes the deterministic series to `BENCH_table2_latency.json`.
 
 fn main() {
-    let mut g = Gridlan::table1();
-    g.boot_all(0);
-
-    let t0 = std::time::Instant::now();
-    let rows = table2::table2_rows(&mut g, 1000);
-    let elapsed = t0.elapsed();
-    print!("{}", table2::render(&rows));
-    println!("\n(1000 probes x 4 hosts x 2 paths in {:.1} ms wall)", elapsed.as_secs_f64() * 1e3);
-
-    // Shape scoring vs the paper.
-    let mut worst = 0.0f64;
-    for r in &rows {
-        let (_, ph, pv) = *PAPER_TABLE2.iter().find(|p| p.0 == r.node).unwrap();
-        worst = worst.max(((r.host_mean_us - ph) / ph).abs());
-        worst = worst.max(((r.node_mean_us - pv) / pv).abs());
-    }
-    println!("worst relative error vs paper: {:.1}%", worst * 100.0);
-
-    // Convergence: the paper reports mean(std) — how many probes until the
-    // mean stabilizes within 1%?
-    println!("\nprobe-count convergence (n01 node ping):");
-    let reference = rows.iter().find(|r| r.node == "n01").unwrap().node_mean_us;
-    for probes in [5usize, 10, 20, 50, 100, 500] {
-        let m = g.ping_node("n01", probes).unwrap().mean_us();
-        println!(
-            "  {probes:>4} probes: {m:7.1} µs ({:+.2}% vs 1000-probe mean)",
-            100.0 * (m - reference) / reference
-        );
-    }
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_table2_latency();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

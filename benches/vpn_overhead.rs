@@ -2,64 +2,11 @@
 //! the §5 "optimizations in the VPN layer" discussion made quantitative.
 //!
 //! Run: `cargo bench --bench vpn_overhead`
-
-use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::netsim::packet::Packet;
-use gridlan::util::rng::SplitMix64;
-use gridlan::util::table::{Align, Table};
-use gridlan::vpn::tunnel::TunnelCost;
+//! Writes the deterministic series to `BENCH_vpn_overhead.json`.
 
 fn main() {
-    let mut g = Gridlan::table1();
-    g.boot_all(0);
-    g.net.jitter_sigma_us = 0.0; // decomposition wants means
-
-    let p = Packet::icmp_echo();
-    let mut t = Table::new(&["Node", "wire RTT", "+VPN", "+virtio", "node RTT", "VPN share", "virtio share"])
-        .title("A2 — node-path overhead decomposition (µs RTT, 56B ICMP)")
-        .align(&[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right, Align::Right]);
-    let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
-    for name in &names {
-        let wire = 2.0 * g
-            .net
-            .one_way_delay_us(g.server_dev, g.client_dev[name], p.wire_bytes())
-            .unwrap();
-        let mut rng = SplitMix64::new(1);
-        let tun_one = g.hub.server_to_client_us(&g.net, name, &p, &mut rng).unwrap();
-        let vpn_rtt = 2.0 * tun_one;
-        let vnet = g.client(name).unwrap().hypervisor.vnet_one_way_us;
-        let node_rtt = vpn_rtt + 2.0 * vnet;
-        t.row(&[
-            name.clone(),
-            format!("{wire:.0}"),
-            format!("{vpn_rtt:.0}"),
-            format!("{:.0}", 2.0 * vnet),
-            format!("{node_rtt:.0}"),
-            format!("{:.0}%", 100.0 * (vpn_rtt - wire) / (node_rtt - wire)),
-            format!("{:.0}%", 100.0 * 2.0 * vnet / (node_rtt - wire)),
-        ]);
-    }
-    print!("{}", t.render());
-
-    // What would the §5 VPN optimizations buy?  Sweep the tunnel cost.
-    println!("\nVPN-optimization sweep (n01 node RTT, µs):");
-    let base = TunnelCost::default();
-    for (label, cost) in [
-        ("openvpn (paper)", base),
-        ("tuned crypto (-30%)", TunnelCost { encap_us: base.encap_us * 0.7, decap_us: base.decap_us * 0.7, ..base }),
-        ("kernel wireguard-like", TunnelCost { encap_us: 25.0, decap_us: 22.0, crypto_us_per_kb: 2.0 }),
-        ("no vpn (hypothetical)", TunnelCost { encap_us: 0.0, decap_us: 0.0, crypto_us_per_kb: 0.0 }),
-    ] {
-        let one_way = cost.one_way_us(p.wire_bytes());
-        let mut rng = SplitMix64::new(2);
-        // Rebuild the wire path each time (the VPN header still rides).
-        let wire_one = g
-            .net
-            .sample_one_way(g.server_dev, g.client_dev["n01"], Packet::icmp_echo_tunneled().wire_bytes(), &mut rng)
-            .unwrap() as f64
-            / 1e3;
-        let vnet = g.client("n01").unwrap().hypervisor.vnet_one_way_us;
-        let rtt = 2.0 * (wire_one + one_way + vnet) + gridlan::netsim::icmp::ECHO_PROC_US;
-        println!("  {label:<24} {rtt:7.0}");
-    }
+    gridlan::util::log::init_from_env();
+    let h = gridlan::bench::suite::run_vpn_overhead();
+    let path = h.write().expect("write BENCH json");
+    println!("\nwrote {}", path.display());
 }

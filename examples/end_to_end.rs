@@ -26,6 +26,7 @@ use gridlan::util::table::secs;
 use gridlan::workload::ep::{EpClass, EpJob, EpTally};
 
 fn main() {
+    gridlan::util::log::init_from_env();
     println!("=================================================================");
     println!(" Gridlan end-to-end driver (paper: Rodrigues & Costa, 2016)");
     println!("=================================================================\n");

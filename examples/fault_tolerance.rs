@@ -13,6 +13,7 @@ use gridlan::util::table::secs;
 use gridlan::workload::trace::TraceJob;
 
 fn main() {
+    gridlan::util::log::init_from_env();
     // 20 medium jobs over the first hour.
     let trace: Vec<TraceJob> = (0..20)
         .map(|i| TraceJob {

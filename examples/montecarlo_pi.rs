@@ -18,6 +18,7 @@ use gridlan::workload::ep::EpTally;
 use gridlan::workload::montecarlo::MonteCarloCampaign;
 
 fn main() {
+    gridlan::util::log::init_from_env();
     let campaign = MonteCarloCampaign::new("pi-estimate", 16, 1 << 18);
     println!(
         "campaign: {} replicas x {} pairs = {} total pairs",

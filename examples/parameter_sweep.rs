@@ -19,6 +19,7 @@ use gridlan::workload::sweep::ParameterSweep;
 use gridlan::workload::trace::{JobPayload, TraceJob};
 
 fn main() {
+    gridlan::util::log::init_from_env();
     let sweep = ParameterSweep::linspace("resonance", "gamma", 0.05, 0.50, 10, 1 << 16);
     println!("sweep: {} points of '{}'", sweep.n_points(), sweep.param);
 

@@ -10,6 +10,7 @@ use gridlan::sim::clock::DUR_SEC;
 use gridlan::util::table::secs;
 
 fn main() {
+    gridlan::util::log::init_from_env();
     // 1. The administrator assembled the Gridlan from its config
     //    (defaults = the paper's exact testbed).
     let mut g = Gridlan::table1();

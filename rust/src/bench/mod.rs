@@ -2,14 +2,19 @@
 //!
 //! Each harness returns structured rows AND renders the paper-style table,
 //! so `cargo bench` targets, the CLI (`gridlan bench ...`), and the
-//! integration tests all share one implementation.
+//! integration tests all share one implementation.  [`suite`] wraps every
+//! bench target behind a `run_<name>()` function that also fills a
+//! [`crate::obs::harness::BenchHarness`] with the deterministic series
+//! written to `BENCH_<name>.json`.
 
 pub mod fig3;
 pub mod mpilat;
+pub mod suite;
 pub mod table1;
 pub mod table2;
 
 pub use fig3::{fig3_series, Fig3Point, Fig3Series};
 pub use mpilat::{mpi_latency_rows, MpiLatRow};
+pub use suite::BENCH_NAMES;
 pub use table1::{inventory_rows, render_inventory};
 pub use table2::{table2_rows, Table2Row};

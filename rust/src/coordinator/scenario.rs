@@ -20,6 +20,7 @@
 use super::gridlan::Gridlan;
 use super::metrics::Metrics;
 use crate::host::faults::{FaultEvent, FaultKind, FaultPlan};
+use crate::obs::event::{EventKind, ScenarioLogger};
 use crate::host::watchdog::{Watchdog, WatchdogAction};
 use crate::rm::job::JobId;
 use crate::rm::mom::Mom;
@@ -81,13 +82,16 @@ impl ScenarioReport {
     }
 }
 
-/// A finished scenario run: the report plus the system and engine handed
-/// back to the caller (for post-run inspection of RM state, backend
-/// accounting, node histories...).
+/// A finished scenario run: the report plus the system, engine, and event
+/// logger handed back to the caller (for post-run inspection of RM state,
+/// backend accounting, node histories, event-log aggregation...).
 pub struct ScenarioRun {
     pub report: ScenarioReport,
     pub gridlan: Gridlan,
     pub engine: EpEngine,
+    /// The sink passed to [`run_scenario_logged`] (a null sink for plain
+    /// [`run_scenario`] callers); a memory sink carries the typed records.
+    pub logger: ScenarioLogger,
 }
 
 struct World {
@@ -102,6 +106,8 @@ struct World {
     boot_gen: BTreeMap<String, u64>,
     /// Per-job EP tallies (recorded at completion).
     ep_tallies: BTreeMap<JobId, EpTally>,
+    /// Structured event sink (+ human mirror via `GRIDLAN_LOG`).
+    logger: ScenarioLogger,
 }
 
 /// Run a trace of jobs through the Gridlan under a fault plan, with real
@@ -115,6 +121,21 @@ pub fn run_scenario(
     scenario: &Scenario,
     engine: EpEngine,
 ) -> ScenarioRun {
+    run_scenario_logged(g, trace, scenario, engine, ScenarioLogger::null())
+}
+
+/// [`run_scenario`] with a structured event sink: every lifecycle
+/// transition (boot, submit, schedule, start, complete, fault, requeue)
+/// lands in `logger` as a typed record, timestamped in simulated ns, and
+/// is mirrored through [`crate::util::log`] at the record's level.  The
+/// sink comes back on [`ScenarioRun::logger`].
+pub fn run_scenario_logged(
+    g: Gridlan,
+    trace: Vec<TraceJob>,
+    scenario: &Scenario,
+    engine: EpEngine,
+    logger: ScenarioLogger,
+) -> ScenarioRun {
     let mut sim: Simulator<World> = Simulator::new();
     let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
     let watchdogs = names.iter().map(|n| (n.clone(), Watchdog::new(n))).collect();
@@ -126,6 +147,7 @@ pub fn run_scenario(
         started_gen: BTreeMap::new(),
         boot_gen: BTreeMap::new(),
         ep_tallies: BTreeMap::new(),
+        logger,
     };
 
     // --- initial boots (event-driven: an Off node comes up after its
@@ -186,7 +208,7 @@ pub fn run_scenario(
         final_time: sim.now(),
         ep_tallies: world.ep_tallies,
     };
-    ScenarioRun { report, gridlan: world.g, engine: world.engine }
+    ScenarioRun { report, gridlan: world.g, engine: world.engine, logger: world.logger }
 }
 
 /// [`run_scenario`] with a scalar engine, keeping only the report — the
@@ -284,10 +306,10 @@ fn begin_boot(sim: &mut Simulator<World>, w: &mut World, name: &str) {
     };
     let total = w.g.boot_plan(name).total();
     let n = name.to_string();
-    sim.schedule_in(total, move |_s, w| node_up(w, &n, gen));
+    sim.schedule_in(total, move |s, w| node_up(w, &n, gen, s.now()));
 }
 
-fn node_up(w: &mut World, name: &str, gen: u64) {
+fn node_up(w: &mut World, name: &str, gen: u64, now: SimTime) {
     // Stale boot completion: the node crashed or powered off (bumping the
     // generation) after this boot started.  Regression guard — the old
     // code broke out of the state walk at `Crashed` and still marked the
@@ -312,6 +334,7 @@ fn node_up(w: &mut World, name: &str, gen: u64) {
         node.advance(next, t);
     }
     w.g.pbs.node_up(name);
+    w.logger.log(now, EventKind::Boot { client: name.to_string(), generation: gen });
 }
 
 fn submit(sim: &mut Simulator<World>, w: &mut World, tj: &TraceJob, i: usize) {
@@ -330,6 +353,16 @@ fn submit(sim: &mut Simulator<World>, w: &mut World, tj: &TraceJob, i: usize) {
     match w.g.pbs.qsub(&script, &tj.owner, &payload, sim.now()) {
         Ok(id) => {
             w.g.folder.register(&mut w.g.server_fs, id, &script);
+            w.logger.log(
+                sim.now(),
+                EventKind::Submit {
+                    job: id.0,
+                    owner: tj.owner.clone(),
+                    nodes: tj.request.nodes,
+                    ppn: tj.request.ppn,
+                    kind: kind.to_string(),
+                },
+            );
             // Nudge the scheduler.
             sim.schedule_in(DUR_SEC, |s, w| run_sched(s, w));
         }
@@ -350,6 +383,13 @@ fn run_sched(sim: &mut Simulator<World>, w: &mut World) {
     let decisions = w.g.pbs.schedule_cycle(NodePool::Gridlan, scheduler.as_ref(), now);
     for (id, alloc) in decisions {
         let payload = w.g.pbs.job(id).map(|j| j.payload.clone()).unwrap_or_default();
+        w.logger.log(
+            now,
+            EventKind::Schedule {
+                job: id.0,
+                alloc: alloc.cores.iter().map(|(n, c)| (n.clone(), *c)).collect(),
+            },
+        );
         // Slowest allocated core rate (Turbo + hypervisor aware).
         let mut min_rate = f64::INFINITY;
         for (node, cores) in &alloc.cores {
@@ -373,6 +413,7 @@ fn run_sched(sim: &mut Simulator<World>, w: &mut World) {
             (base as f64 * (REF_RATE_MPAIRS / min_rate).max(0.1)) as SimTime
         };
         let duration = Mom::wrap_runtime(compute);
+        w.logger.log(now, EventKind::Start { job: id.0, run_ns: duration });
         w.started_gen.insert(id, now);
         sim.schedule_in(duration, move |s, w| job_done(s, w, id, now));
     }
@@ -408,6 +449,10 @@ fn job_done(sim: &mut Simulator<World>, w: &mut World, id: JobId, started: SimTi
         }
     }
     let rec = w.g.pbs.complete(id, exit_code, sim.now());
+    w.logger.log(
+        sim.now(),
+        EventKind::Complete { job: id.0, exit: exit_code, wait_ns: rec.wait },
+    );
     w.g.folder.job_completed(&mut w.g.server_fs, id);
     w.m.jobs_completed += 1;
     w.m.total_wait += rec.wait;
@@ -455,6 +500,15 @@ fn watchdog_poll(sim: &mut Simulator<World>, w: &mut World, name: &str) {
     sim.schedule_in(300 * DUR_SEC, move |s, w| watchdog_poll(s, w, &n));
 }
 
+/// Stable wire name for a fault kind in the event log.
+fn fault_kind_name(kind: FaultKind) -> &'static str {
+    match kind {
+        FaultKind::ClientPowerOff => "power_off",
+        FaultKind::NetworkDrop => "net_drop",
+        FaultKind::VmCrash => "vm_crash",
+    }
+}
+
 fn apply_fault(
     sim: &mut Simulator<World>,
     w: &mut World,
@@ -463,6 +517,14 @@ fn apply_fault(
     outage: SimTime,
 ) {
     let now = sim.now();
+    w.logger.log(
+        now,
+        EventKind::Fault {
+            client: client.to_string(),
+            kind: fault_kind_name(kind).to_string(),
+            outage_ns: outage,
+        },
+    );
     // Account wasted work + requeue running jobs on this node.
     let waste_and_requeue = |w: &mut World, now: SimTime| {
         // Capture wasted core-seconds before node_down clears started_at.
@@ -483,6 +545,7 @@ fn apply_fault(
         for id in &victims {
             w.m.jobs_requeued += 1;
             w.started_gen.remove(id);
+            w.logger.log(now, EventKind::Requeue { job: id.0, client: client.to_string() });
         }
         w.m.core_secs_wasted += wasted;
         victims.len()
@@ -666,6 +729,7 @@ mod tests {
             started_gen: BTreeMap::new(),
             boot_gen: BTreeMap::new(),
             ep_tallies: BTreeMap::new(),
+            logger: ScenarioLogger::null(),
         };
         w.g.connect_client("n01").unwrap();
         let total = w.g.boot_plan("n01").total();
@@ -767,6 +831,32 @@ mod tests {
         assert_eq!(parse_pair_range("trace:5"), None);
         assert_eq!(parse_pair_range("ep:1:2:3"), None);
         assert_eq!(parse_pair_range("ep:x:2"), None);
+    }
+
+    #[test]
+    fn logged_run_records_consistent_events() {
+        let g = Gridlan::build(Config::table1());
+        let scenario = Scenario { horizon: 2 * 3600 * DUR_SEC, ..Default::default() };
+        let run = run_scenario_logged(
+            g,
+            quick_trace(6, 2, 120),
+            &scenario,
+            EpEngine::scalar(),
+            ScenarioLogger::memory(),
+        );
+        let events = run.logger.events();
+        assert!(!events.is_empty());
+        // DES delivery order: timestamps are monotone.
+        assert!(events.windows(2).all(|w| w[0].at <= w[1].at));
+        let rollup = crate::obs::report::EventRollup::from_events(events);
+        assert!(
+            rollup.consistent_with(&run.report.metrics),
+            "{rollup:?} vs {:?}",
+            run.report.metrics
+        );
+        assert_eq!(rollup.submits, run.report.metrics.jobs_submitted);
+        assert_eq!(rollup.boots, 4, "all four Table-1 nodes boot exactly once");
+        assert_eq!(rollup.starts, rollup.schedules);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod host;
 pub mod monitor;
 pub mod mpi;
 pub mod netsim;
+pub mod obs;
 pub mod perf;
 pub mod rm;
 pub mod runtime;

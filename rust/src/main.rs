@@ -4,28 +4,33 @@
 //!
 //! ```text
 //! gridlan inventory                      # Table 1
-//! gridlan bench table2 [--probes N]      # Table 2
-//! gridlan bench mpi [--iters N]          # §3.3 MPI latency cross-check
-//! gridlan bench fig3 [--runs N] [--class D]
+//! gridlan bench <name|all>               # any bench target; writes BENCH_<name>.json
+//! gridlan bench all --check              # regression gate vs the committed baselines
+//! gridlan report <events.jsonl>          # fold a scenario event log into rollups
 //! gridlan boot                           # per-node PXE boot plans
 //! gridlan demo                           # qsub/qstat walkthrough
 //! gridlan ep --pairs N [--offset K]      # run REAL EP on the compute backend
 //! gridlan ep --pairs N --threads 4       # ... on the multi-threaded backend
 //! gridlan ep --class S --rm [--procs N]  # ... through the resource manager
-//! gridlan trace [--sched fifo|backfill] [--faults X] [--ep-slices N]
+//! gridlan trace [--sched fifo|backfill] [--faults X] [--ep-slices N] [--events FILE]
 //! ```
 //!
 //! (arg parsing is hand-rolled: the offline vendor set has no clap.)
 
+use std::path::{Path, PathBuf};
+
 use gridlan::bench;
 use gridlan::config::{Config, SchedPolicy};
 use gridlan::coordinator::gridlan::Gridlan;
-use gridlan::coordinator::scenario::{run_ep_job, run_trace, Scenario};
+use gridlan::coordinator::scenario::{run_ep_job, run_scenario_logged, Scenario};
 use gridlan::host::faults::FaultPlan;
-use gridlan::perf::speedmodel::GridlanPool;
+use gridlan::obs::event::ScenarioLogger;
+use gridlan::obs::gate::{compare, DEFAULT_TOLERANCE};
+use gridlan::obs::report::EventRollup;
 use gridlan::rm::script::PbsScript;
 use gridlan::runtime::engine::EpEngine;
 use gridlan::sim::clock::DUR_SEC;
+use gridlan::util::json::Json;
 use gridlan::util::rng::SplitMix64;
 use gridlan::util::table::secs;
 use gridlan::workload::ep::{EpClass, EpJob};
@@ -63,6 +68,7 @@ fn run(args: &[String]) -> i32 {
             0
         }
         Some("bench") => bench_cmd(&args[1..]),
+        Some("report") => report_cmd(&args[1..]),
         Some("boot") => boot_cmd(args),
         Some("demo") => demo_cmd(args),
         Some("ep") => ep_cmd(args),
@@ -79,45 +85,124 @@ fn run(args: &[String]) -> i32 {
 }
 
 fn bench_cmd(args: &[String]) -> i32 {
-    let mut g = Gridlan::build(load_config(args));
-    match args.first().map(String::as_str) {
-        Some("inventory") | Some("table1") => {
-            print!("{}", bench::table1::render_inventory(&g.config));
-            0
-        }
-        Some("table2") => {
-            g.boot_all(0);
-            let rows = bench::table2::table2_rows(&mut g, opt_u64(args, "--probes", 200) as usize);
-            print!("{}", bench::table2::render(&rows));
-            0
-        }
-        Some("mpi") => {
-            g.boot_all(0);
-            let rows =
-                bench::mpilat::mpi_latency_rows(&mut g, opt_u64(args, "--iters", 200) as usize);
-            print!("{}", bench::mpilat::render(&rows));
-            0
-        }
-        Some("fig3") => {
-            let class = opt(args, "--class")
-                .and_then(|c| EpClass::from_name(&c))
-                .unwrap_or(EpClass::D);
-            let pool = GridlanPool { clients: g.clients.clone() };
-            let series = bench::fig3::fig3_series(
-                &pool,
-                class,
-                opt_u64(args, "--runs", 40) as usize,
-                g.config.seed,
-            );
-            print!("{}", bench::fig3::render(&series));
-            for (name, ok) in bench::fig3::shape_checks(&series) {
-                println!("  [{}] {name}", if ok { "ok" } else { "FAIL" });
+    let Some(name) = args.first().map(String::as_str) else {
+        eprintln!("usage: gridlan bench <name|all> [--check] [--quick] [--out DIR]");
+        eprintln!("benches: {}", bench::suite::BENCH_NAMES.join(", "));
+        return 2;
+    };
+    if args.iter().any(|a| a == "--quick") {
+        std::env::set_var("GRIDLAN_BENCH_QUICK", "1");
+    }
+    let names: Vec<&'static str> = if name == "all" {
+        bench::suite::BENCH_NAMES.to_vec()
+    } else {
+        match bench::suite::resolve(name) {
+            Some(canon) => vec![canon],
+            None => {
+                eprintln!("unknown bench '{name}'; try `all` or one of:");
+                eprintln!("  {}", bench::suite::BENCH_NAMES.join(", "));
+                return 2;
             }
+        }
+    };
+    let check = args.iter().any(|a| a == "--check");
+    let tolerance =
+        opt(args, "--tolerance").and_then(|v| v.parse().ok()).unwrap_or(DEFAULT_TOLERANCE);
+    // Without --check the JSON lands in the CWD (the baseline-minting
+    // workflow); with --check it goes to a scratch dir so the committed
+    // baselines stay untouched.
+    let default_out = if check { "target/bench-fresh" } else { "." };
+    let out = PathBuf::from(opt(args, "--out").unwrap_or_else(|| default_out.into()));
+    if let Err(e) = std::fs::create_dir_all(&out) {
+        eprintln!("bench: cannot create {}: {e}", out.display());
+        return 1;
+    }
+    let mut regressions = 0u32;
+    for name in names {
+        println!("==> {name}");
+        let h = bench::suite::run(name).expect("registry names resolve");
+        match h.write_to(&out) {
+            Ok(path) => {
+                println!("wrote {}", path.display());
+                if check && !gate_one(name, &path, tolerance) {
+                    regressions += 1;
+                }
+            }
+            Err(e) => {
+                eprintln!("bench {name}: cannot write JSON: {e}");
+                return 1;
+            }
+        }
+        println!();
+    }
+    if regressions > 0 {
+        eprintln!("bench --check: {regressions} bench(es) failed the regression gate");
+        1
+    } else {
+        0
+    }
+}
+
+fn load_bench_json(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e:?}", path.display()))
+}
+
+/// Gate one fresh BENCH json against the committed baseline in the CWD.
+/// A missing baseline passes with a note (the bootstrap path: mint it
+/// with `gridlan bench <name>` at the repo root and commit the file).
+fn gate_one(name: &str, fresh_path: &Path, tolerance: f64) -> bool {
+    let baseline_path = PathBuf::from(format!("BENCH_{name}.json"));
+    if !baseline_path.exists() {
+        println!("note: no baseline {} — gate skipped (bootstrap)", baseline_path.display());
+        return true;
+    }
+    let baseline = match load_bench_json(&baseline_path) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!("bench --check: {e}");
+            return false;
+        }
+    };
+    let fresh = match load_bench_json(fresh_path) {
+        Ok(doc) => doc,
+        Err(e) => {
+            eprintln!("bench --check: {e}");
+            return false;
+        }
+    };
+    match compare(&baseline, &fresh, tolerance) {
+        Ok(report) => {
+            print!("{}", report.render());
+            report.passed()
+        }
+        Err(e) => {
+            eprintln!("bench --check {name}: {e}");
+            false
+        }
+    }
+}
+
+fn report_cmd(args: &[String]) -> i32 {
+    let Some(path) = args.first() else {
+        eprintln!("usage: gridlan report <events.jsonl>");
+        return 2;
+    };
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("report: cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    match EventRollup::from_jsonl(&text) {
+        Ok(rollup) => {
+            print!("{}", rollup.render());
             0
         }
-        other => {
-            eprintln!("unknown bench target {other:?}; try table1|table2|mpi|fig3");
-            2
+        Err(e) => {
+            eprintln!("report: {e}");
+            1
         }
     }
 }
@@ -277,9 +362,25 @@ fn trace_cmd(args: &[String]) -> i32 {
         trace.len(),
         cfg.sched
     );
+    // Optional structured event log: every lifecycle transition as one
+    // JSONL record (`gridlan report <file>` folds it back into rollups).
+    let logger = match opt(args, "--events") {
+        Some(path) => match std::fs::File::create(&path) {
+            Ok(f) => {
+                println!("writing scenario events to {path}");
+                ScenarioLogger::writer(Box::new(std::io::BufWriter::new(f)))
+            }
+            Err(e) => {
+                eprintln!("trace: cannot create {path}: {e}");
+                return 1;
+            }
+        },
+        None => ScenarioLogger::null(),
+    };
     let g = Gridlan::build(cfg);
     let scenario = Scenario { horizon: gen.horizon * 3, faults, ..Default::default() };
-    let report = run_trace(g, trace, &scenario);
+    let run = run_scenario_logged(g, trace, &scenario, EpEngine::scalar(), logger);
+    let report = run.report;
     let m = &report.metrics;
     println!("  submitted   {}", m.jobs_submitted);
     println!("  completed   {}", m.jobs_completed);
@@ -305,18 +406,26 @@ fn print_help() {
 USAGE: gridlan <subcommand> [options]
 
   inventory                    Table 1: client inventory
-  bench table2 [--probes N]    Table 2: host-vs-node ping
-  bench mpi    [--iters N]     §3.3 MPI latency cross-check
-  bench fig3   [--runs N] [--class S|W|A|B|C|D]
+  bench <name|all>             run a bench: stdout report + BENCH_<name>.json
+        [--check]              gate fresh JSON vs committed baselines (>15% fails)
+        [--quick]              shrink wall-clock loops (JSON series unchanged)
+        [--out DIR]            JSON output dir (default: CWD, or target/bench-fresh
+                               with --check)  [--tolerance F] overrides the 0.15 gate
+  report <events.jsonl>        fold a scenario event log into rollup metrics
   boot                         per-node PXE/TFTP/nfsroot boot plans
   demo                         qsub/qstat end-to-end walkthrough
   ep --pairs N | --class S     run REAL EP on the compute backend
   ep ... --threads N           force the multi-threaded backend (N OS threads)
   ep --class S --rm [--procs N]  ... as single-core jobs through the RM
-  trace [--sched fifo|backfill] [--faults SCALE] [--ep-slices N]
+  trace [--sched fifo|backfill] [--faults SCALE] [--ep-slices N] [--events FILE]
   help
 
+Bench names: boot_storm ep_throughput fault_recovery fig3_speedup mpi_latency
+  sched_ablation sim_engine table1_inventory table2_latency vpn_overhead
+  (aliases: table1/inventory, table2, mpi, fig3)
+
 Common options: --config FILE (JSON deployment; default = paper Table 1)
-Env: GRIDLAN_LOG=debug|info|warn, GRIDLAN_ARTIFACTS=dir (pjrt builds)"
+Env: GRIDLAN_LOG=debug|info|warn, GRIDLAN_BENCH_QUICK=1 (CI quick mode),
+     GRIDLAN_ARTIFACTS=dir (pjrt builds)"
     );
 }

@@ -1,0 +1,416 @@
+//! Typed, structured scenario event log.
+//!
+//! `run_scenario` emits one record per lifecycle transition — boot,
+//! submit, schedule, start, complete, fault, requeue — through a
+//! [`ScenarioLogger`] sink.  Records serialize to JSONL (one compact JSON
+//! object per line, `{"t": <sim-ns>, "ev": "<kind>", ...}`), parse back
+//! losslessly, and mirror through [`crate::util::log`] so `GRIDLAN_LOG`
+//! controls a human-readable view of the same stream.
+//!
+//! Timestamps are *simulated* nanoseconds, so same-seed runs produce
+//! byte-identical logs.
+
+use std::io::Write;
+
+use crate::sim::clock::SimTime;
+use crate::util::json::{Json, JsonObj};
+use crate::util::log::{self, Level};
+
+/// What happened.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A node finished its PXE boot and became schedulable.
+    Boot { client: String, generation: u64 },
+    /// A job was accepted by the resource manager.
+    Submit { job: u64, owner: String, nodes: u32, ppn: u32, kind: String },
+    /// The scheduler placed a job; `alloc` is node -> cores, sorted.
+    Schedule { job: u64, alloc: Vec<(String, u32)> },
+    /// The job's MOM began executing it (planned runtime from the model).
+    Start { job: u64, run_ns: u64 },
+    /// The job completed (exit 0) or failed (exit != 0).
+    Complete { job: u64, exit: i32, wait_ns: u64 },
+    /// An injected fault hit a client.
+    Fault { client: String, kind: String, outage_ns: u64 },
+    /// A running job was thrown back in the queue by a node loss.
+    Requeue { job: u64, client: String },
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Boot { .. } => "boot",
+            EventKind::Submit { .. } => "submit",
+            EventKind::Schedule { .. } => "schedule",
+            EventKind::Start { .. } => "start",
+            EventKind::Complete { .. } => "complete",
+            EventKind::Fault { .. } => "fault",
+            EventKind::Requeue { .. } => "requeue",
+        }
+    }
+
+    /// Log level for the human-readable mirror.
+    pub fn level(&self) -> Level {
+        match self {
+            EventKind::Fault { .. } | EventKind::Requeue { .. } => Level::Warn,
+            _ => Level::Info,
+        }
+    }
+}
+
+/// One timestamped record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioEvent {
+    /// Simulated nanoseconds since scenario start.
+    pub at: SimTime,
+    pub kind: EventKind,
+}
+
+impl ScenarioEvent {
+    pub fn new(at: SimTime, kind: EventKind) -> Self {
+        Self { at, kind }
+    }
+
+    /// The record as a JSON object (key order is the wire format).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("t", Json::Num(self.at as f64));
+        o.insert("ev", Json::Str(self.kind.name().to_string()));
+        match &self.kind {
+            EventKind::Boot { client, generation } => {
+                o.insert("client", Json::Str(client.clone()));
+                o.insert("gen", Json::Num(*generation as f64));
+            }
+            EventKind::Submit { job, owner, nodes, ppn, kind } => {
+                o.insert("job", Json::Num(*job as f64));
+                o.insert("owner", Json::Str(owner.clone()));
+                o.insert("nodes", Json::Num(*nodes as f64));
+                o.insert("ppn", Json::Num(*ppn as f64));
+                o.insert("kind", Json::Str(kind.clone()));
+            }
+            EventKind::Schedule { job, alloc } => {
+                o.insert("job", Json::Num(*job as f64));
+                let mut a = JsonObj::new();
+                for (node, cores) in alloc {
+                    a.insert(node, Json::Num(*cores as f64));
+                }
+                o.insert("alloc", Json::Obj(a));
+            }
+            EventKind::Start { job, run_ns } => {
+                o.insert("job", Json::Num(*job as f64));
+                o.insert("run_ns", Json::Num(*run_ns as f64));
+            }
+            EventKind::Complete { job, exit, wait_ns } => {
+                o.insert("job", Json::Num(*job as f64));
+                o.insert("exit", Json::Num(*exit as f64));
+                o.insert("wait_ns", Json::Num(*wait_ns as f64));
+            }
+            EventKind::Fault { client, kind, outage_ns } => {
+                o.insert("client", Json::Str(client.clone()));
+                o.insert("kind", Json::Str(kind.clone()));
+                o.insert("outage_ns", Json::Num(*outage_ns as f64));
+            }
+            EventKind::Requeue { job, client } => {
+                o.insert("job", Json::Num(*job as f64));
+                o.insert("client", Json::Str(client.clone()));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Human-readable form for the `GRIDLAN_LOG` mirror.
+    pub fn human(&self) -> String {
+        match &self.kind {
+            EventKind::Boot { client, generation } => {
+                format!("node {client} up (boot generation {generation})")
+            }
+            EventKind::Submit { job, owner, nodes, ppn, kind } => {
+                format!("job {job} submitted by {owner} ({nodes}x{ppn} {kind})")
+            }
+            EventKind::Schedule { job, alloc } => {
+                let placed: Vec<String> =
+                    alloc.iter().map(|(n, c)| format!("{n}:{c}")).collect();
+                format!("job {job} scheduled on {}", placed.join(","))
+            }
+            EventKind::Start { job, run_ns } => {
+                format!("job {job} started (planned runtime {:.2}s)", *run_ns as f64 / 1e9)
+            }
+            EventKind::Complete { job, exit, wait_ns } => {
+                format!("job {job} completed exit={exit} wait={:.1}s", *wait_ns as f64 / 1e9)
+            }
+            EventKind::Fault { client, kind, outage_ns } => {
+                format!("fault {kind} on {client} (outage {:.0}s)", *outage_ns as f64 / 1e9)
+            }
+            EventKind::Requeue { job, client } => {
+                format!("job {job} requeued off {client}")
+            }
+        }
+    }
+
+    /// Parse one JSONL line back into a typed record.
+    pub fn parse_line(line: &str) -> Result<ScenarioEvent, String> {
+        let j = Json::parse(line).map_err(|e| e.to_string())?;
+        let at = req_u64(&j, "t")?;
+        let ev = req_str(&j, "ev")?;
+        let kind = match ev.as_str() {
+            "boot" => EventKind::Boot {
+                client: req_str(&j, "client")?,
+                generation: req_u64(&j, "gen")?,
+            },
+            "submit" => EventKind::Submit {
+                job: req_u64(&j, "job")?,
+                owner: req_str(&j, "owner")?,
+                nodes: req_u64(&j, "nodes")? as u32,
+                ppn: req_u64(&j, "ppn")? as u32,
+                kind: req_str(&j, "kind")?,
+            },
+            "schedule" => {
+                let alloc_obj = j
+                    .get("alloc")
+                    .and_then(Json::as_obj)
+                    .ok_or("schedule record missing object \"alloc\"")?;
+                let mut alloc = Vec::new();
+                for (node, cores) in alloc_obj.iter() {
+                    let c = cores
+                        .as_u64()
+                        .ok_or_else(|| format!("alloc[{node}] is not an integer"))?;
+                    alloc.push((node.clone(), c as u32));
+                }
+                EventKind::Schedule { job: req_u64(&j, "job")?, alloc }
+            }
+            "start" => EventKind::Start {
+                job: req_u64(&j, "job")?,
+                run_ns: req_u64(&j, "run_ns")?,
+            },
+            "complete" => EventKind::Complete {
+                job: req_u64(&j, "job")?,
+                exit: req_i64(&j, "exit")? as i32,
+                wait_ns: req_u64(&j, "wait_ns")?,
+            },
+            "fault" => EventKind::Fault {
+                client: req_str(&j, "client")?,
+                kind: req_str(&j, "kind")?,
+                outage_ns: req_u64(&j, "outage_ns")?,
+            },
+            "requeue" => EventKind::Requeue {
+                job: req_u64(&j, "job")?,
+                client: req_str(&j, "client")?,
+            },
+            other => return Err(format!("unknown event kind {other:?}")),
+        };
+        Ok(ScenarioEvent { at, kind })
+    }
+
+    /// Parse a whole JSONL document (blank lines skipped).
+    pub fn parse_jsonl(text: &str) -> Result<Vec<ScenarioEvent>, String> {
+        let mut out = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            out.push(
+                ScenarioEvent::parse_line(line).map_err(|e| format!("line {}: {e}", i + 1))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64, String> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("missing integer field {key:?}"))
+}
+
+fn req_i64(j: &Json, key: &str) -> Result<i64, String> {
+    j.get(key)
+        .and_then(Json::as_i64)
+        .ok_or_else(|| format!("missing integer field {key:?}"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string field {key:?}"))
+}
+
+/// Where scenario events go.
+///
+/// Every record is also mirrored (human-readable) through
+/// [`crate::util::log::emit`] at the kind's level, so `GRIDLAN_LOG=info`
+/// narrates any scenario regardless of the sink.
+pub enum ScenarioLogger {
+    /// Drop records (mirror only) — the default for existing callers.
+    Null,
+    /// Keep typed records in memory for post-run aggregation.
+    Memory(Vec<ScenarioEvent>),
+    /// Stream JSONL lines to a writer as they happen.
+    Writer(Box<dyn Write + Send>),
+}
+
+impl ScenarioLogger {
+    pub fn null() -> Self {
+        ScenarioLogger::Null
+    }
+
+    pub fn memory() -> Self {
+        ScenarioLogger::Memory(Vec::new())
+    }
+
+    pub fn writer(w: Box<dyn Write + Send>) -> Self {
+        ScenarioLogger::Writer(w)
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, ScenarioLogger::Null)
+    }
+
+    /// Record one event: mirror to the leveled log, then sink.
+    pub fn log(&mut self, at: SimTime, kind: EventKind) {
+        let ev = ScenarioEvent::new(at, kind);
+        if log::enabled(ev.kind.level()) {
+            log::emit(ev.kind.level(), ev.at, "scenario", &ev.human());
+        }
+        match self {
+            ScenarioLogger::Null => {}
+            ScenarioLogger::Memory(events) => events.push(ev),
+            ScenarioLogger::Writer(w) => {
+                let _ = writeln!(w, "{}", ev.to_line());
+            }
+        }
+    }
+
+    /// Recorded events (empty unless this is a memory sink).
+    pub fn events(&self) -> &[ScenarioEvent] {
+        match self {
+            ScenarioLogger::Memory(events) => events,
+            _ => &[],
+        }
+    }
+
+    /// The memory sink's records as a JSONL document.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.events() {
+            out.push_str(&ev.to_line());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_of_each() -> Vec<ScenarioEvent> {
+        vec![
+            ScenarioEvent::new(
+                100,
+                EventKind::Boot { client: "n01".into(), generation: 1 },
+            ),
+            ScenarioEvent::new(
+                200,
+                EventKind::Submit {
+                    job: 1,
+                    owner: "user00".into(),
+                    nodes: 2,
+                    ppn: 4,
+                    kind: "trace".into(),
+                },
+            ),
+            ScenarioEvent::new(
+                300,
+                EventKind::Schedule {
+                    job: 1,
+                    alloc: vec![("n01".into(), 4), ("n02".into(), 4)],
+                },
+            ),
+            ScenarioEvent::new(300, EventKind::Start { job: 1, run_ns: 5_000_000_000 }),
+            ScenarioEvent::new(
+                400,
+                EventKind::Complete { job: 1, exit: 0, wait_ns: 100 },
+            ),
+            ScenarioEvent::new(
+                500,
+                EventKind::Fault {
+                    client: "n02".into(),
+                    kind: "vm_crash".into(),
+                    outage_ns: 60_000_000_000,
+                },
+            ),
+            ScenarioEvent::new(500, EventKind::Requeue { job: 1, client: "n02".into() }),
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        for ev in one_of_each() {
+            let line = ev.to_line();
+            let back = ScenarioEvent::parse_line(&line).unwrap();
+            assert_eq!(back, ev, "line: {line}");
+            assert_eq!(back.to_line(), line);
+        }
+    }
+
+    #[test]
+    fn jsonl_round_trips() {
+        let events = one_of_each();
+        let mut logger = ScenarioLogger::memory();
+        for ev in &events {
+            logger.log(ev.at, ev.kind.clone());
+        }
+        let text = logger.to_jsonl();
+        assert_eq!(text.lines().count(), events.len());
+        let back = ScenarioEvent::parse_jsonl(&text).unwrap();
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn wire_format_is_stable() {
+        let ev = ScenarioEvent::new(
+            42,
+            EventKind::Complete { job: 7, exit: 1, wait_ns: 1500 },
+        );
+        assert_eq!(ev.to_line(), r#"{"t":42,"ev":"complete","job":7,"exit":1,"wait_ns":1500}"#);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(ScenarioEvent::parse_line("not json").is_err());
+        assert!(ScenarioEvent::parse_line(r#"{"t":1,"ev":"warp"}"#).is_err());
+        assert!(ScenarioEvent::parse_line(r#"{"ev":"boot","client":"n01","gen":1}"#).is_err());
+        let multi = "{\"t\":1,\"ev\":\"boot\",\"client\":\"n01\",\"gen\":1}\n\nbroken\n";
+        let err = ScenarioEvent::parse_jsonl(multi).unwrap_err();
+        assert!(err.starts_with("line 3:"), "{err}");
+    }
+
+    #[test]
+    fn null_and_writer_sinks() {
+        let mut null = ScenarioLogger::null();
+        assert!(null.is_null());
+        null.log(1, EventKind::Start { job: 1, run_ns: 2 });
+        assert!(null.events().is_empty());
+
+        let mut sink = ScenarioLogger::writer(Box::new(Vec::new()));
+        sink.log(1, EventKind::Start { job: 1, run_ns: 2 });
+        if let ScenarioLogger::Writer(w) = &sink {
+            let _ = w; // bytes went to the boxed Vec; shape checked via memory sink
+        }
+    }
+
+    #[test]
+    fn levels_route_faults_to_warn() {
+        assert_eq!(
+            EventKind::Fault { client: "n01".into(), kind: "vm_crash".into(), outage_ns: 0 }
+                .level(),
+            Level::Warn
+        );
+        assert_eq!(EventKind::Start { job: 1, run_ns: 0 }.level(), Level::Info);
+    }
+}

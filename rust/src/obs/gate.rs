@@ -1,0 +1,330 @@
+//! Perf-regression gate: compare a freshly produced `BENCH_*.json`
+//! against the committed baseline and fail on a >15% mean regression.
+//!
+//! Direction is inferred from the series unit:
+//!
+//! * units ending in `/s` (rates) — higher is better;
+//! * time units (`ns`, `us`/`µs`, `ms`, `s`, `min`) — lower is better;
+//! * anything else (counts, fractions, ratios) — two-sided: any drift
+//!   beyond the tolerance fails, because those series are deterministic
+//!   model outputs that should not move at all.
+
+use crate::obs::harness;
+use crate::util::json::Json;
+use crate::util::table::{Align, Table};
+
+/// Relative tolerance on the series mean before the gate trips.
+pub const DEFAULT_TOLERANCE: f64 = 0.15;
+
+/// Which way a series is allowed to drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherIsBetter,
+    LowerIsBetter,
+    TwoSided,
+}
+
+/// Infer comparison direction from a unit string.
+pub fn direction_for_unit(unit: &str) -> Direction {
+    let u = unit.trim();
+    if u.ends_with("/s") {
+        return Direction::HigherIsBetter;
+    }
+    match u {
+        "ns" | "us" | "µs" | "ms" | "s" | "sec" | "secs" | "seconds" | "min" => {
+            Direction::LowerIsBetter
+        }
+        _ => Direction::TwoSided,
+    }
+}
+
+/// Outcome for one compared series.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateStatus {
+    Ok,
+    Regression,
+    MissingInFresh,
+    UnitMismatch,
+}
+
+/// One series' comparison result.
+#[derive(Debug, Clone)]
+pub struct GateFinding {
+    pub label: String,
+    pub unit: String,
+    pub direction: Direction,
+    pub baseline_mean: f64,
+    pub fresh_mean: f64,
+    pub status: GateStatus,
+}
+
+impl GateFinding {
+    /// Relative change fresh vs baseline (0.2 = fresh is 20% above).
+    pub fn rel_change(&self) -> f64 {
+        if self.baseline_mean == 0.0 {
+            if self.fresh_mean == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            (self.fresh_mean - self.baseline_mean) / self.baseline_mean.abs()
+        }
+    }
+}
+
+/// Result of gating one bench document.
+#[derive(Debug, Clone)]
+pub struct GateReport {
+    pub bench: String,
+    pub findings: Vec<GateFinding>,
+    /// Non-fatal notes (e.g. new series absent from the baseline).
+    pub warnings: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.findings.iter().all(|f| f.status == GateStatus::Ok)
+    }
+
+    pub fn n_regressions(&self) -> usize {
+        self.findings.iter().filter(|f| f.status != GateStatus::Ok).count()
+    }
+
+    /// Human-readable verdict table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["series", "unit", "baseline", "fresh", "change", "verdict"])
+            .title(&format!("gate: {}", self.bench))
+            .align(&[
+                Align::Left,
+                Align::Left,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Left,
+            ]);
+        for f in &self.findings {
+            let verdict = match f.status {
+                GateStatus::Ok => "ok",
+                GateStatus::Regression => "REGRESSION",
+                GateStatus::MissingInFresh => "MISSING",
+                GateStatus::UnitMismatch => "UNIT MISMATCH",
+            };
+            let change = if f.rel_change().is_finite() {
+                format!("{:+.1}%", f.rel_change() * 100.0)
+            } else {
+                "n/a".to_string()
+            };
+            t.row(&[
+                f.label.clone(),
+                f.unit.clone(),
+                format!("{:.6}", f.baseline_mean),
+                format!("{:.6}", f.fresh_mean),
+                change,
+                verdict.to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        for w in &self.warnings {
+            out.push_str(&format!("note: {w}\n"));
+        }
+        out
+    }
+}
+
+fn series_fields(entry: &Json) -> Option<(&str, &str, f64)> {
+    let label = entry.get("label")?.as_str()?;
+    let unit = entry.get("unit")?.as_str()?;
+    let mean = entry.get("mean")?.as_f64()?;
+    Some((label, unit, mean))
+}
+
+/// Compare `fresh` against `baseline` (both full `BENCH_*.json` documents)
+/// with the given relative tolerance on each series mean.
+///
+/// Hard errors (`Err`) are non-comparable documents: schema violations,
+/// different bench names, or a seed/params drift (the baseline must be
+/// re-minted, not compared).  Per-series regressions land as findings in
+/// the returned [`GateReport`].
+pub fn compare(baseline: &Json, fresh: &Json, tolerance: f64) -> Result<GateReport, String> {
+    harness::validate(baseline).map_err(|e| format!("baseline: {e}"))?;
+    harness::validate(fresh).map_err(|e| format!("fresh: {e}"))?;
+    let name = baseline.get("name").unwrap().as_str().unwrap().to_string();
+    let fresh_name = fresh.get("name").unwrap().as_str().unwrap();
+    if name != fresh_name {
+        return Err(format!("bench name mismatch: baseline={name:?} fresh={fresh_name:?}"));
+    }
+    let b_seed = baseline.get("seed").unwrap().as_u64().unwrap();
+    let f_seed = fresh.get("seed").unwrap().as_u64().unwrap();
+    if b_seed != f_seed {
+        return Err(format!(
+            "seed mismatch for {name}: baseline={b_seed} fresh={f_seed} — re-mint the baseline"
+        ));
+    }
+    let b_params = baseline.get("params").unwrap().to_string();
+    let f_params = fresh.get("params").unwrap().to_string();
+    if b_params != f_params {
+        return Err(format!(
+            "params mismatch for {name}: baseline={b_params} fresh={f_params} — re-mint the baseline"
+        ));
+    }
+
+    let b_series = baseline.get("series").unwrap().as_arr().unwrap();
+    let f_series = fresh.get("series").unwrap().as_arr().unwrap();
+    let mut findings = Vec::new();
+    let mut warnings = Vec::new();
+
+    for entry in b_series {
+        let (label, unit, b_mean) = series_fields(entry).ok_or("unreachable: validated")?;
+        let direction = direction_for_unit(unit);
+        let fresh_entry = f_series
+            .iter()
+            .find(|e| e.get("label").and_then(Json::as_str) == Some(label));
+        let (status, f_mean) = match fresh_entry.and_then(series_fields) {
+            None => (GateStatus::MissingInFresh, 0.0),
+            Some((_, f_unit, f_mean)) if f_unit != unit => (GateStatus::UnitMismatch, f_mean),
+            Some((_, _, f_mean)) => {
+                let regressed = if b_mean == 0.0 {
+                    f_mean.abs() > 1e-9
+                } else {
+                    let rel = (f_mean - b_mean) / b_mean.abs();
+                    match direction {
+                        Direction::HigherIsBetter => rel < -tolerance,
+                        Direction::LowerIsBetter => rel > tolerance,
+                        Direction::TwoSided => rel.abs() > tolerance,
+                    }
+                };
+                (if regressed { GateStatus::Regression } else { GateStatus::Ok }, f_mean)
+            }
+        };
+        findings.push(GateFinding {
+            label: label.to_string(),
+            unit: unit.to_string(),
+            direction,
+            baseline_mean: b_mean,
+            fresh_mean: f_mean,
+            status,
+        });
+    }
+
+    for entry in f_series {
+        if let Some((label, _, _)) = series_fields(entry) {
+            let known = b_series
+                .iter()
+                .any(|e| e.get("label").and_then(Json::as_str) == Some(label));
+            if !known {
+                warnings.push(format!(
+                    "series {label:?} is new (absent from baseline) — commit a refreshed baseline"
+                ));
+            }
+        }
+    }
+
+    Ok(GateReport { bench: name, findings, warnings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::harness::BenchHarness;
+    use crate::util::stats::Summary;
+
+    fn doc(means: &[(&str, &str, f64)]) -> Json {
+        let mut h = BenchHarness::new("t", 9);
+        h.param_u64("size", 64);
+        for (label, unit, mean) in means {
+            h.series(label, unit, Summary::from_slice(&[*mean]));
+        }
+        h.to_json()
+    }
+
+    #[test]
+    fn unit_direction_inference() {
+        assert_eq!(direction_for_unit("Mpairs/s"), Direction::HigherIsBetter);
+        assert_eq!(direction_for_unit("events/s"), Direction::HigherIsBetter);
+        assert_eq!(direction_for_unit("µs"), Direction::LowerIsBetter);
+        assert_eq!(direction_for_unit("us"), Direction::LowerIsBetter);
+        assert_eq!(direction_for_unit("s"), Direction::LowerIsBetter);
+        assert_eq!(direction_for_unit("count"), Direction::TwoSided);
+        assert_eq!(direction_for_unit("frac"), Direction::TwoSided);
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let base = doc(&[("lat", "µs", 100.0), ("rate", "jobs/s", 5.0)]);
+        let report = compare(&base, &base, DEFAULT_TOLERANCE).unwrap();
+        assert!(report.passed());
+        assert_eq!(report.findings.len(), 2);
+    }
+
+    #[test]
+    fn injected_20pct_slowdown_fails() {
+        let base = doc(&[("lat", "µs", 100.0)]);
+        let slow = doc(&[("lat", "µs", 120.0)]);
+        let report = compare(&base, &slow, DEFAULT_TOLERANCE).unwrap();
+        assert!(!report.passed());
+        assert_eq!(report.findings[0].status, GateStatus::Regression);
+        assert!(report.render().contains("REGRESSION"));
+    }
+
+    #[test]
+    fn ten_pct_drift_passes() {
+        let base = doc(&[("lat", "µs", 100.0)]);
+        let a_bit_slower = doc(&[("lat", "µs", 110.0)]);
+        assert!(compare(&base, &a_bit_slower, DEFAULT_TOLERANCE).unwrap().passed());
+    }
+
+    #[test]
+    fn rate_drop_fails_rate_gain_passes() {
+        let base = doc(&[("rate", "Mpairs/s", 100.0)]);
+        let slower = doc(&[("rate", "Mpairs/s", 80.0)]);
+        let faster = doc(&[("rate", "Mpairs/s", 200.0)]);
+        assert!(!compare(&base, &slower, DEFAULT_TOLERANCE).unwrap().passed());
+        assert!(compare(&base, &faster, DEFAULT_TOLERANCE).unwrap().passed());
+    }
+
+    #[test]
+    fn faster_latency_passes_two_sided_drift_fails() {
+        let base = doc(&[("lat", "µs", 100.0), ("jobs", "count", 10.0)]);
+        let better = doc(&[("lat", "µs", 50.0), ("jobs", "count", 10.0)]);
+        assert!(compare(&base, &better, DEFAULT_TOLERANCE).unwrap().passed());
+        let drifted = doc(&[("lat", "µs", 100.0), ("jobs", "count", 13.0)]);
+        assert!(!compare(&base, &drifted, DEFAULT_TOLERANCE).unwrap().passed());
+    }
+
+    #[test]
+    fn missing_series_fails_new_series_warns() {
+        let base = doc(&[("a", "s", 1.0), ("b", "s", 2.0)]);
+        let missing = doc(&[("a", "s", 1.0)]);
+        let report = compare(&base, &missing, DEFAULT_TOLERANCE).unwrap();
+        assert!(!report.passed());
+        assert!(report
+            .findings
+            .iter()
+            .any(|f| f.label == "b" && f.status == GateStatus::MissingInFresh));
+        let extra_report = compare(&missing, &base, DEFAULT_TOLERANCE).unwrap();
+        assert!(extra_report.passed());
+        assert_eq!(extra_report.warnings.len(), 1);
+    }
+
+    #[test]
+    fn seed_or_params_mismatch_is_hard_error() {
+        let base = doc(&[("a", "s", 1.0)]);
+        let mut h = BenchHarness::new("t", 10);
+        h.param_u64("size", 64);
+        h.series("a", "s", Summary::from_slice(&[1.0]));
+        assert!(compare(&base, &h.to_json(), DEFAULT_TOLERANCE).is_err());
+        let mut h2 = BenchHarness::new("t", 9);
+        h2.param_u64("size", 65);
+        h2.series("a", "s", Summary::from_slice(&[1.0]));
+        assert!(compare(&base, &h2.to_json(), DEFAULT_TOLERANCE).is_err());
+    }
+
+    #[test]
+    fn zero_baseline_requires_zero_fresh() {
+        let base = doc(&[("lost", "count", 0.0)]);
+        assert!(compare(&base, &base, DEFAULT_TOLERANCE).unwrap().passed());
+        let nonzero = doc(&[("lost", "count", 1.0)]);
+        assert!(!compare(&base, &nonzero, DEFAULT_TOLERANCE).unwrap().passed());
+    }
+}

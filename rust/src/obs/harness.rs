@@ -1,0 +1,297 @@
+//! Shared benchmark harness: every bench registers named sample series
+//! here and the harness writes one deterministic `BENCH_<name>.json`.
+//!
+//! Schema (the machine-readable perf-trajectory contract):
+//!
+//! ```json
+//! {
+//!   "name": "boot_storm",
+//!   "params": { "fleet_sizes": [1, 4], "...": "bench-specific" },
+//!   "seed": 28189,
+//!   "series": [
+//!     { "label": "boot_window_n4", "n": 4, "mean": 41.2, "sd": 0.4,
+//!       "p50": 41.1, "p99": 41.9, "unit": "s" }
+//!   ]
+//! }
+//! ```
+//!
+//! There are deliberately **no wall-clock fields**: only deterministic
+//! sim-derived metrics (simulated durations, model predictions, event
+//! counts, EP tallies) enter the JSON, so two same-seed runs produce
+//! byte-identical files.  Wall-clock measurements stay on stdout.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats::Summary;
+
+/// True when `GRIDLAN_BENCH_QUICK=1` (or `true`/`yes`): benches shrink
+/// their *wall-clock-only* stdout loops for CI.  Quick mode must never
+/// change what goes into the JSON — baselines are mode-invariant.
+pub fn quick() -> bool {
+    matches!(
+        std::env::var("GRIDLAN_BENCH_QUICK").ok().as_deref(),
+        Some("1") | Some("true") | Some("yes")
+    )
+}
+
+/// Pick the full-size or quick-mode value for a wall-clock-only loop.
+pub fn pick<T>(full: T, quick_value: T) -> T {
+    if quick() {
+        quick_value
+    } else {
+        full
+    }
+}
+
+/// Accumulates one bench's parameters and sample series, then renders the
+/// deterministic `BENCH_<name>.json` document.
+#[derive(Debug, Clone)]
+pub struct BenchHarness {
+    name: String,
+    seed: u64,
+    params: JsonObj,
+    series: Vec<(String, String, Summary)>,
+}
+
+impl BenchHarness {
+    pub fn new(name: &str, seed: u64) -> Self {
+        Self { name: name.to_string(), seed, params: JsonObj::new(), series: Vec::new() }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Record a bench parameter (problem size, sweep axis, policy list…).
+    /// Parameters are part of the gate contract: a baseline with different
+    /// params is not comparable and the gate fails loudly.
+    pub fn param(&mut self, key: &str, value: Json) {
+        self.params.insert(key, value);
+    }
+
+    pub fn param_u64(&mut self, key: &str, v: u64) {
+        self.param(key, Json::Num(v as f64));
+    }
+
+    pub fn param_f64(&mut self, key: &str, v: f64) {
+        self.param(key, Json::Num(v));
+    }
+
+    pub fn param_str(&mut self, key: &str, v: &str) {
+        self.param(key, Json::Str(v.to_string()));
+    }
+
+    /// Register a complete series under `label`.  Labels must be unique
+    /// within a bench — a duplicate is a bug in the bench, so it panics.
+    pub fn series(&mut self, label: &str, unit: &str, summary: Summary) {
+        assert!(
+            !self.series.iter().any(|(l, _, _)| l == label),
+            "duplicate bench series label {label:?}"
+        );
+        self.series.push((label.to_string(), unit.to_string(), summary));
+    }
+
+    /// Append one sample to the series `label`, creating it on first use.
+    pub fn sample(&mut self, label: &str, unit: &str, x: f64) {
+        if let Some((_, u, s)) = self.series.iter_mut().find(|(l, _, _)| l == label) {
+            assert_eq!(u, unit, "series {label:?} unit changed");
+            s.push(x);
+        } else {
+            self.series.push((label.to_string(), unit.to_string(), Summary::from_slice(&[x])));
+        }
+    }
+
+    pub fn n_series(&self) -> usize {
+        self.series.len()
+    }
+
+    /// The full document: `{name, params, seed, series: [...]}`.
+    pub fn to_json(&self) -> Json {
+        let mut doc = JsonObj::new();
+        doc.insert("name", Json::Str(self.name.clone()));
+        doc.insert("params", Json::Obj(self.params.clone()));
+        doc.insert("seed", Json::Num(self.seed as f64));
+        let series: Vec<Json> = self
+            .series
+            .iter()
+            .map(|(label, unit, summary)| {
+                let mut entry = JsonObj::new();
+                entry.insert("label", Json::Str(label.clone()));
+                if let Json::Obj(stats) = summary.to_json() {
+                    for (k, v) in stats.iter() {
+                        entry.insert(k, v.clone());
+                    }
+                }
+                entry.insert("unit", Json::Str(unit.clone()));
+                Json::Obj(entry)
+            })
+            .collect();
+        doc.insert("series", Json::Arr(series));
+        Json::Obj(doc)
+    }
+
+    /// Pretty-printed document with a trailing newline — the exact bytes
+    /// [`BenchHarness::write_to`] puts on disk.
+    pub fn render_json(&self) -> String {
+        let mut s = self.to_json().to_pretty();
+        s.push('\n');
+        s
+    }
+
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path written.
+    pub fn write_to(&self, dir: &Path) -> io::Result<PathBuf> {
+        let path = dir.join(self.file_name());
+        std::fs::write(&path, self.render_json())?;
+        Ok(path)
+    }
+
+    /// Write into the current directory (the repo root by convention).
+    pub fn write(&self) -> io::Result<PathBuf> {
+        self.write_to(Path::new("."))
+    }
+}
+
+/// Schema check for a `BENCH_*.json` document (used by the gate before
+/// comparing, and by the round-trip tests).
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let obj = doc.as_obj().ok_or("document is not an object")?;
+    let name = obj
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("missing string field \"name\"")?;
+    if name.is_empty() {
+        return Err("\"name\" is empty".into());
+    }
+    obj.get("params")
+        .and_then(Json::as_obj)
+        .ok_or("missing object field \"params\"")?;
+    obj.get("seed")
+        .and_then(Json::as_u64)
+        .ok_or("missing integer field \"seed\"")?;
+    let series = obj
+        .get("series")
+        .and_then(Json::as_arr)
+        .ok_or("missing array field \"series\"")?;
+    if series.is_empty() {
+        return Err("\"series\" is empty".into());
+    }
+    for (i, entry) in series.iter().enumerate() {
+        let e = entry.as_obj().ok_or_else(|| format!("series[{i}] is not an object"))?;
+        let label = e
+            .get("label")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("series[{i}] missing string \"label\""))?;
+        for key in ["n", "mean", "sd", "p50", "p99"] {
+            let v = e
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("series[{i}] ({label}) missing number \"{key}\""))?;
+            if !v.is_finite() {
+                return Err(format!("series[{i}] ({label}) field \"{key}\" is not finite"));
+            }
+        }
+        e.get("unit")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("series[{i}] ({label}) missing string \"unit\""))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_harness() -> BenchHarness {
+        let mut h = BenchHarness::new("demo", 42);
+        h.param_u64("iters", 100);
+        h.param_str("mode", "full");
+        h.sample("lat", "µs", 10.0);
+        h.sample("lat", "µs", 12.0);
+        h.series("rate", "Mpairs/s", Summary::from_slice(&[5.0]));
+        h
+    }
+
+    #[test]
+    fn document_shape() {
+        let h = sample_harness();
+        let doc = h.to_json();
+        validate(&doc).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("demo"));
+        assert_eq!(doc.get("seed").unwrap().as_u64(), Some(42));
+        let series = doc.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].get("label").unwrap().as_str(), Some("lat"));
+        assert_eq!(series[0].get("n").unwrap().as_u64(), Some(2));
+        assert_eq!(series[0].get("unit").unwrap().as_str(), Some("µs"));
+        // field order is part of the byte-identity contract
+        let keys: Vec<&str> = series[0]
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .collect();
+        assert_eq!(keys, ["label", "n", "mean", "sd", "p50", "p99", "unit"]);
+    }
+
+    #[test]
+    fn render_is_deterministic() {
+        assert_eq!(sample_harness().render_json(), sample_harness().render_json());
+        assert!(sample_harness().render_json().ends_with('\n'));
+    }
+
+    #[test]
+    fn json_round_trips_through_parser() {
+        let h = sample_harness();
+        let text = h.render_json();
+        let parsed = Json::parse(&text).unwrap();
+        validate(&parsed).unwrap();
+        assert_eq!(parsed, h.to_json());
+        // re-rendering the parsed document reproduces the bytes exactly
+        let mut again = parsed.to_pretty();
+        again.push('\n');
+        assert_eq!(again, text);
+    }
+
+    #[test]
+    fn validate_rejects_bad_documents() {
+        assert!(validate(&Json::Null).is_err());
+        let mut h = BenchHarness::new("x", 1);
+        h.sample("a", "s", 1.0);
+        let good = h.to_json();
+        validate(&good).unwrap();
+        // strip the series -> invalid
+        let empty = Json::parse(r#"{"name":"x","params":{},"seed":1,"series":[]}"#).unwrap();
+        assert!(validate(&empty).is_err());
+        let missing =
+            Json::parse(r#"{"name":"x","params":{},"seed":1,"series":[{"label":"a"}]}"#).unwrap();
+        assert!(validate(&missing).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_series_label_panics() {
+        let mut h = BenchHarness::new("x", 1);
+        h.series("a", "s", Summary::new());
+        h.series("a", "s", Summary::new());
+    }
+
+    #[test]
+    fn file_name_convention() {
+        assert_eq!(BenchHarness::new("ep_throughput", 0).file_name(), "BENCH_ep_throughput.json");
+    }
+
+    #[test]
+    fn pick_respects_env() {
+        // not parallel-safe to mutate the env here; just exercise the
+        // non-quick path (tests run without GRIDLAN_BENCH_QUICK set).
+        if !quick() {
+            assert_eq!(pick(100u64, 5), 100);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Observability pipeline: machine-readable perf trajectory.
+//!
+//! Three pieces, one contract:
+//!
+//! * [`harness`] — every bench registers sample series with a
+//!   [`harness::BenchHarness`] and writes a deterministic
+//!   `BENCH_<name>.json` (no wall-clock fields; same-seed runs are
+//!   byte-identical).
+//! * [`event`] / [`report`] — `run_scenario` emits typed JSONL lifecycle
+//!   records through a [`event::ScenarioLogger`], and
+//!   [`report::EventRollup`] folds a log back into report-style metrics.
+//! * [`gate`] — `gridlan bench --check` compares fresh bench JSON against
+//!   the committed baselines and fails on a >15% mean regression.
+
+pub mod event;
+pub mod gate;
+pub mod harness;
+pub mod report;
+
+pub use event::{EventKind, ScenarioEvent, ScenarioLogger};
+pub use gate::{compare, GateReport, DEFAULT_TOLERANCE};
+pub use harness::BenchHarness;
+pub use report::EventRollup;

@@ -1,0 +1,205 @@
+//! Fold a structured scenario event log back into report-style rollups.
+//!
+//! This is the offline half of the observability pipeline: given a JSONL
+//! log (from a [`crate::obs::event::ScenarioLogger`] memory/writer sink or
+//! a file on disk), [`EventRollup`] reproduces the counters a live
+//! [`crate::coordinator::metrics::Metrics`] would have accumulated — the
+//! `gridlan report <events.jsonl>` CLI mode renders it.
+
+use crate::coordinator::metrics::Metrics;
+use crate::obs::event::{EventKind, ScenarioEvent};
+use crate::sim::clock::SimTime;
+use crate::util::stats::Summary;
+use crate::util::table::{secs, Align, Table};
+
+/// Aggregates computed from an event log.
+#[derive(Debug, Clone, Default)]
+pub struct EventRollup {
+    pub boots: u64,
+    pub submits: u64,
+    pub schedules: u64,
+    pub starts: u64,
+    pub completes: u64,
+    /// Completions with exit code 0.
+    pub completed_ok: u64,
+    pub faults: u64,
+    pub requeues: u64,
+    /// Per-completion queue wait, in seconds.
+    pub wait_secs: Summary,
+    /// Timestamp of the last record (sim ns).
+    pub last_t: SimTime,
+}
+
+impl EventRollup {
+    pub fn from_events(events: &[ScenarioEvent]) -> Self {
+        let mut r = EventRollup::default();
+        for ev in events {
+            r.last_t = r.last_t.max(ev.at);
+            match &ev.kind {
+                EventKind::Boot { .. } => r.boots += 1,
+                EventKind::Submit { .. } => r.submits += 1,
+                EventKind::Schedule { .. } => r.schedules += 1,
+                EventKind::Start { .. } => r.starts += 1,
+                EventKind::Complete { exit, wait_ns, .. } => {
+                    r.completes += 1;
+                    if *exit == 0 {
+                        r.completed_ok += 1;
+                    }
+                    r.wait_secs.push(*wait_ns as f64 / 1e9);
+                }
+                EventKind::Fault { .. } => r.faults += 1,
+                EventKind::Requeue { .. } => r.requeues += 1,
+            }
+        }
+        r
+    }
+
+    pub fn from_jsonl(text: &str) -> Result<Self, String> {
+        Ok(Self::from_events(&ScenarioEvent::parse_jsonl(text)?))
+    }
+
+    pub fn mean_wait_secs(&self) -> f64 {
+        self.wait_secs.mean()
+    }
+
+    /// Completions per submission (1.0 when nothing was submitted).
+    pub fn completion_rate(&self) -> f64 {
+        if self.submits == 0 {
+            return 1.0;
+        }
+        self.completes as f64 / self.submits as f64
+    }
+
+    /// The rollup agrees with a live [`Metrics`] on the counters both
+    /// sides observe exactly: completions, requeues, and total wait.
+    /// (Submissions rejected at qsub and faults scheduled past the end of
+    /// the run are visible to only one side, so they are not compared.)
+    pub fn consistent_with(&self, m: &Metrics) -> bool {
+        let wait_total_ns = (self.wait_secs.mean() * self.wait_secs.len() as f64 * 1e9).round();
+        self.completes == m.jobs_completed
+            && self.requeues == m.jobs_requeued
+            && (wait_total_ns - m.total_wait as f64).abs() < 1e3
+    }
+
+    /// Human-readable rollup table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["metric", "value"])
+            .title("scenario event-log rollup")
+            .align(&[Align::Left, Align::Right]);
+        t.row(&["boots".into(), self.boots.to_string()]);
+        t.row(&["submits".into(), self.submits.to_string()]);
+        t.row(&["schedules".into(), self.schedules.to_string()]);
+        t.row(&["starts".into(), self.starts.to_string()]);
+        t.row(&["completes".into(), self.completes.to_string()]);
+        t.row(&["completed ok".into(), self.completed_ok.to_string()]);
+        t.row(&["faults".into(), self.faults.to_string()]);
+        t.row(&["requeues".into(), self.requeues.to_string()]);
+        t.row(&["mean wait".into(), secs(self.mean_wait_secs())]);
+        t.row(&["p99 wait".into(), secs(self.wait_secs.p99())]);
+        t.row(&["completion rate".into(), format!("{:.3}", self.completion_rate())]);
+        t.row(&["log span".into(), secs(self.last_t as f64 / 1e9)]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log() -> Vec<ScenarioEvent> {
+        vec![
+            ScenarioEvent::new(10, EventKind::Boot { client: "n01".into(), generation: 1 }),
+            ScenarioEvent::new(
+                20,
+                EventKind::Submit {
+                    job: 1,
+                    owner: "u".into(),
+                    nodes: 1,
+                    ppn: 2,
+                    kind: "trace".into(),
+                },
+            ),
+            ScenarioEvent::new(
+                30,
+                EventKind::Schedule { job: 1, alloc: vec![("n01".into(), 2)] },
+            ),
+            ScenarioEvent::new(30, EventKind::Start { job: 1, run_ns: 100 }),
+            ScenarioEvent::new(
+                50,
+                EventKind::Fault {
+                    client: "n01".into(),
+                    kind: "net_drop".into(),
+                    outage_ns: 5,
+                },
+            ),
+            ScenarioEvent::new(50, EventKind::Requeue { job: 1, client: "n01".into() }),
+            ScenarioEvent::new(
+                90,
+                EventKind::Schedule { job: 1, alloc: vec![("n02".into(), 2)] },
+            ),
+            ScenarioEvent::new(90, EventKind::Start { job: 1, run_ns: 100 }),
+            ScenarioEvent::new(
+                200,
+                EventKind::Complete { job: 1, exit: 0, wait_ns: 3_000_000_000 },
+            ),
+        ]
+    }
+
+    #[test]
+    fn counts_every_kind() {
+        let r = EventRollup::from_events(&log());
+        assert_eq!(r.boots, 1);
+        assert_eq!(r.submits, 1);
+        assert_eq!(r.schedules, 2);
+        assert_eq!(r.starts, 2);
+        assert_eq!(r.completes, 1);
+        assert_eq!(r.completed_ok, 1);
+        assert_eq!(r.faults, 1);
+        assert_eq!(r.requeues, 1);
+        assert_eq!(r.last_t, 200);
+        assert!((r.mean_wait_secs() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_jsonl_matches_from_events() {
+        let events = log();
+        let text: String = events.iter().map(|e| e.to_line() + "\n").collect();
+        let a = EventRollup::from_events(&events);
+        let b = EventRollup::from_jsonl(&text).unwrap();
+        assert_eq!(a.completes, b.completes);
+        assert_eq!(a.requeues, b.requeues);
+        assert_eq!(a.last_t, b.last_t);
+    }
+
+    #[test]
+    fn consistency_against_metrics() {
+        let r = EventRollup::from_events(&log());
+        let m = Metrics {
+            jobs_submitted: 1,
+            jobs_completed: 1,
+            jobs_requeued: 1,
+            total_wait: 3_000_000_000,
+            faults: 1,
+            ..Default::default()
+        };
+        assert!(r.consistent_with(&m));
+        let wrong = Metrics { jobs_completed: 2, ..m };
+        assert!(!r.consistent_with(&wrong));
+    }
+
+    #[test]
+    fn render_mentions_key_counters() {
+        let out = EventRollup::from_events(&log()).render();
+        assert!(out.contains("completes"));
+        assert!(out.contains("requeues"));
+        assert!(out.contains("completion rate"));
+    }
+
+    #[test]
+    fn empty_log_is_total() {
+        let r = EventRollup::from_events(&[]);
+        assert_eq!(r.completion_rate(), 1.0);
+        assert_eq!(r.mean_wait_secs(), 0.0);
+        assert!(!r.render().is_empty());
+    }
+}

@@ -3,6 +3,12 @@
 //! Everything the paper reports is a mean with a parenthesised standard
 //! deviation — e.g. `550(20) µs` — so [`Summary`] carries exactly that,
 //! plus percentiles for the latency benches.
+//!
+//! All accessors are **total**: on an empty sample set `mean`, `std`,
+//! `min`, `max` and `percentile` return `0.0` (documented, not `NaN`), so
+//! downstream JSON serialization never has to special-case emptiness.
+
+use crate::util::json::{obj, Json};
 
 /// Running summary of a sample set.
 #[derive(Debug, Clone, Default)]
@@ -31,9 +37,10 @@ impl Summary {
         self.samples.is_empty()
     }
 
+    /// Arithmetic mean; 0.0 on an empty sample set.
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
-            return f64::NAN;
+            return 0.0;
         }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
@@ -49,18 +56,26 @@ impl Summary {
         (ss / (n - 1) as f64).sqrt()
     }
 
+    /// Smallest sample; 0.0 on an empty sample set.
     pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Largest sample; 0.0 on an empty sample set.
     pub fn max(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
         self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    /// Linear-interpolated percentile, p in [0,100].
+    /// Linear-interpolated percentile, p in [0,100]; 0.0 on an empty set.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
-            return f64::NAN;
+            return 0.0;
         }
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -72,6 +87,28 @@ impl Summary {
         } else {
             s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
         }
+    }
+
+    /// Median (50th percentile).
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// 99th percentile — the tail the latency benches track.
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// The summary as a JSON object `{n, mean, sd, p50, p99}` — the shape
+    /// the bench harness embeds in every `BENCH_*.json` series.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("n", Json::Num(self.len() as f64)),
+            ("mean", Json::Num(self.mean())),
+            ("sd", Json::Num(self.std())),
+            ("p50", Json::Num(self.p50())),
+            ("p99", Json::Num(self.p99())),
+        ])
     }
 
     /// Paper-style "mean(std)" with std rounded to the same scale the paper
@@ -154,7 +191,38 @@ mod tests {
     }
 
     #[test]
-    fn empty_summary_is_nan() {
-        assert!(Summary::new().mean().is_nan());
+    fn empty_summary_is_total() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+    }
+
+    #[test]
+    fn p50_p99_match_percentile() {
+        let s = Summary::from_slice(&(1..=100).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(s.p50(), s.percentile(50.0));
+        assert_eq!(s.p99(), s.percentile(99.0));
+        assert!((s.p50() - 50.5).abs() < 1e-12);
+        assert!((s.p99() - 99.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn to_json_shape_and_values() {
+        let s = Summary::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let j = s.to_json();
+        assert_eq!(j.get("n").unwrap().as_u64(), Some(4));
+        assert!((j.get("mean").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+        assert!((j.get("p50").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+        assert!(j.get("sd").unwrap().as_f64().is_some());
+        assert!(j.get("p99").unwrap().as_f64().is_some());
+        // empty summary serializes finite zeros, never NaN
+        let e = Summary::new().to_json();
+        assert_eq!(e.get("mean").unwrap().as_f64(), Some(0.0));
+        assert_eq!(e.to_string(), r#"{"n":0,"mean":0,"sd":0,"p50":0,"p99":0}"#);
     }
 }

@@ -1,0 +1,139 @@
+//! Integration tests for the observability pipeline: structured scenario
+//! event logs (determinism + round-trip + rollup consistency), the bench
+//! harness JSON contract, and the regression gate.
+
+use gridlan::config::Config;
+use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::coordinator::metrics::Metrics;
+use gridlan::coordinator::scenario::{run_scenario_logged, Scenario};
+use gridlan::host::faults::FaultPlan;
+use gridlan::obs::event::{ScenarioEvent, ScenarioLogger};
+use gridlan::obs::gate::{compare, DEFAULT_TOLERANCE};
+use gridlan::obs::harness::{validate, BenchHarness};
+use gridlan::obs::report::EventRollup;
+use gridlan::rm::alloc::ResourceRequest;
+use gridlan::runtime::engine::EpEngine;
+use gridlan::sim::clock::DUR_SEC;
+use gridlan::util::json::Json;
+use gridlan::workload::trace::{JobPayload, TraceJob};
+
+fn trace() -> Vec<TraceJob> {
+    (0..8)
+        .map(|i| TraceJob {
+            at: i as u64 * 300 * DUR_SEC,
+            owner: format!("u{}", i % 3),
+            request: ResourceRequest { nodes: 1, ppn: 1 + (i % 3) as u32 },
+            compute: (240 + 60 * (i % 3) as u64) * DUR_SEC,
+            walltime: 3600 * DUR_SEC,
+            payload: JobPayload::Synthetic,
+        })
+        .collect()
+}
+
+/// One faulty scenario run with a memory event sink; returns the JSONL
+/// log and the live metrics.
+fn run_logged() -> (String, Metrics) {
+    let scenario = Scenario {
+        horizon: 4 * 3600 * DUR_SEC,
+        faults: FaultPlan::lab_default(),
+        ..Default::default()
+    };
+    let run = run_scenario_logged(
+        Gridlan::build(Config::table1()),
+        trace(),
+        &scenario,
+        EpEngine::scalar(),
+        ScenarioLogger::memory(),
+    );
+    (run.logger.to_jsonl(), run.report.metrics)
+}
+
+#[test]
+fn same_seed_runs_emit_byte_identical_event_logs() {
+    let (a, ma) = run_logged();
+    let (b, mb) = run_logged();
+    assert!(!a.is_empty(), "a faulty scenario must emit events");
+    assert_eq!(a, b, "same-seed event logs must be byte-identical");
+    assert_eq!(ma, mb, "same-seed metrics must match");
+}
+
+#[test]
+fn event_log_round_trips_and_rolls_up_consistently() {
+    let (log, metrics) = run_logged();
+    let events = ScenarioEvent::parse_jsonl(&log).expect("log parses");
+    let reserialized: String = events.iter().map(|e| e.to_line() + "\n").collect();
+    assert_eq!(log, reserialized, "parse -> serialize is byte-stable");
+
+    let rollup = EventRollup::from_events(&events);
+    assert!(rollup.consistent_with(&metrics));
+    assert_eq!(rollup.submits, metrics.jobs_submitted);
+    assert_eq!(rollup.completes, metrics.jobs_completed);
+    assert_eq!(rollup.requeues, metrics.jobs_requeued);
+    assert!(rollup.boots >= 4, "all four table-1 clients boot at least once");
+    let mut last = 0;
+    for ev in &events {
+        assert!(ev.at >= last, "event timestamps are monotone");
+        last = ev.at;
+    }
+}
+
+#[test]
+fn bench_harness_json_round_trips_through_util_json() {
+    let mut h = BenchHarness::new("roundtrip", 7);
+    h.param_u64("jobs", 8);
+    h.param_str("mode", "test");
+    h.sample("makespan", "s", 1234.5);
+    h.sample("goodput", "frac", 0.875);
+    h.sample("delta", "sum", -3.25e-4);
+    let rendered = h.render_json();
+    let doc = Json::parse(&rendered).expect("bench JSON parses");
+    validate(&doc).expect("bench JSON passes schema validation");
+    let re = doc.to_pretty() + "\n";
+    assert_eq!(rendered, re, "parse -> pretty-print is byte-stable");
+}
+
+#[test]
+fn gate_fails_on_injected_slowdown_and_passes_within_tolerance() {
+    fn time_doc(mean: f64) -> Json {
+        let mut h = BenchHarness::new("gate", 1);
+        h.param_u64("jobs", 8);
+        h.sample("makespan", "s", mean);
+        h.to_json()
+    }
+    let base = time_doc(100.0);
+    // 20% slower on a lower-is-better unit: the gate must fail.
+    let slow = compare(&base, &time_doc(120.0), DEFAULT_TOLERANCE).unwrap();
+    assert!(!slow.passed(), "20% slowdown must fail the gate");
+    // 8% slower is inside the 15% tolerance.
+    let ok = compare(&base, &time_doc(108.0), DEFAULT_TOLERANCE).unwrap();
+    assert!(ok.passed(), "8% drift must pass the gate");
+    // Getting faster is never a regression for time units.
+    let fast = compare(&base, &time_doc(50.0), DEFAULT_TOLERANCE).unwrap();
+    assert!(fast.passed());
+}
+
+#[test]
+fn gate_direction_for_rates_is_higher_is_better() {
+    fn rate_doc(mean: f64) -> Json {
+        let mut h = BenchHarness::new("gate-rate", 1);
+        h.sample("throughput", "Mpairs/s", mean);
+        h.to_json()
+    }
+    let base = rate_doc(100.0);
+    let drop = compare(&base, &rate_doc(80.0), DEFAULT_TOLERANCE).unwrap();
+    assert!(!drop.passed(), "20% rate drop must fail the gate");
+    let gain = compare(&base, &rate_doc(120.0), DEFAULT_TOLERANCE).unwrap();
+    assert!(gain.passed(), "a rate gain is not a regression");
+}
+
+#[test]
+fn suite_bench_is_deterministic_and_gates_against_itself() {
+    let a = gridlan::bench::suite::run_fault_recovery();
+    let b = gridlan::bench::suite::run_fault_recovery();
+    assert_eq!(a.render_json(), b.render_json(), "same-seed BENCH json is byte-identical");
+    let doc = Json::parse(&a.render_json()).unwrap();
+    validate(&doc).expect("suite bench emits schema-valid JSON");
+    let report = compare(&doc, &doc, DEFAULT_TOLERANCE).unwrap();
+    assert!(report.passed(), "a bench never regresses against itself");
+    assert_eq!(report.n_regressions(), 0);
+}
