@@ -1,0 +1,213 @@
+//! In-tree static analysis: the `gridlan lint` determinism & invariant
+//! pass (DESIGN.md §9).
+//!
+//! Zero-dependency, in the spirit of `util/json.rs`: a comment/string-aware
+//! source scanner ([`scan`]) feeds a small rule engine ([`rules`]) that
+//! enforces the contracts every replayable artifact in this repo rests on —
+//! scenario event logs, `BENCH_*.json` baselines, and the regression gate
+//! are only meaningful while same-seed runs stay bit-identical.
+//!
+//! Entry points: [`lint_paths`] walks `.rs` files under the given roots
+//! (deterministic order, `target/` skipped) and returns a [`LintReport`];
+//! the CLI front end is `gridlan lint [--format json|human]
+//! [--deny-warnings] [PATH...]`, which defaults to scanning `rust/src`.
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::{Finding, Severity};
+
+use crate::util::json::{Json, JsonObj};
+use std::path::{Path, PathBuf};
+
+/// Outcome of one lint run.
+#[derive(Debug, Clone)]
+pub struct LintReport {
+    /// All unsuppressed findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn errors(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Deny).count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
+    }
+
+    /// Exit code under the CLI contract: deny findings always fail;
+    /// warnings fail only when `deny_warnings` is set.
+    pub fn exit_code(&self, deny_warnings: bool) -> i32 {
+        if self.errors() > 0 || (deny_warnings && self.warnings() > 0) {
+            1
+        } else {
+            0
+        }
+    }
+
+    /// Compiler-style one-line-per-finding text plus a summary line.
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!(
+                "{}: {}:{}: [{}] {}\n",
+                f.severity.name(),
+                f.path,
+                f.line,
+                f.rule,
+                f.message
+            ));
+        }
+        out.push_str(&format!(
+            "lint: {} file(s), {} error(s), {} warning(s)\n",
+            self.files_scanned,
+            self.errors(),
+            self.warnings()
+        ));
+        out
+    }
+
+    /// Machine-readable form (stable key order, deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("files_scanned", Json::Num(self.files_scanned as f64));
+        o.insert("errors", Json::Num(self.errors() as f64));
+        o.insert("warnings", Json::Num(self.warnings() as f64));
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                let mut fo = JsonObj::new();
+                fo.insert("severity", Json::Str(f.severity.name().to_string()));
+                fo.insert("rule", Json::Str(f.rule.to_string()));
+                fo.insert("path", Json::Str(f.path.clone()));
+                fo.insert("line", Json::Num(f.line as f64));
+                fo.insert("message", Json::Str(f.message.clone()));
+                Json::Obj(fo)
+            })
+            .collect();
+        o.insert("findings", Json::Arr(findings));
+        Json::Obj(o)
+    }
+}
+
+/// Lint every `.rs` file under the given roots (files are scanned
+/// directly; directories are walked recursively, `target/` and hidden
+/// directories skipped).  File order — and therefore finding order — is
+/// sorted, so output is deterministic across filesystems.
+pub fn lint_paths(roots: &[PathBuf]) -> Result<LintReport, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        if root.is_dir() {
+            collect_rs_files(root, &mut files)?;
+        } else if root.is_file() {
+            files.push(root.clone());
+        } else {
+            return Err(format!("lint: no such path: {}", root.display()));
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("lint: cannot read {}: {e}", path.display()))?;
+        let scanned = scan::scan_source(&path.to_string_lossy(), &text);
+        findings.extend(rules::check_file(&scanned));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(LintReport { findings, files_scanned: files.len() })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("lint: cannot read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("lint: {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().to_string();
+        if path.is_dir() {
+            if name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs_files(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_from(snippets: &[(&str, &str)]) -> LintReport {
+        let mut findings = Vec::new();
+        for (path, src) in snippets {
+            findings.extend(rules::check_file(&scan::scan_source(path, src)));
+        }
+        findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+        LintReport { findings, files_scanned: snippets.len() }
+    }
+
+    #[test]
+    fn exit_code_contract() {
+        let clean = report_from(&[("a.rs", "fn main() {}\n")]);
+        assert_eq!(clean.exit_code(false), 0);
+        assert_eq!(clean.exit_code(true), 0);
+
+        let warn_only = report_from(&[(
+            "coordinator/scenario.rs",
+            "sim.schedule_at(1, |s, w| w.x.unwrap());\n",
+        )]);
+        assert_eq!(warn_only.errors(), 0);
+        assert_eq!(warn_only.warnings(), 1);
+        assert_eq!(warn_only.exit_code(false), 0);
+        assert_eq!(warn_only.exit_code(true), 1);
+
+        let deny = report_from(&[("sim/engine.rs", "let t = Instant::now();\n")]);
+        assert_eq!(deny.exit_code(false), 1);
+    }
+
+    #[test]
+    fn human_render_names_rule_file_line() {
+        let r = report_from(&[("sim/engine.rs", "let t = Instant::now();\n")]);
+        let text = r.render_human();
+        assert!(text.contains("deny: sim/engine.rs:1: [wall-clock]"), "{text}");
+        assert!(text.contains("1 error(s), 0 warning(s)"), "{text}");
+    }
+
+    #[test]
+    fn json_render_is_stable_and_parseable() {
+        let r = report_from(&[("sim/engine.rs", "use std::collections::HashMap;\n")]);
+        let text = r.to_json().to_string();
+        let back = Json::parse(&text).expect("lint JSON parses");
+        assert_eq!(back.get("errors").and_then(Json::as_u64), Some(1));
+        let findings = back.get("findings").and_then(Json::as_arr).expect("array");
+        assert_eq!(findings.len(), 1);
+        assert_eq!(
+            findings[0].get("rule").and_then(Json::as_str),
+            Some("unordered-collections")
+        );
+        // Deterministic: rendering twice is byte-identical.
+        assert_eq!(text, r.to_json().to_string());
+    }
+
+    #[test]
+    fn findings_sort_by_path_then_line() {
+        let r = report_from(&[
+            ("b.rs", "let t = Instant::now();\n"),
+            ("a.rs", "x;\nlet m: HashSet<u32> = x;\n"),
+        ]);
+        let keys: Vec<(String, usize)> =
+            r.findings.iter().map(|f| (f.path.clone(), f.line)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+}

@@ -1,0 +1,447 @@
+//! The determinism & invariant rule set.
+//!
+//! Every rule exists to defend one contract: **same-seed scenario runs are
+//! bit-identical** (DESIGN.md §6/§9).  Wall-clock reads, hasher-ordered
+//! iteration, ambient threads, and unseeded entropy are exactly the ways a
+//! Rust codebase silently loses that property; panicking DES handlers and
+//! library-side `process::exit` are the ways it loses robustness.
+//!
+//! Two escape hatches, both explicit and auditable:
+//! * a per-rule **file allowlist** for whole files that are host-side by
+//!   design (the compute backends time real work; the bench suite reports
+//!   wall throughput);
+//! * a `// lint:allow(rule): reason` **pragma** for a single legitimate
+//!   site.  Pragmas that stop suppressing anything are themselves errors
+//!   (`stale-pragma`), so the annotation layer cannot rot.
+
+use super::scan::ScannedFile;
+
+/// Finding severity: `Deny` fails the lint; `Warn` fails only under
+/// `--deny-warnings`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One rule violation (or stale/invalid pragma).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    pub message: String,
+}
+
+/// A substring-pattern rule over blanked code lines.
+struct PatternRule {
+    name: &'static str,
+    severity: Severity,
+    /// Any of these substrings on a code line fires the rule.
+    patterns: &'static [&'static str],
+    /// Path suffixes the rule does not apply to (host-side by design).
+    allow_paths: &'static [&'static str],
+    /// Short rationale, embedded in the finding message.
+    why: &'static str,
+}
+
+/// Rule name for the schedule-closure panic check (special-cased: it needs
+/// call-span tracking, not line patterns).
+pub const PANIC_IN_HANDLER: &str = "panic-in-handler";
+/// Rule name for stale/invalid pragma findings.
+pub const STALE_PRAGMA: &str = "stale-pragma";
+
+const PATTERN_RULES: &[PatternRule] = &[
+    PatternRule {
+        name: "wall-clock",
+        severity: Severity::Deny,
+        patterns: &["Instant::now", "SystemTime"],
+        // Host-side by design: the compute backends time real execution,
+        // the bench suite reports wall throughput alongside sim series,
+        // and the logger is allowed to stamp host time if it ever wants to.
+        allow_paths: &[
+            "bench/suite.rs",
+            "runtime/backend.rs",
+            "runtime/threaded.rs",
+            "runtime/pjrt.rs",
+            "util/log.rs",
+        ],
+        why: "wall-clock reads make same-seed runs diverge; sim code must use Simulator::now()",
+    },
+    PatternRule {
+        name: "unordered-collections",
+        severity: Severity::Deny,
+        patterns: &["HashMap", "HashSet", "hash_map::", "hash_set::"],
+        allow_paths: &[],
+        why: "iteration order depends on hasher state; use BTreeMap/BTreeSet or sort first",
+    },
+    PatternRule {
+        name: "thread-spawn",
+        severity: Severity::Deny,
+        patterns: &["thread::spawn", "thread::scope", "thread::Builder"],
+        allow_paths: &["runtime/threaded.rs"],
+        why: "ambient threads interleave nondeterministically; only the threaded backend may fan out",
+    },
+    PatternRule {
+        name: "ambient-random",
+        severity: Severity::Deny,
+        patterns: &["RandomState", "thread_rng", "from_entropy", "rand::", "getrandom"],
+        allow_paths: &["util/rng.rs"],
+        why: "unseeded entropy breaks replay; all randomness must flow from util::rng seeds",
+    },
+    PatternRule {
+        name: "sleep",
+        severity: Severity::Deny,
+        patterns: &["thread::sleep", "sleep_ms"],
+        allow_paths: &[],
+        why: "wall-clock waiting has no place in a discrete-event simulation",
+    },
+    PatternRule {
+        name: "process-exit",
+        severity: Severity::Deny,
+        patterns: &["process::exit", "process::abort"],
+        allow_paths: &["main.rs"],
+        why: "library code must return errors; only the CLI decides the process exit code",
+    },
+];
+
+/// Names of every rule a pragma may reference.
+pub fn rule_names() -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = PATTERN_RULES.iter().map(|r| r.name).collect();
+    names.push(PANIC_IN_HANDLER);
+    names.push(STALE_PRAGMA);
+    names
+}
+
+/// Patterns that may not appear inside a DES handler closure (the `Warn`
+/// tier): a panicking handler tears down the whole scenario instead of
+/// surfacing a job-level failure.  `.expect("reason")` is deliberately NOT
+/// flagged — a documented invariant is the sanctioned form.
+const HANDLER_PANIC_PATTERNS: &[&str] =
+    &["panic!", ".unwrap()", "unreachable!", "todo!", "unimplemented!"];
+
+/// The DES scheduling entry points whose closure arguments count as
+/// event-handler scope.
+const HANDLER_CALLS: &[&str] = &["schedule_at(", "schedule_in("];
+
+/// Run every rule over one scanned file.  Pragmas on the finding's line or
+/// the line above suppress it; each suppression marks the pragma used, and
+/// unused/invalid pragmas come back as `stale-pragma` findings.
+pub fn check_file(file: &ScannedFile) -> Vec<Finding> {
+    let mut raw: Vec<Finding> = Vec::new();
+
+    for rule in PATTERN_RULES {
+        if rule.allow_paths.iter().any(|suffix| file.path.ends_with(suffix)) {
+            continue;
+        }
+        for (idx, code) in file.code.iter().enumerate() {
+            if let Some(pat) = rule.patterns.iter().find(|p| code.contains(**p)) {
+                raw.push(Finding {
+                    rule: rule.name,
+                    severity: rule.severity,
+                    path: file.path.clone(),
+                    line: idx + 1,
+                    message: format!("`{pat}`: {}", rule.why),
+                });
+            }
+        }
+    }
+
+    raw.extend(check_handler_panics(file));
+
+    // Pragma suppression: a pragma covers its own line and the next line.
+    let mut used = vec![false; file.pragmas.len()];
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in raw {
+        let suppressed = file.pragmas.iter().enumerate().any(|(pi, p)| {
+            let covers = p.rule == f.rule && (p.line == f.line || p.line + 1 == f.line);
+            if covers && !p.reason.is_empty() {
+                used[pi] = true;
+            }
+            covers && !p.reason.is_empty()
+        });
+        if !suppressed {
+            findings.push(f);
+        }
+    }
+
+    // Pragma hygiene: unknown rule, missing reason, or nothing suppressed.
+    let known = rule_names();
+    for (pi, p) in file.pragmas.iter().enumerate() {
+        if !known.contains(&p.rule.as_str()) {
+            findings.push(Finding {
+                rule: STALE_PRAGMA,
+                severity: Severity::Deny,
+                path: file.path.clone(),
+                line: p.line,
+                message: format!(
+                    "pragma names unknown rule `{}` (known: {})",
+                    p.rule,
+                    known.join(", ")
+                ),
+            });
+        } else if p.reason.is_empty() {
+            findings.push(Finding {
+                rule: STALE_PRAGMA,
+                severity: Severity::Deny,
+                path: file.path.clone(),
+                line: p.line,
+                message: format!(
+                    "pragma for `{}` has no reason; write `// lint:allow({}): why`",
+                    p.rule, p.rule
+                ),
+            });
+        } else if !used[pi] {
+            findings.push(Finding {
+                rule: STALE_PRAGMA,
+                severity: Severity::Deny,
+                path: file.path.clone(),
+                line: p.line,
+                message: format!(
+                    "pragma for `{}` suppresses nothing here — delete it",
+                    p.rule
+                ),
+            });
+        }
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Find `panic!`/`.unwrap()`-style calls lexically inside the closure
+/// argument of `schedule_at(...)` / `schedule_in(...)`.  Tracking is by
+/// parenthesis depth from the call's opening paren, so multi-line closures
+/// are covered; named handler functions called *from* a closure are not
+/// (they are ordinary code and may assert their own invariants).
+fn check_handler_panics(file: &ScannedFile) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let mut depth = 0u32; // 0 = outside any handler call span
+    for (idx, code) in file.code.iter().enumerate() {
+        let chars: Vec<char> = code.chars().collect();
+        let mut i = 0usize;
+        let mut span_start: Option<usize> = if depth > 0 { Some(0) } else { None };
+        while i < chars.len() {
+            if depth == 0 {
+                match next_handler_call(&chars, i) {
+                    Some(after_open) => {
+                        depth = 1;
+                        i = after_open;
+                        span_start = Some(i);
+                    }
+                    None => break,
+                }
+            } else {
+                match chars[i] {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            let start = span_start.take().unwrap_or(0);
+                            check_span(file, idx, &chars[start..i], &mut findings);
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+        }
+        if depth > 0 {
+            let start = span_start.unwrap_or(0);
+            check_span(file, idx, &chars[start.min(chars.len())..], &mut findings);
+        }
+    }
+    findings
+}
+
+/// Earliest handler-call open paren at or after `from`; returns the index
+/// just past the `(`.
+fn next_handler_call(chars: &[char], from: usize) -> Option<usize> {
+    let hay: String = chars[from..].iter().collect();
+    let mut best: Option<usize> = None;
+    for call in HANDLER_CALLS {
+        if let Some(off) = hay.find(call) {
+            // `find` returns a byte offset; convert to a char count so the
+            // caller's index stays valid on non-ASCII lines.
+            let after = from + hay[..off].chars().count() + call.chars().count();
+            best = Some(best.map_or(after, |b: usize| b.min(after)));
+        }
+    }
+    best
+}
+
+/// Flag panic patterns within one in-span slice of a line.
+fn check_span(file: &ScannedFile, line_idx: usize, span: &[char], findings: &mut Vec<Finding>) {
+    let text: String = span.iter().collect();
+    for pat in HANDLER_PANIC_PATTERNS {
+        if text.contains(pat) {
+            findings.push(Finding {
+                rule: PANIC_IN_HANDLER,
+                severity: Severity::Warn,
+                path: file.path.clone(),
+                line: line_idx + 1,
+                message: format!(
+                    "`{pat}` inside a DES handler closure: a panicking handler kills the whole \
+                     scenario; return/record the failure or use .expect(\"invariant\")"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::scan_source;
+
+    fn findings_for(path: &str, src: &str) -> Vec<Finding> {
+        check_file(&scan_source(path, src))
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn wall_clock_fires_and_allowlist_exempts() {
+        let bad = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of(&findings_for("sim/engine.rs", bad)), vec!["wall-clock"]);
+        assert!(findings_for("runtime/threaded.rs", bad).is_empty());
+        let sys = "use std::time::SystemTime;\n";
+        assert_eq!(rules_of(&findings_for("rm/sched.rs", sys)), vec!["wall-clock"]);
+    }
+
+    #[test]
+    fn wall_clock_silent_on_clean_code() {
+        let clean = "fn f(now: u64) -> u64 { now + 1 }\n";
+        assert!(findings_for("sim/engine.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn unordered_collections_fire_everywhere() {
+        let bad = "use std::collections::HashMap;\nlet m: HashMap<u32, u32> = HashMap::new();\n";
+        let fs = findings_for("rm/sched.rs", bad);
+        assert_eq!(rules_of(&fs), vec!["unordered-collections", "unordered-collections"]);
+        let clean = "use std::collections::BTreeMap;\nlet h = std::hash::Hash;\n";
+        assert!(findings_for("rm/sched.rs", clean).is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "// HashMap would be wrong here\nlet s = \"Instant::now\";\n";
+        assert!(findings_for("sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_only_in_threaded_backend() {
+        let bad = "std::thread::spawn(|| {});\n";
+        assert_eq!(rules_of(&findings_for("monitor/pinger.rs", bad)), vec!["thread-spawn"]);
+        assert!(findings_for("runtime/threaded.rs", bad).is_empty());
+        let scope = "std::thread::scope(|s| {});\n";
+        assert_eq!(rules_of(&findings_for("vpn/hub.rs", scope)), vec!["thread-spawn"]);
+    }
+
+    #[test]
+    fn ambient_random_fires_outside_rng() {
+        let bad = "use std::collections::hash_map::RandomState;\n";
+        let fs = findings_for("rm/queue.rs", bad);
+        // RandomState trips ambient-random; hash_map:: trips the
+        // unordered-collections rule too — both are real hazards.
+        assert!(fs.iter().any(|f| f.rule == "ambient-random"), "{fs:?}");
+        assert!(findings_for("util/rng.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn sleep_and_process_exit() {
+        assert_eq!(
+            rules_of(&findings_for("rm/mom.rs", "std::thread::sleep(d);\n")),
+            vec!["sleep"]
+        );
+        assert_eq!(
+            rules_of(&findings_for("rm/server.rs", "std::process::exit(1);\n")),
+            vec!["process-exit"]
+        );
+        assert!(findings_for("main.rs", "std::process::exit(1);\n").is_empty());
+    }
+
+    #[test]
+    fn panic_in_handler_is_warn_tier_and_span_scoped() {
+        let bad = "sim.schedule_at(10, move |s, w| {\n    w.jobs.get(&id).unwrap();\n});\n";
+        let fs = findings_for("coordinator/scenario.rs", bad);
+        assert_eq!(rules_of(&fs), vec![PANIC_IN_HANDLER]);
+        assert_eq!(fs[0].severity, Severity::Warn);
+        assert_eq!(fs[0].line, 2);
+        // The same unwrap outside any handler span is fine.
+        let outside = "let x = w.jobs.get(&id).unwrap();\nsim.schedule_at(10, tick);\n";
+        assert!(findings_for("coordinator/scenario.rs", outside).is_empty());
+        // .expect with a reason is the sanctioned form.
+        let expected =
+            "sim.schedule_in(5, move |s, w| {\n    w.jobs.get(&id).expect(\"armed above\");\n});\n";
+        assert!(findings_for("coordinator/scenario.rs", expected).is_empty());
+    }
+
+    #[test]
+    fn handler_span_closes_with_parens() {
+        // After the call's closing paren the rule stops applying.
+        let src = "sim.schedule_at(10, |s, w| w.tick());\nlet y = x.unwrap();\n";
+        assert!(findings_for("coordinator/scenario.rs", src).is_empty());
+        // panic! in a nested call inside the span still fires.
+        let nested = "sim.schedule_at(t, move |s, w| { if bad { panic!(\"no\") } });\n";
+        assert_eq!(
+            rules_of(&findings_for("coordinator/scenario.rs", nested)),
+            vec![PANIC_IN_HANDLER]
+        );
+    }
+
+    #[test]
+    fn pragma_suppresses_same_and_next_line() {
+        let same = "let t = Instant::now(); // lint:allow(wall-clock): CLI-facing timer\n";
+        assert!(findings_for("main.rs", same).is_empty());
+        let above =
+            "// lint:allow(wall-clock): CLI-facing timer\nlet t = Instant::now();\n";
+        assert!(findings_for("main.rs", above).is_empty());
+    }
+
+    #[test]
+    fn stale_pragma_is_a_deny_finding() {
+        let stale = "// lint:allow(wall-clock): nothing here needs it\nlet x = 1;\n";
+        let fs = findings_for("main.rs", stale);
+        assert_eq!(rules_of(&fs), vec![STALE_PRAGMA]);
+        assert_eq!(fs[0].severity, Severity::Deny);
+        assert_eq!(fs[0].line, 1);
+    }
+
+    #[test]
+    fn reasonless_and_unknown_pragmas_are_rejected() {
+        let no_reason = "let t = Instant::now(); // lint:allow(wall-clock)\n";
+        let fs = findings_for("main.rs", no_reason);
+        // The finding is NOT suppressed and the pragma is flagged.
+        assert!(fs.iter().any(|f| f.rule == "wall-clock"));
+        assert!(fs.iter().any(|f| f.rule == STALE_PRAGMA));
+
+        let unknown = "// lint:allow(no-such-rule): whatever\nlet x = 1;\n";
+        let fs = findings_for("main.rs", unknown);
+        assert_eq!(rules_of(&fs), vec![STALE_PRAGMA]);
+        assert!(fs[0].message.contains("unknown rule"));
+    }
+
+    #[test]
+    fn multiline_handler_span_tracks_depth() {
+        let src = "sim.schedule_in(delay, move |s, w| {\n    let a = f(1, (2));\n    \
+                   w.x.todo_marker();\n    if a { unreachable!() }\n});\nx.unwrap();\n";
+        let fs = findings_for("coordinator/scenario.rs", src);
+        assert_eq!(rules_of(&fs), vec![PANIC_IN_HANDLER]);
+        assert_eq!(fs[0].line, 4);
+    }
+}

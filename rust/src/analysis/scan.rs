@@ -1,0 +1,367 @@
+//! Comment/string-aware Rust source scanner.
+//!
+//! The rule engine must never fire on text inside a comment, a string
+//! literal, or a char literal — otherwise the lint's own fixtures (and any
+//! doc sentence mentioning `HashMap`) would light up.  This pass walks the
+//! source once with a small state machine and produces a *blanked* copy:
+//! byte-for-byte the same line structure, but every comment, string, and
+//! char literal replaced by spaces.  Pattern rules then match on the
+//! blanked text with plain substring search.
+//!
+//! The same pass extracts suppression pragmas from line comments:
+//!
+//! ```text
+//! // lint:allow(rule-name): reason the exception is legitimate
+//! ```
+//!
+//! A pragma suppresses findings for `rule-name` on its own line and on the
+//! line directly below it.  Pragmas are only recognized in `//` line
+//! comments (not block comments), and the reason clause is mandatory —
+//! [`crate::analysis::rules`] rejects reasonless or unknown-rule pragmas
+//! and flags pragmas that suppressed nothing as stale.
+
+/// One `lint:allow` pragma as written in the source.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pragma {
+    /// 1-based line the pragma comment sits on.
+    pub line: usize,
+    /// The rule name between the parentheses (not validated here).
+    pub rule: String,
+    /// The free-text justification after the closing `):` (may be empty —
+    /// the rule engine treats an empty reason as a violation).
+    pub reason: String,
+}
+
+/// One scanned source file: blanked code lines plus extracted pragmas.
+#[derive(Debug, Clone)]
+pub struct ScannedFile {
+    /// Display path (normalized to forward slashes).
+    pub path: String,
+    /// Source lines with comments/strings/chars blanked to spaces.
+    /// Line `code[i]` corresponds to source line `i + 1`.
+    pub code: Vec<String>,
+    /// Pragmas in source order.
+    pub pragmas: Vec<Pragma>,
+}
+
+/// Lexer state for the blanking pass.
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comments: the value is the nesting depth.
+    BlockComment(u32),
+    /// Ordinary string literal (escapes honored).
+    Str,
+    /// Raw string literal terminated by `"` plus this many `#`s.
+    RawStr(u32),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scan one source file.  `path` is used for display only.
+pub fn scan_source(path: &str, text: &str) -> ScannedFile {
+    let chars: Vec<char> = text.chars().collect();
+    let n = chars.len();
+    let mut out = String::with_capacity(text.len());
+    let mut pragmas: Vec<Pragma> = Vec::new();
+    let mut comment_buf = String::new();
+    let mut line = 1usize;
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // Push a blanked char: newlines survive (line structure is the whole
+    // point), everything else becomes a space.
+    fn blank(out: &mut String, c: char) {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    comment_buf.clear();
+                    blank(&mut out, c);
+                    blank(&mut out, '/');
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    blank(&mut out, c);
+                    blank(&mut out, '*');
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    blank(&mut out, c);
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                    && raw_string_hashes(&chars, i).is_some()
+                {
+                    // r"...", r#"..."#, br#"..."# — blank the prefix and
+                    // enter the raw string after its opening quote.
+                    let (hashes, body_start) = raw_string_hashes(&chars, i).expect("checked");
+                    for &pc in &chars[i..body_start] {
+                        blank(&mut out, pc);
+                    }
+                    state = State::RawStr(hashes);
+                    i = body_start;
+                } else if c == 'b'
+                    && (i == 0 || !is_ident(chars[i - 1]))
+                    && next == Some('\'')
+                {
+                    // Byte char literal b'x': blank the b and let the '
+                    // branch below consume the literal on the next round.
+                    blank(&mut out, c);
+                    i += 1;
+                } else if c == '\'' {
+                    // Char literal or lifetime.  `'\...'` and `'x'` are
+                    // literals; anything else (`'a` in `<'a>`) is a
+                    // lifetime and stays as code.
+                    if next == Some('\\') {
+                        blank(&mut out, c);
+                        i += 1;
+                        // Skip the escape sequence up to the closing quote.
+                        while i < n {
+                            let e = chars[i];
+                            if e == '\n' {
+                                line += 1;
+                            }
+                            blank(&mut out, e);
+                            if e == '\\' && i + 1 < n {
+                                blank(&mut out, chars[i + 1]);
+                                i += 2;
+                                continue;
+                            }
+                            i += 1;
+                            if e == '\'' {
+                                break;
+                            }
+                        }
+                    } else if next.is_some() && chars.get(i + 2).copied() == Some('\'') {
+                        blank(&mut out, c);
+                        blank(&mut out, chars[i + 1]);
+                        blank(&mut out, '\'');
+                        i += 3;
+                    } else {
+                        out.push(c); // lifetime tick — harmless as code
+                        i += 1;
+                    }
+                } else {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                if c == '\n' {
+                    if let Some(p) = parse_pragma(&comment_buf, line - 1) {
+                        pragmas.push(p);
+                    }
+                    out.push('\n');
+                    state = State::Code;
+                } else {
+                    comment_buf.push(c);
+                    blank(&mut out, c);
+                }
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    blank(&mut out, c);
+                    blank(&mut out, '/');
+                    i += 2;
+                    state = if depth <= 1 { State::Code } else { State::BlockComment(depth - 1) };
+                } else if c == '/' && next == Some('*') {
+                    blank(&mut out, c);
+                    blank(&mut out, '*');
+                    i += 2;
+                    state = State::BlockComment(depth + 1);
+                } else {
+                    blank(&mut out, c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < n {
+                    if chars[i + 1] == '\n' {
+                        line += 1;
+                    }
+                    blank(&mut out, c);
+                    blank(&mut out, chars[i + 1]);
+                    i += 2;
+                } else {
+                    blank(&mut out, c);
+                    i += 1;
+                    if c == '"' {
+                        state = State::Code;
+                    }
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    blank(&mut out, c);
+                    for k in 0..hashes as usize {
+                        blank(&mut out, chars[i + 1 + k]);
+                    }
+                    i += 1 + hashes as usize;
+                    state = State::Code;
+                } else {
+                    blank(&mut out, c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Pragma on the file's last line (no trailing newline).
+    if let State::LineComment = state {
+        if let Some(p) = parse_pragma(&comment_buf, line) {
+            pragmas.push(p);
+        }
+    }
+
+    ScannedFile {
+        path: path.replace('\\', "/"),
+        code: out.split('\n').map(str::to_string).collect(),
+        pragmas,
+    }
+}
+
+/// If `chars[i..]` starts a raw string prefix (`r`, `br`, `r#`, `br##`...
+/// followed by `"`), return (hash count, index of the first body char).
+fn raw_string_hashes(chars: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `chars[i]` close a raw string with `hashes` hashes?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(i + 1 + k) == Some(&'#'))
+}
+
+/// Parse `lint:allow(rule): reason` out of one line comment's text.
+fn parse_pragma(comment: &str, line: usize) -> Option<Pragma> {
+    let start = comment.find("lint:allow(")?;
+    let rest = &comment[start + "lint:allow(".len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let reason = after.strip_prefix(':').map(|r| r.trim().to_string()).unwrap_or_default();
+    Some(Pragma { line, rule, reason })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        scan_source("t.rs", text).code
+    }
+
+    #[test]
+    fn line_comments_are_blanked() {
+        let code = code_of("let x = 1; // HashMap in a comment\nlet y = 2;\n");
+        assert!(code[0].contains("let x = 1;"));
+        assert!(!code[0].contains("HashMap"));
+        assert!(code[1].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_preserve_lines() {
+        let code = code_of("a /* one /* two */ still comment */ b\n/* multi\nline */ c\n");
+        assert!(code[0].starts_with('a'));
+        assert!(code[0].ends_with('b'));
+        assert!(!code[0].contains("comment"));
+        assert!(!code[1].contains("multi"));
+        assert!(code[2].contains('c'));
+    }
+
+    #[test]
+    fn strings_are_blanked_with_escapes() {
+        let code = code_of(r#"let s = "HashMap \" still string"; let t = 1;"#);
+        assert!(!code[0].contains("HashMap"));
+        assert!(!code[0].contains("still"));
+        assert!(code[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let text = "let s = r#\"Instant::now() \" not closed \"#; let u = 2;\n";
+        let code = code_of(text);
+        assert!(!code[0].contains("Instant"));
+        assert!(code[0].contains("let u = 2;"));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let code = code_of("let c = 'x'; let nl = '\\n'; fn f<'a>(v: &'a str) {}");
+        assert!(!code[0].contains('x'), "{}", code[0]);
+        assert!(code[0].contains("fn f<'a>(v: &'a str)"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_is_not_raw_string() {
+        let code = code_of("let var = other\"x\";\n");
+        assert!(code[0].contains("let var = other"));
+        assert!(!code[0].contains('x'));
+    }
+
+    #[test]
+    fn pragma_is_extracted_with_rule_and_reason() {
+        let f = scan_source("t.rs", "x();\n// lint:allow(wall-clock): CLI timer\ny();\n");
+        assert_eq!(f.pragmas.len(), 1);
+        assert_eq!(f.pragmas[0].line, 2);
+        assert_eq!(f.pragmas[0].rule, "wall-clock");
+        assert_eq!(f.pragmas[0].reason, "CLI timer");
+    }
+
+    #[test]
+    fn trailing_pragma_on_code_line_and_missing_reason() {
+        let f = scan_source(
+            "t.rs",
+            "foo(); // lint:allow(thread-spawn): worker pool\nbar(); // lint:allow(sleep)\n",
+        );
+        assert_eq!(f.pragmas.len(), 2);
+        assert_eq!(f.pragmas[0].line, 1);
+        assert_eq!(f.pragmas[0].rule, "thread-spawn");
+        assert_eq!(f.pragmas[1].rule, "sleep");
+        assert_eq!(f.pragmas[1].reason, "");
+    }
+
+    #[test]
+    fn pragma_on_last_line_without_newline() {
+        let f = scan_source("t.rs", "x();\n// lint:allow(sleep): last line");
+        assert_eq!(f.pragmas.len(), 1);
+        assert_eq!(f.pragmas[0].line, 2);
+    }
+
+    #[test]
+    fn line_count_matches_source() {
+        let text = "a\nb\n\"two\nline string\"\nc\n";
+        let code = code_of(text);
+        assert_eq!(code.len(), text.split('\n').count());
+        assert!(code[4].contains('c'));
+    }
+}

@@ -5,7 +5,7 @@
 //! Lease bookkeeping plus the DORA (Discover/Offer/Request/Ack) timing
 //! model: four messages, i.e. two round trips through the tunnel.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// A granted lease.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -23,8 +23,8 @@ pub struct DhcpServer {
     pool_start: u8,
     pool_end: u8,
     next: u8,
-    by_mac: HashMap<String, Lease>,
-    taken: HashMap<String, String>, // ip -> mac
+    by_mac: BTreeMap<String, Lease>,
+    taken: BTreeMap<String, String>, // ip -> mac
 }
 
 impl DhcpServer {
@@ -36,8 +36,8 @@ impl DhcpServer {
             pool_start: start,
             pool_end: end,
             next: start,
-            by_mac: HashMap::new(),
-            taken: HashMap::new(),
+            by_mac: BTreeMap::new(),
+            taken: BTreeMap::new(),
         }
     }
 

@@ -1,6 +1,7 @@
 //! Utilization and goodput accounting for scenario runs.
 
 use crate::sim::clock::SimTime;
+use crate::util::json::{obj, Json};
 
 /// Aggregated counters from one scenario run.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -52,6 +53,27 @@ impl Metrics {
         }
         self.jobs_completed as f64 / self.jobs_submitted as f64
     }
+
+    /// Stable JSON rendering (fixed key order) — the replay-determinism
+    /// tests compare this byte-for-byte across same-seed runs.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("jobs_submitted", Json::Num(self.jobs_submitted as f64)),
+            ("jobs_completed", Json::Num(self.jobs_completed as f64)),
+            ("jobs_requeued", Json::Num(self.jobs_requeued as f64)),
+            ("jobs_killed", Json::Num(self.jobs_killed as f64)),
+            ("core_secs_useful", Json::Num(self.core_secs_useful)),
+            ("core_secs_wasted", Json::Num(self.core_secs_wasted)),
+            ("goodput", Json::Num(self.goodput())),
+            ("mean_wait_secs", Json::Num(self.mean_wait_secs())),
+            ("makespan_ns", Json::Num(self.makespan as f64)),
+            ("faults", Json::Num(self.faults as f64)),
+            ("watchdog_restarts", Json::Num(self.watchdog_restarts as f64)),
+            ("ep_jobs_completed", Json::Num(self.ep_jobs_completed as f64)),
+            ("ep_jobs_failed", Json::Num(self.ep_jobs_failed as f64)),
+            ("ep_pairs_executed", Json::Num(self.ep_pairs_executed as f64)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -77,5 +99,22 @@ mod tests {
         };
         assert!((m.mean_wait_secs() - 2.0).abs() < 1e-12);
         assert!((m.completion_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_rendering_is_stable_and_parseable() {
+        let m = Metrics {
+            jobs_submitted: 10,
+            jobs_completed: 8,
+            core_secs_useful: 80.0,
+            core_secs_wasted: 20.0,
+            ..Default::default()
+        };
+        let a = m.to_json().to_string();
+        let b = m.to_json().to_string();
+        assert_eq!(a, b, "same metrics render to identical bytes");
+        let doc = crate::util::json::Json::parse(&a).expect("metrics JSON parses");
+        assert_eq!(doc.get("jobs_completed").and_then(|j| j.as_u64()), Some(8));
+        assert_eq!(doc.get("goodput").and_then(|j| j.as_f64()), Some(0.8));
     }
 }

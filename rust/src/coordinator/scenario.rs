@@ -80,6 +80,22 @@ impl ScenarioReport {
         }
         total
     }
+
+    /// Stable JSON rendering: metrics plus run totals, fixed key order.
+    /// Same-seed runs must produce byte-identical output (the replay
+    /// determinism tests hold this line).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let total = self.ep_total();
+        obj(vec![
+            ("metrics", self.metrics.to_json()),
+            ("events_executed", Json::Num(self.events_executed as f64)),
+            ("final_time_ns", Json::Num(self.final_time as f64)),
+            ("ep_jobs_tallied", Json::Num(self.ep_tallies.len() as f64)),
+            ("ep_pairs_total", Json::Num(total.pairs as f64)),
+            ("ep_nacc_total", Json::Num(total.nacc as f64)),
+        ])
+    }
 }
 
 /// A finished scenario run: the report plus the system, engine, and event
@@ -577,7 +593,7 @@ fn apply_fault(
                     cl.powered = true;
                 }
                 let _ = w.g.connect_client(&c);
-                let node = w.g.nodes.get_mut(&c).unwrap();
+                let node = w.g.nodes.get_mut(&c).expect("powered client has a node");
                 if node.state == NodeState::Off {
                     node.advance(NodeState::PoweringOn, s.now());
                     begin_boot(s, w, &c);

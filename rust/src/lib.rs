@@ -17,6 +17,7 @@
 //!   payload as a JAX graph wrapping a Pallas kernel, AOT-lowered to HLO
 //!   text for the PJRT backend.
 
+pub mod analysis;
 pub mod bench;
 pub mod boot;
 pub mod config;

@@ -13,6 +13,7 @@
 //! gridlan ep --pairs N --threads 4       # ... on the multi-threaded backend
 //! gridlan ep --class S --rm [--procs N]  # ... through the resource manager
 //! gridlan trace [--sched fifo|backfill] [--faults X] [--ep-slices N] [--events FILE]
+//! gridlan lint [--format json|human] [--deny-warnings] [PATH...]
 //! ```
 //!
 //! (arg parsing is hand-rolled: the offline vendor set has no clap.)
@@ -73,6 +74,7 @@ fn run(args: &[String]) -> i32 {
         Some("demo") => demo_cmd(args),
         Some("ep") => ep_cmd(args),
         Some("trace") => trace_cmd(args),
+        Some("lint") => lint_cmd(&args[1..]),
         Some("help") | None => {
             print_help();
             0
@@ -277,6 +279,7 @@ fn ep_cmd(args: &[String]) -> i32 {
         eprintln!("note: {note}");
     }
 
+    // lint:allow(wall-clock): CLI-facing wall timer around the real EP run
     let t0 = std::time::Instant::now();
     let result = if args.iter().any(|a| a == "--rm") {
         // Through the resource manager: boot the Table-1 grid, scatter
@@ -399,6 +402,62 @@ fn trace_cmd(args: &[String]) -> i32 {
     0
 }
 
+/// `gridlan lint` — the in-tree determinism & invariant static-analysis
+/// pass (DESIGN.md §9).  Scans `rust/src` by default; explicit paths
+/// (files or directories) override.  Deny findings exit 1; warnings exit 1
+/// only under `--deny-warnings`.
+fn lint_cmd(args: &[String]) -> i32 {
+    let format = opt(args, "--format").unwrap_or_else(|| "human".into());
+    if format != "human" && format != "json" {
+        eprintln!("lint: unknown --format '{format}' (want human or json)");
+        return 2;
+    }
+    let deny_warnings = args.iter().any(|a| a == "--deny-warnings");
+    // Positional paths: everything that isn't a flag or a flag's value.
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut skip_next = false;
+    for a in args {
+        if skip_next {
+            skip_next = false;
+            continue;
+        }
+        match a.as_str() {
+            "--format" => skip_next = true,
+            "--deny-warnings" => {}
+            other if other.starts_with("--") => {
+                eprintln!("lint: unknown option '{other}'");
+                return 2;
+            }
+            path => roots.push(PathBuf::from(path)),
+        }
+    }
+    if roots.is_empty() {
+        let default = Path::new("rust/src");
+        if !default.is_dir() {
+            eprintln!(
+                "lint: no PATH given and ./rust/src not found — run from the repo root or \
+                 pass paths explicitly"
+            );
+            return 2;
+        }
+        roots.push(default.to_path_buf());
+    }
+    match gridlan::analysis::lint_paths(&roots) {
+        Ok(report) => {
+            if format == "json" {
+                println!("{}", report.to_json().to_pretty());
+            } else {
+                print!("{}", report.render_human());
+            }
+            report.exit_code(deny_warnings)
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
 fn print_help() {
     println!(
         "gridlan — local grid computing framework (CS.DC 2016 reproduction)
@@ -418,6 +477,9 @@ USAGE: gridlan <subcommand> [options]
   ep ... --threads N           force the multi-threaded backend (N OS threads)
   ep --class S --rm [--procs N]  ... as single-core jobs through the RM
   trace [--sched fifo|backfill] [--faults SCALE] [--ep-slices N] [--events FILE]
+  lint [PATH...]               determinism & invariant static analysis (default: rust/src)
+       [--format json|human]   machine- or compiler-style output
+       [--deny-warnings]       warn-tier findings also fail (what CI runs)
   help
 
 Bench names: boot_storm ep_throughput fault_recovery fig3_speedup mpi_latency

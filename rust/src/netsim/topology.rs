@@ -2,7 +2,7 @@
 
 use crate::sim::clock::{from_us_f64, SimTime};
 use crate::util::rng::SplitMix64;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 
 /// Index of a device in the network graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -76,7 +76,7 @@ impl PathDelayModel {
 pub struct Network {
     devices: Vec<Device>,
     adj: Vec<Vec<Edge>>,
-    by_name: HashMap<String, usize>,
+    by_name: BTreeMap<String, usize>,
     /// Per-path gaussian jitter sigma (µs) applied to one-way samples.
     pub jitter_sigma_us: f64,
 }

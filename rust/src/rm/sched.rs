@@ -303,6 +303,39 @@ mod tests {
     }
 
     #[test]
+    fn decisions_are_identical_across_repeated_runs() {
+        // Regression for the deterministic-tie-break hazard: scheduler
+        // decisions (and the accounting around them) must be a pure
+        // function of the inputs — re-running the same select many times,
+        // with node capacities that force multi-node ties, must yield the
+        // exact same decision vector every time.  Unordered maps in the
+        // path would let hasher state leak into allocation order.
+        let running = vec![RunningJob {
+            id: JobId(99),
+            allocation: Allocation { cores: [("n02".to_string(), 4u32)].into_iter().collect() },
+            expected_end: 500 * DUR_SEC,
+        }];
+        // Ties everywhere: three 8-core nodes, jobs that fit several ways.
+        let f = free(&[("n03", 8), ("n01", 8), ("n02", 4)]);
+        let pending = vec![pj(1, 2, 4, 300), pj(2, 1, 8, 800), pj(3, 1, 4, 100), pj(4, 1, 2, 50)];
+        for sched in [&FifoScheduler as &dyn Scheduler, &BackfillScheduler] {
+            let first = sched.select(&pending, &f, &running, 0);
+            for _ in 0..50 {
+                let again = sched.select(&pending, &f, &running, 0);
+                assert_eq!(first, again, "{} decisions drifted across runs", sched.name());
+            }
+            // And the placement itself is name-deterministic: every
+            // allocation's node list is sorted (BTreeMap order).
+            for (_, alloc) in &first {
+                let nodes: Vec<&String> = alloc.cores.keys().collect();
+                let mut sorted = nodes.clone();
+                sorted.sort();
+                assert_eq!(nodes, sorted);
+            }
+        }
+    }
+
+    #[test]
     fn prop_no_policy_overallocates() {
         prop::check(200, |g| {
             let n_nodes = g.usize_in(1..5);
@@ -338,8 +371,10 @@ mod tests {
                 .collect();
             for sched in [&FifoScheduler as &dyn Scheduler, &BackfillScheduler] {
                 let d = sched.select(&pending, &f, &running, 0);
-                // Sum of grants per node <= free capacity.
-                let mut used: std::collections::HashMap<&str, u32> = Default::default();
+                // Sum of grants per node <= free capacity.  BTreeMap: the
+                // accounting (and any diagnostic it prints) must not vary
+                // with hasher state.
+                let mut used: std::collections::BTreeMap<&str, u32> = Default::default();
                 for (_, a) in &d {
                     for (n, c) in &a.cores {
                         *used.entry(n.as_str()).or_insert(0) += c;
@@ -360,7 +395,7 @@ mod tests {
                 // The no-head-delay invariant: whatever backfilled must not
                 // push the blocked head job's earliest possible start out.
                 if sched.name() == "backfill" {
-                    let started: std::collections::HashSet<u64> =
+                    let started: std::collections::BTreeSet<u64> =
                         d.iter().map(|(j, _)| j.0).collect();
                     let Some(head_pos) = pending.iter().position(|p| !started.contains(&p.id.0))
                     else {

@@ -6,7 +6,7 @@
 
 use super::clock::SimTime;
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BTreeSet, BinaryHeap};
 
 /// Handle for a scheduled event (usable for cancellation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -44,7 +44,9 @@ pub struct Simulator<W> {
     now: SimTime,
     queue: BinaryHeap<Reverse<Entry<W>>>,
     next_seq: u64,
-    cancelled: HashSet<EventId>,
+    /// Ordered set: the cancellation table is core DES state and must
+    /// never introduce hasher-dependent behavior.
+    cancelled: BTreeSet<EventId>,
     executed: u64,
 }
 
@@ -60,7 +62,7 @@ impl<W> Simulator<W> {
             now: 0,
             queue: BinaryHeap::new(),
             next_seq: 0,
-            cancelled: HashSet::new(),
+            cancelled: BTreeSet::new(),
             executed: 0,
         }
     }

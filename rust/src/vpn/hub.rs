@@ -11,7 +11,7 @@ use super::tunnel::{TunnelCost, TunnelEndpoint};
 use crate::netsim::packet::Packet;
 use crate::netsim::topology::{DeviceId, Network};
 use crate::util::rng::SplitMix64;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Server-side forwarding cost between two tunnels (routing table lookup +
 /// re-encrypt), µs.
@@ -21,10 +21,10 @@ pub const HUB_FORWARD_US: f64 = 25.0;
 pub struct VpnHub {
     pub server: DeviceId,
     pki: Pki,
-    tunnels: HashMap<String, TunnelEndpoint>,
+    tunnels: BTreeMap<String, TunnelEndpoint>,
     /// Stable per-client address assignment (clients that reconnect get
     /// their old address back, like DHCP lease affinity).
-    addrs: HashMap<String, String>,
+    addrs: BTreeMap<String, String>,
     next_addr: u32,
 }
 
@@ -33,8 +33,8 @@ impl VpnHub {
         Self {
             server,
             pki: Pki::new(pki_seed),
-            tunnels: HashMap::new(),
-            addrs: HashMap::new(),
+            tunnels: BTreeMap::new(),
+            addrs: BTreeMap::new(),
             next_addr: 2,
         }
     }

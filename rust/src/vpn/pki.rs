@@ -9,7 +9,7 @@
 //! CA secret, and revocation is by serial.
 
 use crate::util::sha256::hmac_sha256;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// A key issued to one client.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -24,8 +24,10 @@ pub struct ClientKey {
 pub struct Pki {
     ca_secret: [u8; 32],
     next_serial: u64,
-    issued: HashMap<String, u64>,
-    revoked: HashSet<u64>,
+    // Ordered maps: PKI state is sim-reachable (fault storms reconnect
+    // through it), so iteration order must not depend on hasher state.
+    issued: BTreeMap<String, u64>,
+    revoked: BTreeSet<u64>,
 }
 
 impl Pki {
@@ -37,7 +39,12 @@ impl Pki {
             s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
             chunk.copy_from_slice(&s.to_le_bytes());
         }
-        Self { ca_secret: secret, next_serial: 1, issued: HashMap::new(), revoked: HashSet::new() }
+        Self {
+            ca_secret: secret,
+            next_serial: 1,
+            issued: BTreeMap::new(),
+            revoked: BTreeSet::new(),
+        }
     }
 
     fn tag_for(&self, client: &str, serial: u64) -> [u8; 32] {

@@ -1,0 +1,200 @@
+//! Integration tests for `gridlan lint` (the determinism & invariant
+//! static-analysis pass): the swept tree must be clean under
+//! `--deny-warnings` semantics, every rule must fire on a seeded
+//! violation fixture, and the pragma lifecycle (suppress / stale /
+//! reasonless) must behave per DESIGN.md §9.
+//!
+//! Fixture sources are written to a per-test temp directory so rule
+//! allowlists (matched by path suffix) cannot accidentally cover them.
+
+use gridlan::analysis::lint_paths;
+use std::path::{Path, PathBuf};
+
+/// The crate's real source tree (what CI lints).
+fn src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust").join("src")
+}
+
+/// A unique scratch dir for one test; call `cleanup` when done.
+fn fixture_dir(test: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("gridlan_lint_{}_{test}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create fixture dir");
+    dir
+}
+
+fn write(dir: &Path, name: &str, contents: &str) {
+    std::fs::write(dir.join(name), contents).expect("write fixture");
+}
+
+fn rules_fired(dir: &Path) -> Vec<(String, String)> {
+    let report = lint_paths(&[dir.to_path_buf()]).expect("lint runs");
+    report
+        .findings
+        .iter()
+        .map(|f| {
+            let file = Path::new(&f.path)
+                .file_name()
+                .map(|n| n.to_string_lossy().to_string())
+                .unwrap_or_default();
+            (file, f.rule.to_string())
+        })
+        .collect()
+}
+
+#[test]
+fn swept_tree_is_clean_even_with_deny_warnings() {
+    let report = lint_paths(&[src_root()]).expect("lint runs on the real tree");
+    assert!(report.files_scanned > 30, "walked the whole tree: {}", report.files_scanned);
+    assert_eq!(
+        report.exit_code(true),
+        0,
+        "the swept tree must be violation-free:\n{}",
+        report.render_human()
+    );
+}
+
+#[test]
+fn every_rule_fires_on_its_seeded_fixture() {
+    let dir = fixture_dir("seeded");
+    write(&dir, "wall.rs", "fn f() { let t = std::time::Instant::now(); }\n");
+    write(&dir, "unordered.rs", "use std::collections::HashMap;\n");
+    write(&dir, "spawn.rs", "fn f() { std::thread::spawn(|| {}); }\n");
+    write(&dir, "random.rs", "fn f() -> u64 { rand::thread_rng().gen() }\n");
+    write(&dir, "sleep.rs", "fn f(d: core::time::Duration) { std::thread::sleep(d); }\n");
+    write(&dir, "exit.rs", "fn f() { std::process::exit(3); }\n");
+    write(
+        &dir,
+        "handler.rs",
+        "fn f() {\n    sim.schedule_in(5, move |s, w| {\n        w.nodes.get_mut(&c).unwrap();\n    });\n}\n",
+    );
+    write(&dir, "stale.rs", "// lint:allow(wall-clock): nothing here uses it\nfn f() {}\n");
+
+    let fired = rules_fired(&dir);
+    for (file, rule) in [
+        ("wall.rs", "wall-clock"),
+        ("unordered.rs", "unordered-collections"),
+        ("spawn.rs", "thread-spawn"),
+        ("random.rs", "ambient-random"),
+        ("sleep.rs", "sleep"),
+        ("exit.rs", "process-exit"),
+        ("handler.rs", "panic-in-handler"),
+        ("stale.rs", "stale-pragma"),
+    ] {
+        assert!(
+            fired.iter().any(|(f, r)| f == file && r == rule),
+            "expected {rule} to fire on {file}; got {fired:?}"
+        );
+    }
+
+    // And the CLI contract: a tree with deny findings exits nonzero.
+    let report = lint_paths(&[dir.clone()]).expect("lint runs");
+    assert_eq!(report.exit_code(false), 1, "seeded violations must fail the gate");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn clean_fixture_stays_silent() {
+    let dir = fixture_dir("clean");
+    write(
+        &dir,
+        "clean.rs",
+        concat!(
+            "//! A well-behaved module: ordered maps, no ambient time.\n",
+            "use std::collections::{BTreeMap, BTreeSet};\n",
+            "pub fn f(m: &BTreeMap<String, u32>, s: &BTreeSet<u64>) -> usize {\n",
+            "    m.len() + s.len()\n",
+            "}\n",
+            "// Mentions of Instant::now or thread::spawn in comments are fine.\n",
+            "const DOC: &str = \"HashMap in a string is fine too\";\n",
+        ),
+    );
+    let report = lint_paths(&[dir.clone()]).expect("lint runs");
+    assert!(
+        report.findings.is_empty(),
+        "clean fixture produced findings:\n{}",
+        report.render_human()
+    );
+    assert_eq!(report.exit_code(true), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pragma_lifecycle_suppresses_stales_and_requires_reasons() {
+    let dir = fixture_dir("pragma");
+    // A pragma with a reason suppresses the finding on its own line or
+    // the next line — no findings at all from this file.
+    write(
+        &dir,
+        "suppressed.rs",
+        concat!(
+            "// lint:allow(wall-clock): fixture exercises the suppression path\n",
+            "fn f() { let t = std::time::Instant::now(); }\n",
+        ),
+    );
+    // A pragma that suppresses nothing is itself a deny finding.
+    write(&dir, "stale.rs", "// lint:allow(sleep): left behind by a refactor\nfn f() {}\n");
+    // A reasonless pragma never suppresses: the violation AND the pragma
+    // are both reported.
+    write(
+        &dir,
+        "reasonless.rs",
+        "fn f() { let t = std::time::Instant::now(); } // lint:allow(wall-clock)\n",
+    );
+
+    let fired = rules_fired(&dir);
+    assert!(
+        !fired.iter().any(|(f, _)| f == "suppressed.rs"),
+        "reasoned pragma must fully suppress: {fired:?}"
+    );
+    assert!(
+        fired.iter().any(|(f, r)| f == "stale.rs" && r == "stale-pragma"),
+        "unused pragma must be flagged stale: {fired:?}"
+    );
+    assert!(
+        fired.iter().any(|(f, r)| f == "reasonless.rs" && r == "wall-clock"),
+        "reasonless pragma must not suppress: {fired:?}"
+    );
+    assert!(
+        fired.iter().any(|(f, r)| f == "reasonless.rs" && r == "stale-pragma"),
+        "reasonless pragma is itself a finding: {fired:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn allowlisted_paths_are_exempt_only_for_their_rule() {
+    let dir = fixture_dir("allowlist");
+    let rt = dir.join("runtime");
+    std::fs::create_dir_all(&rt).expect("mkdir runtime");
+    // runtime/threaded.rs may spawn threads and read the wall clock (it
+    // IS the host-side backend) but still may not use unordered maps.
+    std::fs::write(
+        rt.join("threaded.rs"),
+        concat!(
+            "fn f() { std::thread::scope(|s| {}); }\n",
+            "fn g() { let t = std::time::Instant::now(); }\n",
+            "use std::collections::HashMap;\n",
+        ),
+    )
+    .expect("write fixture");
+    let fired = rules_fired(&dir);
+    assert!(
+        !fired.iter().any(|(_, r)| r == "thread-spawn" || r == "wall-clock"),
+        "allowlisted rules must stay quiet in runtime/threaded.rs: {fired:?}"
+    );
+    assert!(
+        fired.iter().any(|(_, r)| r == "unordered-collections"),
+        "non-allowlisted rules still apply: {fired:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lint_report_is_deterministic_across_runs() {
+    let a = lint_paths(&[src_root()]).expect("first run");
+    let b = lint_paths(&[src_root()]).expect("second run");
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(a.render_human(), b.render_human());
+}

@@ -57,6 +57,49 @@ fn same_seed_runs_emit_byte_identical_event_logs() {
     assert_eq!(ma, mb, "same-seed metrics must match");
 }
 
+/// One seeded fault-storm run (lab fault rates scaled 5x): returns the
+/// JSONL event log, the rendered report JSON, and the fault count.
+fn run_storm() -> (String, String, u64) {
+    let scenario = Scenario {
+        horizon: 6 * 3600 * DUR_SEC,
+        faults: FaultPlan::lab_default().scaled(5.0),
+        ..Default::default()
+    };
+    let run = run_scenario_logged(
+        Gridlan::build(Config::table1()),
+        trace(),
+        &scenario,
+        EpEngine::scalar(),
+        ScenarioLogger::memory(),
+    );
+    let faults = run.report.metrics.faults;
+    (run.logger.to_jsonl(), run.report.to_json().to_pretty(), faults)
+}
+
+#[test]
+fn fault_storm_replay_is_byte_identical() {
+    // The determinism contract under stress: a heavy fault storm — power
+    // cycles, VPN drops, VM crashes, watchdog restarts, requeues — run
+    // twice from the same seed must reproduce the exact event log AND the
+    // exact report JSON, byte for byte.  This is the invariant the whole
+    // observability stack (BENCH baselines, regression gate, event
+    // rollups) rests on, and what `gridlan lint` exists to protect.
+    let (log_a, rep_a, faults_a) = run_storm();
+    let (log_b, rep_b, faults_b) = run_storm();
+    assert!(faults_a > 0, "the storm must actually inject faults");
+    assert_eq!(faults_a, faults_b);
+    assert_eq!(log_a, log_b, "storm event logs must be byte-identical");
+    assert_eq!(rep_a, rep_b, "storm report JSON must be byte-identical");
+    // The report JSON is well-formed and carries the metrics block.
+    let doc = Json::parse(&rep_a).expect("report JSON parses");
+    let metrics = doc.get("metrics").expect("metrics block");
+    assert_eq!(
+        metrics.get("faults").and_then(Json::as_u64),
+        Some(faults_a),
+        "report metrics mirror the live counters"
+    );
+}
+
 #[test]
 fn event_log_round_trips_and_rolls_up_consistently() {
     let (log, metrics) = run_logged();
