@@ -30,6 +30,7 @@ pub mod obs;
 pub mod perf;
 pub mod rm;
 pub mod runtime;
+pub mod scenario_dsl;
 pub mod sim;
 pub mod util;
 pub mod vm;

@@ -13,6 +13,8 @@
 //! gridlan ep --pairs N --threads 4       # ... on the multi-threaded backend
 //! gridlan ep --class S --rm [--procs N]  # ... through the resource manager
 //! gridlan trace [--sched fifo|backfill] [--faults X] [--ep-slices N] [--events FILE]
+//! gridlan scenario <file.json>           # run one declarative chaos scenario
+//! gridlan scenario --corpus scenarios/   # sweep the committed chaos corpus
 //! gridlan lint [--format json|human] [--deny-warnings] [PATH...]
 //! ```
 //!
@@ -74,6 +76,7 @@ fn run(args: &[String]) -> i32 {
         Some("demo") => demo_cmd(args),
         Some("ep") => ep_cmd(args),
         Some("trace") => trace_cmd(args),
+        Some("scenario") => scenario_cmd(&args[1..]),
         Some("lint") => lint_cmd(&args[1..]),
         Some("help") | None => {
             print_help();
@@ -402,6 +405,111 @@ fn trace_cmd(args: &[String]) -> i32 {
     0
 }
 
+/// `gridlan scenario` — run one declarative scenario file, or sweep a
+/// corpus directory (`--corpus`) checking every file's `expect` block.
+/// Exit codes: 2 = usage/parse error, 1 = a run failed its expectations
+/// (corpus mode only under `--deny`), 0 = everything passed.
+fn scenario_cmd(args: &[String]) -> i32 {
+    if let Some(dir) = opt(args, "--corpus") {
+        return scenario_corpus_cmd(Path::new(&dir), args);
+    }
+    let Some(path) = args.first().filter(|a| !a.starts_with("--")) else {
+        eprintln!("usage: gridlan scenario <file.json> [--seed N] [--events FILE] [--report]");
+        eprintln!("       gridlan scenario --corpus DIR [--deny] [--events-dir DIR]");
+        return 2;
+    };
+    let mut spec = match gridlan::scenario_dsl::load_file(Path::new(path)) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("scenario: {e}");
+            return 2;
+        }
+    };
+    if let Some(raw) = opt(args, "--seed") {
+        match raw.parse::<u64>() {
+            Ok(s) => spec.seed = s,
+            Err(_) => {
+                eprintln!("scenario: invalid --seed '{raw}' (want an integer)");
+                return 2;
+            }
+        }
+    }
+    let out = gridlan::scenario_dsl::run_spec(&spec);
+    if let Some(path) = opt(args, "--events") {
+        if let Err(e) = std::fs::write(&path, &out.events_jsonl) {
+            eprintln!("scenario: cannot write {path}: {e}");
+            return 1;
+        }
+        println!("wrote {path}");
+    }
+    print!("{}", out.render_summary());
+    if args.iter().any(|a| a == "--report") {
+        print!("{}", out.report_json);
+    }
+    if out.passed() {
+        0
+    } else {
+        1
+    }
+}
+
+/// Sweep every `*.json` under a corpus dir (the chaos lab).  Parse
+/// errors are always fatal; failed `expect` blocks fail the sweep only
+/// under `--deny`.  `--events-dir` writes `<stem>.events.jsonl` +
+/// `<stem>.report.json` per scenario (the CI artifact set).
+fn scenario_corpus_cmd(dir: &Path, args: &[String]) -> i32 {
+    let deny = args.iter().any(|a| a == "--deny");
+    let events_dir = opt(args, "--events-dir").map(PathBuf::from);
+    if let Some(d) = &events_dir {
+        if let Err(e) = std::fs::create_dir_all(d) {
+            eprintln!("scenario: cannot create {}: {e}", d.display());
+            return 1;
+        }
+    }
+    let files = match gridlan::scenario_dsl::corpus_files(dir) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("scenario: {e}");
+            return 1;
+        }
+    };
+    println!("chaos lab: {} scenario file(s) under {}", files.len(), dir.display());
+    let mut failed = 0usize;
+    for path in &files {
+        let out = match gridlan::scenario_dsl::run_file(path) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("scenario: {e}");
+                return 1;
+            }
+        };
+        if !out.passed() {
+            failed += 1;
+        }
+        print!("{}", out.render_summary());
+        if let Some(d) = &events_dir {
+            let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("scenario");
+            let write = std::fs::write(d.join(format!("{stem}.events.jsonl")), &out.events_jsonl)
+                .and_then(|_| {
+                    std::fs::write(d.join(format!("{stem}.report.json")), &out.report_json)
+                });
+            if let Err(e) = write {
+                eprintln!("scenario: cannot write artifacts for {stem}: {e}");
+                return 1;
+            }
+        }
+    }
+    if failed > 0 {
+        eprintln!("chaos lab: {failed}/{} scenario(s) FAILED their expect block", files.len());
+        if deny {
+            return 1;
+        }
+    } else {
+        println!("chaos lab: all {} scenario(s) passed", files.len());
+    }
+    0
+}
+
 /// `gridlan lint` — the in-tree determinism & invariant static-analysis
 /// pass (DESIGN.md §9).  Scans `rust/src` by default; explicit paths
 /// (files or directories) override.  Deny findings exit 1; warnings exit 1
@@ -477,6 +585,12 @@ USAGE: gridlan <subcommand> [options]
   ep ... --threads N           force the multi-threaded backend (N OS threads)
   ep --class S --rm [--procs N]  ... as single-core jobs through the RM
   trace [--sched fifo|backfill] [--faults SCALE] [--ep-slices N] [--events FILE]
+  scenario <file.json>         run a declarative chaos scenario (see scenarios/)
+       [--seed N]              override the file's seed  [--events FILE] JSONL log
+       [--report]              print the scenario report JSON
+  scenario --corpus DIR        sweep every *.json in DIR, checking expect blocks
+       [--deny]                exit 1 if any expect block fails (what CI runs)
+       [--events-dir DIR]      write <stem>.events.jsonl + <stem>.report.json each
   lint [PATH...]               determinism & invariant static analysis (default: rust/src)
        [--format json|human]   machine- or compiler-style output
        [--deny-warnings]       warn-tier findings also fail (what CI runs)

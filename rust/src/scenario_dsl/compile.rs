@@ -1,0 +1,324 @@
+//! Lower a parsed [`ScenarioSpec`] onto the existing run machinery:
+//! a [`Config`] (the grid), a trace (`Vec<TraceJob>`), and a
+//! [`Scenario`] (horizon + fault plan + scripted fault events).
+//!
+//! Everything here is a pure function of the spec — no clocks, no
+//! ambient randomness.  Seeded fault placement derives one
+//! [`SplitMix64`] per event from `seed + (block << 32) + idx` (the
+//! QSL-style mapping), so inserting a new fault block never perturbs
+//! the placement of the blocks after it.
+
+use crate::config::{ClientConfig, Config};
+use crate::coordinator::scenario::Scenario;
+use crate::host::client::ClientOs;
+use crate::host::faults::{FaultEvent, FaultPlan};
+use crate::rm::alloc::ResourceRequest;
+use crate::scenario_dsl::expect::Expect;
+use crate::scenario_dsl::spec::{
+    EngineSpec, FaultTiming, NodesSpec, ScenarioSpec, WorkloadSpec,
+};
+use crate::util::rng::SplitMix64;
+use crate::vm::cpu::CpuModel;
+use crate::workload::ep::EpSlice;
+use crate::workload::trace::{JobPayload, TraceGenerator, TraceJob};
+
+/// A scenario lowered to runnable parts.  `run` order is deterministic:
+/// the trace is stable-sorted by submit time (file order breaks ties)
+/// and scripted faults are stable-sorted by fire time.
+#[derive(Debug, Clone)]
+pub struct CompiledScenario {
+    pub name: String,
+    pub seed: u64,
+    pub config: Config,
+    /// Boot every client to Online before t=0 (skip the boot storm).
+    pub prebooted: bool,
+    pub engine: EngineSpec,
+    pub trace: Vec<TraceJob>,
+    pub scenario: Scenario,
+    /// Declared EP `(pair_offset, pair_count)` spans, one per `ep`
+    /// workload block — the oracle input for `expect.ep_tally_exact`.
+    pub ep_ranges: Vec<(u64, u64)>,
+    pub expect: Expect,
+}
+
+impl ScenarioSpec {
+    pub fn compile(&self) -> CompiledScenario {
+        let mut config = build_config(self);
+        config.seed = self.seed;
+        config.sched = self.sched;
+
+        let mut trace = Vec::new();
+        let mut ep_ranges = Vec::new();
+        for (bidx, w) in self.workloads.iter().enumerate() {
+            match w {
+                WorkloadSpec::Trace {
+                    count,
+                    start,
+                    every,
+                    nodes,
+                    ppn,
+                    compute,
+                    walltime,
+                    owner,
+                } => {
+                    for i in 0..*count {
+                        trace.push(TraceJob {
+                            at: start.saturating_add(every.saturating_mul(i as u64)),
+                            owner: owner.clone(),
+                            request: ResourceRequest { nodes: *nodes, ppn: *ppn },
+                            compute: *compute,
+                            walltime: *walltime,
+                            payload: JobPayload::Synthetic,
+                        });
+                    }
+                }
+                WorkloadSpec::Ep { slices, pair_offset, pairs_per_slice, start, every, walltime } => {
+                    for i in 0..*slices {
+                        let slice = EpSlice {
+                            proc: i,
+                            pair_offset: pair_offset + i as u64 * pairs_per_slice,
+                            pair_count: *pairs_per_slice,
+                        };
+                        trace.push(slice.trace_job(
+                            start.saturating_add(every.saturating_mul(i as u64)),
+                            *walltime,
+                        ));
+                    }
+                    ep_ranges.push((*pair_offset, *slices as u64 * *pairs_per_slice));
+                }
+                WorkloadSpec::Arrivals { users, horizon, mean_gap, wide_fraction } => {
+                    let gen = TraceGenerator {
+                        users: *users,
+                        horizon: horizon.unwrap_or(self.horizon),
+                        mean_gap: *mean_gap,
+                        wide_fraction: *wide_fraction,
+                    };
+                    // Same seed derivation the `gridlan trace` CLI uses,
+                    // salted per block so two arrivals blocks differ.
+                    let mut rng =
+                        SplitMix64::new((self.seed ^ 0xABCD).wrapping_add((bidx as u64) << 32));
+                    trace.extend(gen.generate(&mut rng));
+                }
+            }
+        }
+        // Stable: ties keep workload-block file order.
+        trace.sort_by_key(|j| j.at);
+
+        let scenario = Scenario {
+            horizon: self.horizon,
+            sched_period: self.sched_period,
+            faults: self.storm.as_ref().map(|s| s.to_plan()).unwrap_or_else(FaultPlan::none),
+            scripted_faults: expand_faults(self),
+        };
+
+        CompiledScenario {
+            name: self.name.clone(),
+            seed: self.seed,
+            config,
+            prebooted: self.nodes.prebooted(),
+            engine: self.engine,
+            trace,
+            scenario,
+            ep_ranges,
+            expect: self.expect.clone(),
+        }
+    }
+}
+
+fn build_config(spec: &ScenarioSpec) -> Config {
+    match &spec.nodes {
+        NodesSpec::Table1 { .. } => Config::table1(),
+        NodesSpec::Custom { cores, switch_hops, stack_us, link_mbps, .. } => {
+            let mut cfg = Config::table1();
+            cfg.clients.clear();
+            for name in spec.nodes.names() {
+                cfg.clients.push(ClientConfig {
+                    cpu: CpuModel {
+                        name: format!("custom-{name}"),
+                        cores: *cores,
+                        base_ghz: 3.0,
+                        max_turbo_ghz: 3.4,
+                        all_core_ghz: 3.1,
+                        pairs_per_cycle: 0.0045,
+                    },
+                    name,
+                    os: ClientOs::Linux,
+                    hypervisor: None,
+                    switch_hops: *switch_hops,
+                    stack_us: *stack_us,
+                    link_mbps: *link_mbps,
+                });
+            }
+            cfg
+        }
+    }
+}
+
+/// Expand every declarative fault block into concrete [`FaultEvent`]s,
+/// clip to the horizon (mirroring [`FaultPlan::generate`]), and
+/// stable-sort by fire time.
+fn expand_faults(spec: &ScenarioSpec) -> Vec<FaultEvent> {
+    let mut out = Vec::new();
+    for (bidx, f) in spec.faults.iter().enumerate() {
+        match f.timing {
+            FaultTiming::At(at) => {
+                for t in &f.targets {
+                    out.push(FaultEvent { at, client: t.clone(), kind: f.kind, outage: f.outage });
+                }
+            }
+            FaultTiming::Every { start, every, count } => {
+                for i in 0..count {
+                    let at = start.saturating_add(every.saturating_mul(i as u64));
+                    for t in &f.targets {
+                        out.push(FaultEvent {
+                            at,
+                            client: t.clone(),
+                            kind: f.kind,
+                            outage: f.outage,
+                        });
+                    }
+                }
+            }
+            FaultTiming::Seeded { count, window: (lo, hi) } => {
+                for i in 0..count {
+                    // One generator per event: time draw, then target draw.
+                    let mut rng = SplitMix64::new(
+                        spec.seed.wrapping_add((bidx as u64) << 32).wrapping_add(i as u64),
+                    );
+                    let at = lo + (rng.next_f64() * (hi - lo) as f64) as u64;
+                    let t = &f.targets[rng.gen_range(f.targets.len() as u64) as usize];
+                    out.push(FaultEvent { at, client: t.clone(), kind: f.kind, outage: f.outage });
+                }
+            }
+        }
+    }
+    out.retain(|e| e.at < spec.horizon);
+    out.sort_by_key(|e| e.at);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedPolicy;
+    use crate::host::faults::FaultKind;
+    use crate::sim::clock::DUR_SEC;
+
+    fn spec(body: &str) -> ScenarioSpec {
+        ScenarioSpec::parse(body).expect("test spec parses")
+    }
+
+    #[test]
+    fn every_timing_expands_per_target_and_sorts() {
+        let c = spec(
+            r#"{"seed": 1, "horizon_secs": 7200, "faults": [
+                {"kind": "net_drop", "every_secs": 900, "count": 3, "targets": ["n01", "n02"]},
+                {"kind": "vm_crash", "at_secs": 100, "target": "n04", "outage_secs": 5}
+            ]}"#,
+        )
+        .compile();
+        let f = &c.scenario.scripted_faults;
+        assert_eq!(f.len(), 3 * 2 + 1);
+        assert_eq!(f[0].at, 100 * DUR_SEC);
+        assert_eq!(f[0].kind, FaultKind::VmCrash);
+        assert_eq!(f[0].outage, 5 * DUR_SEC);
+        // 900s block: pairs (n01, n02) at 900, 1800, 2700 — stable order.
+        assert_eq!(f[1].at, 900 * DUR_SEC);
+        assert_eq!(f[1].client, "n01");
+        assert_eq!(f[2].client, "n02");
+        assert!(f.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn events_at_or_past_the_horizon_are_clipped() {
+        let c = spec(
+            r#"{"seed": 1, "horizon_secs": 1800, "faults": [
+                {"kind": "power_off", "every_secs": 900, "count": 10, "target": "n01"}
+            ]}"#,
+        )
+        .compile();
+        // Only the t=900s shot survives (t=1800s == horizon is out).
+        assert_eq!(c.scenario.scripted_faults.len(), 1);
+        assert_eq!(c.scenario.scripted_faults[0].at, 900 * DUR_SEC);
+    }
+
+    #[test]
+    fn seeded_placement_is_deterministic_and_in_window() {
+        let src = r#"{"seed": 42, "horizon_secs": 14400, "faults": [
+            {"kind": "vm_crash", "seeded": 6, "window_secs": [600, 5400]}
+        ]}"#;
+        let a = spec(src).compile();
+        let b = spec(src).compile();
+        assert_eq!(a.scenario.scripted_faults, b.scenario.scripted_faults);
+        assert_eq!(a.scenario.scripted_faults.len(), 6);
+        for e in &a.scenario.scripted_faults {
+            assert!(e.at >= 600 * DUR_SEC && e.at < 5400 * DUR_SEC, "{} out of window", e.at);
+            assert!(["n01", "n02", "n03", "n04"].contains(&e.client.as_str()));
+        }
+        // A different seed must move the salvo.
+        let c = spec(&src.replace("42", "43")).compile();
+        assert_ne!(a.scenario.scripted_faults, c.scenario.scripted_faults);
+    }
+
+    #[test]
+    fn trace_blocks_compile_sorted_with_ep_ranges() {
+        let c = spec(
+            r#"{"seed": 9, "sched": "backfill", "workloads": [
+                {"kind": "trace", "count": 3, "start_secs": 10, "every_secs": 10,
+                 "compute_secs": 60, "owner": "alice"},
+                {"kind": "ep", "slices": 4, "pair_offset": 1000, "pairs_per_slice": 500,
+                 "start_secs": 5, "every_secs": 20}
+            ]}"#,
+        )
+        .compile();
+        assert_eq!(c.config.seed, 9);
+        assert_eq!(c.config.sched, SchedPolicy::Backfill);
+        assert_eq!(c.trace.len(), 7);
+        assert!(c.trace.windows(2).all(|w| w[0].at <= w[1].at), "trace sorted by at");
+        assert_eq!(c.trace[0].at, 5 * DUR_SEC);
+        match c.trace[0].payload {
+            JobPayload::Ep { offset, count } => assert_eq!((offset, count), (1000, 500)),
+            other => panic!("expected EP payload, got {other:?}"),
+        }
+        // Consecutive slices tile the declared range.
+        let offsets: Vec<u64> = c
+            .trace
+            .iter()
+            .filter_map(|j| match j.payload {
+                JobPayload::Ep { offset, .. } => Some(offset),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(offsets, vec![1000, 1500, 2000, 2500]);
+        assert_eq!(c.ep_ranges, vec![(1000, 2000)]);
+        assert_eq!(c.trace.last().unwrap().owner, "alice");
+    }
+
+    #[test]
+    fn custom_grid_builds_a_homogeneous_config() {
+        let c = spec(
+            r#"{"seed": 3, "nodes": {"count": 16, "cores": 4, "prebooted": true,
+                "switch_hops": 1, "stack_us": 90, "link_mbps": 1000}}"#,
+        )
+        .compile();
+        assert!(c.prebooted);
+        assert_eq!(c.config.clients.len(), 16);
+        assert_eq!(c.config.clients[0].name, "n01");
+        assert_eq!(c.config.clients[15].name, "n16");
+        assert!(c.config.clients.iter().all(|cl| cl.cpu.cores == 4));
+        assert_eq!(c.config.clients[0].switch_hops, 1);
+    }
+
+    #[test]
+    fn arrivals_blocks_are_seed_stable() {
+        let src = r#"{"seed": 77, "workloads": [
+            {"kind": "arrivals", "users": 5, "horizon_secs": 28800}
+        ]}"#;
+        let a = spec(src).compile();
+        let b = spec(src).compile();
+        assert_eq!(a.trace, b.trace);
+        assert!(!a.trace.is_empty());
+        let c = spec(&src.replace("77", "78")).compile();
+        assert_ne!(a.trace, c.trace, "a different seed must move the arrivals");
+    }
+}

@@ -1,0 +1,326 @@
+//! `expect` blocks: invariant assertions a scenario run must satisfy.
+//!
+//! An expectation is data in the scenario file, checked against the
+//! post-run [`Metrics`] and merged EP tallies.  `ep_tally_exact` is the
+//! strongest check: it recomputes every declared pair range through the
+//! scalar oracle ([`ep_scalar`]) and demands the merged scenario tally
+//! match it — counters exactly, accumulator sums to 1e-7 absolute — the
+//! same contract the in-code lifecycle tests enforce.
+
+use crate::coordinator::metrics::Metrics;
+use crate::scenario_dsl::spec::{check_keys, get_bool, get_count, get_num, join, DslError};
+use crate::sim::clock::to_secs_f64;
+use crate::util::json::Json;
+use crate::workload::ep::{ep_scalar, EpTally};
+
+/// Absolute tolerance for the floating EP accumulators (`sx`, `sy`);
+/// counters (`nacc`, `q`, `pairs`) must match exactly.
+const EP_SUM_TOL: f64 = 1e-7;
+
+/// Declarative post-run assertions (all optional; empty = report-only).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Expect {
+    /// Every submitted job reached a terminal state (completed, or
+    /// rejected at qsub and counted killed) — nothing left queued,
+    /// running, or held at the end of the drain.
+    pub all_jobs_terminal: bool,
+    /// Exact completed-job count.
+    pub jobs_completed: Option<u64>,
+    pub min_completed: Option<u64>,
+    pub min_requeued: Option<u64>,
+    pub min_faults: Option<u64>,
+    pub min_watchdog_restarts: Option<u64>,
+    /// Merged EP tally must equal the scalar oracle over the declared
+    /// pair ranges.
+    pub ep_tally_exact: bool,
+    /// Exact count of EP pairs executed (excluding wasted re-execution).
+    pub ep_pairs_executed: Option<u64>,
+    pub max_makespan_secs: Option<f64>,
+    pub min_goodput: Option<f64>,
+    pub max_goodput: Option<f64>,
+}
+
+impl Expect {
+    /// True when no assertion is set (the run is report-only).
+    pub fn is_empty(&self) -> bool {
+        *self == Expect::default()
+    }
+
+    pub fn from_json(j: &Json, path: &str) -> Result<Expect, DslError> {
+        let o = j.as_obj().ok_or_else(|| DslError::at(path, "must be an object"))?;
+        check_keys(
+            o,
+            path,
+            &[
+                "all_jobs_terminal",
+                "jobs_completed",
+                "min_completed",
+                "min_requeued",
+                "min_faults",
+                "min_watchdog_restarts",
+                "ep_tally_exact",
+                "ep_pairs_executed",
+                "max_makespan_secs",
+                "min_goodput",
+                "max_goodput",
+            ],
+        )?;
+        let e = Expect {
+            all_jobs_terminal: get_bool(o, path, "all_jobs_terminal")?.unwrap_or(false),
+            jobs_completed: get_count(o, path, "jobs_completed")?,
+            min_completed: get_count(o, path, "min_completed")?,
+            min_requeued: get_count(o, path, "min_requeued")?,
+            min_faults: get_count(o, path, "min_faults")?,
+            min_watchdog_restarts: get_count(o, path, "min_watchdog_restarts")?,
+            ep_tally_exact: get_bool(o, path, "ep_tally_exact")?.unwrap_or(false),
+            ep_pairs_executed: get_count(o, path, "ep_pairs_executed")?,
+            max_makespan_secs: get_num(o, path, "max_makespan_secs")?,
+            min_goodput: get_num(o, path, "min_goodput")?,
+            max_goodput: get_num(o, path, "max_goodput")?,
+        };
+        for (key, v) in
+            [("min_goodput", e.min_goodput), ("max_goodput", e.max_goodput)]
+        {
+            if let Some(v) = v {
+                if !(0.0..=1.0).contains(&v) {
+                    return Err(DslError::at(join(path, key), "must be in 0..=1"));
+                }
+            }
+        }
+        Ok(e)
+    }
+
+    /// Evaluate every set assertion against the run's observed facts.
+    /// `ranges` are the `(pair_offset, pair_count)` spans the scenario
+    /// declared, used to rebuild the EP oracle for `ep_tally_exact`.
+    pub fn check(&self, facts: &RunFacts, ranges: &[(u64, u64)]) -> ExpectReport {
+        let mut r = ExpectReport { checks: Vec::new() };
+        if self.all_jobs_terminal {
+            r.push(facts.all_terminal, "all_jobs_terminal".to_string(), || {
+                "some jobs never reached a terminal state".to_string()
+            });
+        }
+        let m = &facts.metrics;
+        if let Some(want) = self.jobs_completed {
+            r.eq("jobs_completed", m.jobs_completed, want);
+        }
+        if let Some(want) = self.min_completed {
+            r.ge("min_completed", m.jobs_completed, want);
+        }
+        if let Some(want) = self.min_requeued {
+            r.ge("min_requeued", m.jobs_requeued, want);
+        }
+        if let Some(want) = self.min_faults {
+            r.ge("min_faults", m.faults, want);
+        }
+        if let Some(want) = self.min_watchdog_restarts {
+            r.ge("min_watchdog_restarts", m.watchdog_restarts, want);
+        }
+        if let Some(want) = self.ep_pairs_executed {
+            r.eq("ep_pairs_executed", m.ep_pairs_executed, want);
+        }
+        if self.ep_tally_exact {
+            let mut oracle = EpTally::default();
+            for &(offset, count) in ranges {
+                oracle.merge(&ep_scalar(offset, count));
+            }
+            let got = &facts.ep_total;
+            let counters_ok =
+                got.nacc == oracle.nacc && got.q == oracle.q && got.pairs == oracle.pairs;
+            let sums_ok = (got.sx - oracle.sx).abs() < EP_SUM_TOL
+                && (got.sy - oracle.sy).abs() < EP_SUM_TOL;
+            r.push(counters_ok && sums_ok, "ep_tally_exact".to_string(), || {
+                format!(
+                    "merged tally diverged from the scalar oracle: \
+                     got nacc={} pairs={}, want nacc={} pairs={}",
+                    got.nacc, got.pairs, oracle.nacc, oracle.pairs
+                )
+            });
+        }
+        if let Some(want) = self.max_makespan_secs {
+            let got = to_secs_f64(m.makespan);
+            r.push(got <= want, format!("max_makespan_secs <= {want}"), || {
+                format!("makespan was {got} s")
+            });
+        }
+        if let Some(want) = self.min_goodput {
+            let got = m.goodput();
+            r.push(got >= want, format!("min_goodput >= {want}"), || {
+                format!("goodput was {got}")
+            });
+        }
+        if let Some(want) = self.max_goodput {
+            let got = m.goodput();
+            r.push(got <= want, format!("max_goodput <= {want}"), || {
+                format!("goodput was {got}")
+            });
+        }
+        r
+    }
+}
+
+/// What actually happened in a run, as far as `expect` is concerned.
+#[derive(Debug, Clone)]
+pub struct RunFacts {
+    pub metrics: Metrics,
+    pub all_terminal: bool,
+    /// Merged tally across every EP job the run completed.
+    pub ep_total: EpTally,
+}
+
+/// One evaluated assertion.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpectCheck {
+    pub ok: bool,
+    /// `ok <label>` or `FAIL <label>: <detail>`.
+    pub line: String,
+}
+
+/// The outcome of every assertion in an `expect` block.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ExpectReport {
+    pub checks: Vec<ExpectCheck>,
+}
+
+impl ExpectReport {
+    fn push(&mut self, ok: bool, label: String, detail: impl FnOnce() -> String) {
+        let line = if ok { format!("ok   {label}") } else { format!("FAIL {label}: {}", detail()) };
+        self.checks.push(ExpectCheck { ok, line });
+    }
+
+    fn eq(&mut self, label: &str, got: u64, want: u64) {
+        self.push(got == want, format!("{label} = {want}"), || format!("got {got}"));
+    }
+
+    fn ge(&mut self, label: &str, got: u64, want: u64) {
+        self.push(got >= want, format!("{label}: {got} >= {want}"), || {
+            format!("got {got}, want >= {want}")
+        });
+    }
+
+    /// Vacuously true for an empty `expect` block.
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.ok)
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &ExpectCheck> {
+        self.checks.iter().filter(|c| !c.ok)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for c in &self.checks {
+            out.push_str("  ");
+            out.push_str(&c.line);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::DUR_SEC;
+
+    fn facts(completed: u64, requeued: u64, faults: u64) -> RunFacts {
+        let mut m = Metrics::default();
+        m.jobs_submitted = completed;
+        m.jobs_completed = completed;
+        m.jobs_requeued = requeued;
+        m.faults = faults;
+        m.makespan = 100 * DUR_SEC;
+        RunFacts { metrics: m, all_terminal: true, ep_total: EpTally::default() }
+    }
+
+    #[test]
+    fn empty_expect_passes_vacuously() {
+        let e = Expect::default();
+        assert!(e.is_empty());
+        let r = e.check(&facts(0, 0, 0), &[]);
+        assert!(r.checks.is_empty());
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn count_checks_pass_and_fail() {
+        let e = Expect {
+            jobs_completed: Some(10),
+            min_requeued: Some(1),
+            min_faults: Some(2),
+            all_jobs_terminal: true,
+            ..Default::default()
+        };
+        assert!(e.check(&facts(10, 1, 2), &[]).passed());
+        let r = e.check(&facts(9, 0, 2), &[]);
+        assert!(!r.passed());
+        let fails: Vec<_> = r.failures().map(|c| c.line.clone()).collect();
+        assert_eq!(fails.len(), 2, "{fails:?}");
+        assert!(fails[0].contains("jobs_completed"), "{fails:?}");
+        assert!(fails[1].contains("min_requeued") && fails[1].contains("got 0"), "{fails:?}");
+    }
+
+    #[test]
+    fn ep_tally_exact_matches_the_scalar_oracle() {
+        let mut f = facts(2, 0, 0);
+        let mut total = EpTally::default();
+        total.merge(&ep_scalar(0, 5_000));
+        total.merge(&ep_scalar(5_000, 5_000));
+        f.ep_total = total;
+        let e = Expect { ep_tally_exact: true, ..Default::default() };
+        assert!(e.check(&f, &[(0, 5_000), (5_000, 5_000)]).passed());
+        // A perturbed tally must fail.
+        f.ep_total.nacc += 1;
+        let r = e.check(&f, &[(0, 5_000), (5_000, 5_000)]);
+        assert!(!r.passed());
+        assert!(r.failures().next().unwrap().line.contains("oracle"));
+    }
+
+    #[test]
+    fn goodput_and_makespan_bounds() {
+        let mut f = facts(4, 0, 0);
+        f.metrics.core_secs_useful = 99.0;
+        f.metrics.core_secs_wasted = 1.0;
+        let e = Expect {
+            min_goodput: Some(0.9),
+            max_goodput: Some(1.0),
+            max_makespan_secs: Some(150.0),
+            ..Default::default()
+        };
+        assert!(e.check(&f, &[]).passed());
+        let tight = Expect { max_makespan_secs: Some(50.0), ..Default::default() };
+        assert!(!tight.check(&f, &[]).passed());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_ranges() {
+        let doc = Json::parse(r#"{"jobs_compleeted": 3}"#).unwrap();
+        let e = Expect::from_json(&doc, "expect").unwrap_err();
+        assert_eq!(e.path, "expect.jobs_compleeted");
+        let doc = Json::parse(r#"{"min_goodput": 1.5}"#).unwrap();
+        let e = Expect::from_json(&doc, "expect").unwrap_err();
+        assert_eq!(e.path, "expect.min_goodput");
+    }
+
+    #[test]
+    fn parse_fills_every_field() {
+        let doc = Json::parse(
+            r#"{
+                "all_jobs_terminal": true,
+                "jobs_completed": 8,
+                "min_requeued": 1,
+                "min_faults": 2,
+                "min_watchdog_restarts": 1,
+                "ep_tally_exact": true,
+                "ep_pairs_executed": 240000,
+                "min_goodput": 0.5
+            }"#,
+        )
+        .unwrap();
+        let e = Expect::from_json(&doc, "expect").unwrap();
+        assert!(e.all_jobs_terminal && e.ep_tally_exact);
+        assert_eq!(e.jobs_completed, Some(8));
+        assert_eq!(e.ep_pairs_executed, Some(240_000));
+        assert!(!e.is_empty());
+    }
+}

@@ -1,0 +1,41 @@
+//! Declarative scenario DSL: chaos experiments as data, not code.
+//!
+//! A scenario file is one JSON document (parsed by the in-tree
+//! [`crate::util::json`] layer — the offline vendor set has no serde)
+//! describing a whole chaos experiment:
+//!
+//! * `nodes` — the grid: the paper's Table-1 testbed or a synthetic
+//!   `count` x `cores` deployment, optionally pre-booted;
+//! * `faults` — crash / power-off / network-partition events with
+//!   one-shot (`at_secs`), periodic (`every_secs` + `count`), or seeded
+//!   (`seeded` + `window_secs`, QSL-style `k = seed + idx` placement)
+//!   timing, plus an optional random `storm` block (MTBF-driven
+//!   [`crate::host::faults::FaultPlan`]);
+//! * `workloads` — synthetic trace batches, `ep:<offset>:<count>`
+//!   real-compute floods, and open-loop arrival generators;
+//! * `seed` — the single root of all randomness in the run;
+//! * `expect` — invariant assertions checked after the run (all jobs
+//!   terminal, exact merged EP tallies, minimum completions, ...).
+//!
+//! The pipeline is `spec` (parse + validate, path-aware errors) ->
+//! `compile` (lower to the existing [`crate::coordinator::scenario`]
+//! trace/fault machinery) -> `runner` (execute on the DES, check the
+//! `expect` block) -> [`crate::obs::event`] JSONL + report JSON.
+//!
+//! **Determinism contract:** a scenario file plus its `seed` fully
+//! determines the run.  Re-running the same file produces byte-identical
+//! `events.jsonl` and report JSON — the corpus replay suite
+//! (`rust/tests/integration_scenario_dsl.rs`) holds this line for every
+//! committed file under `scenarios/`.
+
+pub mod compile;
+pub mod expect;
+pub mod runner;
+pub mod spec;
+
+pub use compile::CompiledScenario;
+pub use expect::{Expect, ExpectReport, RunFacts};
+pub use runner::{corpus_files, load_file, run_compiled, run_file, run_spec, ScenarioOutcome};
+pub use spec::{
+    DslError, EngineSpec, FaultSpec, FaultTiming, NodesSpec, ScenarioSpec, WorkloadSpec,
+};

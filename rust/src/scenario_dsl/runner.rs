@@ -1,0 +1,224 @@
+//! Execute compiled scenarios and sweep scenario corpora.
+//!
+//! Every run uses a memory event sink, so the caller always gets the
+//! full JSONL event log and pretty report JSON back — the two byte
+//! streams the determinism contract is stated over.  Nothing here
+//! touches the process (no exit, no stdout): the CLI layer owns
+//! presentation and exit codes.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::gridlan::Gridlan;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::scenario::run_scenario_logged;
+use crate::obs::event::ScenarioLogger;
+use crate::rm::job::JobState;
+use crate::runtime::engine::EpEngine;
+use crate::scenario_dsl::compile::CompiledScenario;
+use crate::scenario_dsl::expect::{ExpectReport, RunFacts};
+use crate::scenario_dsl::spec::{EngineSpec, ScenarioSpec};
+use crate::sim::clock::to_secs_f64;
+use crate::workload::ep::EpTally;
+
+/// Everything observable from one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioOutcome {
+    pub name: String,
+    pub seed: u64,
+    pub metrics: Metrics,
+    pub events_executed: u64,
+    /// Merged tally across every completed EP job.
+    pub ep_total: EpTally,
+    /// The full structured event log (newline-terminated JSONL).
+    pub events_jsonl: String,
+    /// The scenario report as pretty JSON + trailing newline.
+    pub report_json: String,
+    /// Evaluated `expect` block (empty block = vacuous pass).
+    pub expect: ExpectReport,
+}
+
+impl ScenarioOutcome {
+    pub fn passed(&self) -> bool {
+        self.expect.passed()
+    }
+
+    /// Human one-screen summary (CLI `scenario` output).
+    pub fn render_summary(&self) -> String {
+        let m = &self.metrics;
+        let verdict = if self.passed() { "PASS" } else { "FAIL" };
+        let mut out = format!("scenario '{}' (seed {}): {}\n", self.name, self.seed, verdict);
+        out.push_str(&format!(
+            "  jobs: {} submitted, {} completed, {} requeued, {} killed\n",
+            m.jobs_submitted, m.jobs_completed, m.jobs_requeued, m.jobs_killed
+        ));
+        out.push_str(&format!(
+            "  faults: {} ({} watchdog restarts)  goodput: {:.3}  makespan: {:.1} s\n",
+            m.faults,
+            m.watchdog_restarts,
+            m.goodput(),
+            to_secs_f64(m.makespan)
+        ));
+        if m.ep_jobs_completed > 0 || m.ep_pairs_executed > 0 {
+            out.push_str(&format!(
+                "  ep: {} jobs, {} pairs executed\n",
+                m.ep_jobs_completed, m.ep_pairs_executed
+            ));
+        }
+        out.push_str(&self.expect.render());
+        out
+    }
+}
+
+/// Run a compiled scenario to completion on the DES and evaluate its
+/// `expect` block.
+pub fn run_compiled(c: &CompiledScenario) -> ScenarioOutcome {
+    let mut g = Gridlan::build(c.config.clone());
+    if c.prebooted {
+        g.boot_all(0);
+    }
+    let engine = match c.engine {
+        EngineSpec::Scalar => EpEngine::scalar(),
+        EngineSpec::Threaded(n) => EpEngine::threaded(n),
+    };
+    let run = run_scenario_logged(g, c.trace.clone(), &c.scenario, engine, ScenarioLogger::memory());
+    let report = &run.report;
+    // Terminal = every job the RM accepted ran to completion AND the
+    // counters account for every submission (accepted or rejected).
+    let all_terminal = run.gridlan.pbs.jobs().all(|j| j.state == JobState::Completed)
+        && report.metrics.jobs_submitted
+            == report.metrics.jobs_completed + report.metrics.jobs_killed;
+    let ep_total = report.ep_total();
+    let facts =
+        RunFacts { metrics: report.metrics.clone(), all_terminal, ep_total };
+    let expect = c.expect.check(&facts, &c.ep_ranges);
+    ScenarioOutcome {
+        name: c.name.clone(),
+        seed: c.seed,
+        metrics: report.metrics.clone(),
+        events_executed: report.events_executed,
+        ep_total,
+        events_jsonl: run.logger.to_jsonl(),
+        report_json: report.to_json().to_pretty() + "\n",
+        expect,
+    }
+}
+
+/// Compile + run a parsed spec.
+pub fn run_spec(spec: &ScenarioSpec) -> ScenarioOutcome {
+    run_compiled(&spec.compile())
+}
+
+/// Read + parse a scenario file, prefixing every error with the path.
+pub fn load_file(path: &Path) -> Result<ScenarioSpec, String> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    ScenarioSpec::parse(&src).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Load, compile, and run one scenario file.
+pub fn run_file(path: &Path) -> Result<ScenarioOutcome, String> {
+    Ok(run_spec(&load_file(path)?))
+}
+
+/// The `*.json` files of a scenario corpus directory, sorted by name
+/// (the sweep order).  An empty corpus is an error — a chaos lab that
+/// silently checks nothing must not look green.
+pub fn corpus_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut out = Vec::new();
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("json") && path.is_file() {
+            out.push(path);
+        }
+    }
+    out.sort();
+    if out.is_empty() {
+        return Err(format!("no *.json scenario files under {}", dir.display()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+        "seed": 5,
+        "horizon_secs": 3600,
+        "workloads": [
+            {"kind": "trace", "count": 4, "every_secs": 30, "compute_secs": 60,
+             "walltime_secs": 600, "ppn": 2}
+        ],
+        "expect": {"jobs_completed": 4, "all_jobs_terminal": true, "min_goodput": 0.99}
+    }"#;
+
+    #[test]
+    fn mini_scenario_runs_and_passes_expect() {
+        let spec = ScenarioSpec::parse(MINI).unwrap();
+        let out = run_spec(&spec);
+        assert!(out.passed(), "{}", out.render_summary());
+        assert_eq!(out.metrics.jobs_completed, 4);
+        assert!(!out.events_jsonl.is_empty());
+        assert!(out.events_jsonl.ends_with('\n'));
+        assert!(out.report_json.ends_with('\n'));
+        let summary = out.render_summary();
+        assert!(summary.contains("PASS"), "{summary}");
+        assert!(summary.contains("4 completed"), "{summary}");
+    }
+
+    #[test]
+    fn same_spec_twice_is_byte_identical() {
+        let spec = ScenarioSpec::parse(MINI).unwrap();
+        let a = run_spec(&spec);
+        let b = run_spec(&spec);
+        assert_eq!(a.events_jsonl, b.events_jsonl);
+        assert_eq!(a.report_json, b.report_json);
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    #[test]
+    fn failed_expect_is_reported_not_panicked() {
+        let src = MINI.replace("\"jobs_completed\": 4", "\"jobs_completed\": 5");
+        let out = run_spec(&ScenarioSpec::parse(&src).unwrap());
+        assert!(!out.passed());
+        let summary = out.render_summary();
+        assert!(summary.contains("FAIL"), "{summary}");
+        assert!(summary.contains("jobs_completed"), "{summary}");
+    }
+
+    #[test]
+    fn prebooted_ep_spec_matches_the_oracle() {
+        let src = r#"{
+            "seed": 11,
+            "horizon_secs": 3600,
+            "nodes": {"preset": "table1", "prebooted": true},
+            "workloads": [
+                {"kind": "ep", "slices": 4, "pairs_per_slice": 4096, "every_secs": 1}
+            ],
+            "expect": {"jobs_completed": 4, "ep_tally_exact": true,
+                       "ep_pairs_executed": 16384, "all_jobs_terminal": true}
+        }"#;
+        let out = run_spec(&ScenarioSpec::parse(src).unwrap());
+        assert!(out.passed(), "{}", out.render_summary());
+        assert_eq!(out.ep_total.pairs, 16_384);
+    }
+
+    #[test]
+    fn corpus_files_sorts_and_rejects_empty_dirs() {
+        let dir = std::env::temp_dir().join("gridlan_dsl_corpus_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(corpus_files(&dir).is_err(), "empty corpus must be an error");
+        std::fs::write(dir.join("02_b.json"), "{}").unwrap();
+        std::fs::write(dir.join("01_a.json"), "{}").unwrap();
+        std::fs::write(dir.join("README.md"), "not a scenario").unwrap();
+        let files = corpus_files(&dir).unwrap();
+        let names: Vec<_> =
+            files.iter().map(|p| p.file_name().unwrap().to_str().unwrap()).collect();
+        assert_eq!(names, vec!["01_a.json", "02_b.json"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,1014 @@
+//! Typed scenario spec: parse + validate a scenario JSON document.
+//!
+//! Parsing is strict: unknown keys, bad enum values, missing required
+//! fields, and out-of-range node references are all errors, and every
+//! error carries either a `line:col` (syntax) or a JSON path like
+//! `faults[2].kind` (semantics) plus what was expected — a scenario file
+//! is an experiment definition, and a silently-ignored typo would change
+//! the experiment.
+//!
+//! All durations are spelled as `*_secs` JSON numbers (fractions allowed)
+//! and converted to [`SimTime`] nanoseconds via
+//! [`crate::sim::clock::from_secs_f64`].
+
+use std::fmt;
+
+use crate::config::SchedPolicy;
+use crate::host::faults::{FaultKind, FaultPlan};
+use crate::scenario_dsl::expect::Expect;
+use crate::sim::clock::{from_secs_f64, SimTime, DUR_SEC};
+use crate::util::json::{Json, JsonObj};
+
+/// Hard cap on repetition counts (faults, workload batches): a typo like
+/// `"count": 3e9` should fail parse, not melt the DES.
+const MAX_COUNT: u64 = 1_000_000;
+
+/// A scenario-file error: where (`line:col` or JSON path) and what.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DslError {
+    /// `line L:C` for syntax errors, a JSON path (`faults[2].kind`) for
+    /// semantic ones, empty for whole-document errors.
+    pub path: String,
+    pub msg: String,
+}
+
+impl DslError {
+    pub fn at(path: impl Into<String>, msg: impl Into<String>) -> Self {
+        Self { path: path.into(), msg: msg.into() }
+    }
+}
+
+impl fmt::Display for DslError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.path.is_empty() {
+            write!(f, "{}", self.msg)
+        } else {
+            write!(f, "{}: {}", self.path, self.msg)
+        }
+    }
+}
+
+impl std::error::Error for DslError {}
+
+/// Convert a byte offset into 1-based (line, column) for syntax errors.
+fn line_col(src: &str, offset: usize) -> (usize, usize) {
+    let (mut line, mut col) = (1usize, 1usize);
+    for (i, b) in src.bytes().enumerate() {
+        if i >= offset {
+            break;
+        }
+        if b == b'\n' {
+            line += 1;
+            col = 1;
+        } else {
+            col += 1;
+        }
+    }
+    (line, col)
+}
+
+// ------------------------------------------------------------ helpers
+
+pub(crate) fn join(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+/// Strict-schema guard: every present key must be in `allowed`.
+pub(crate) fn check_keys(o: &JsonObj, path: &str, allowed: &[&str]) -> Result<(), DslError> {
+    for (k, _) in o.iter() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(DslError::at(
+                join(path, k),
+                format!("unknown key (expected one of: {})", allowed.join(", ")),
+            ));
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn get_num(o: &JsonObj, path: &str, key: &str) -> Result<Option<f64>, DslError> {
+    match o.get(key) {
+        None => Ok(None),
+        Some(j) => {
+            let n = j
+                .as_f64()
+                .ok_or_else(|| DslError::at(join(path, key), "must be a number"))?;
+            if !n.is_finite() {
+                return Err(DslError::at(join(path, key), "must be a finite number"));
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
+pub(crate) fn get_secs(o: &JsonObj, path: &str, key: &str) -> Result<Option<SimTime>, DslError> {
+    match get_num(o, path, key)? {
+        None => Ok(None),
+        Some(n) if n < 0.0 => Err(DslError::at(join(path, key), "must be >= 0 (seconds)")),
+        Some(n) => Ok(Some(from_secs_f64(n))),
+    }
+}
+
+pub(crate) fn get_count(o: &JsonObj, path: &str, key: &str) -> Result<Option<u64>, DslError> {
+    match o.get(key) {
+        None => Ok(None),
+        Some(j) => Ok(Some(j.as_u64().ok_or_else(|| {
+            DslError::at(join(path, key), "must be a non-negative integer")
+        })?)),
+    }
+}
+
+pub(crate) fn get_str(o: &JsonObj, path: &str, key: &str) -> Result<Option<String>, DslError> {
+    match o.get(key) {
+        None => Ok(None),
+        Some(j) => Ok(Some(
+            j.as_str()
+                .ok_or_else(|| DslError::at(join(path, key), "must be a string"))?
+                .to_string(),
+        )),
+    }
+}
+
+pub(crate) fn get_bool(o: &JsonObj, path: &str, key: &str) -> Result<Option<bool>, DslError> {
+    match o.get(key) {
+        None => Ok(None),
+        Some(j) => Ok(Some(j.as_bool().ok_or_else(|| {
+            DslError::at(join(path, key), "must be true or false")
+        })?)),
+    }
+}
+
+fn secs_value(j: &Json, path: &str) -> Result<SimTime, DslError> {
+    let n = j.as_f64().ok_or_else(|| DslError::at(path, "must be a number (seconds)"))?;
+    if !n.is_finite() || n < 0.0 {
+        return Err(DslError::at(path, "must be a finite number >= 0 (seconds)"));
+    }
+    Ok(from_secs_f64(n))
+}
+
+// -------------------------------------------------------------- nodes
+
+/// The grid under test.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodesSpec {
+    /// The paper's Table-1 testbed (4 clients, 26 cores).
+    Table1 { prebooted: bool },
+    /// A synthetic homogeneous deployment: `count` clients of `cores`
+    /// cores each, Linux, default hypervisor.
+    Custom {
+        count: u32,
+        cores: u32,
+        prebooted: bool,
+        switch_hops: u32,
+        stack_us: f64,
+        link_mbps: f64,
+    },
+}
+
+impl NodesSpec {
+    /// Node names in deterministic order (the fault-target namespace).
+    pub fn names(&self) -> Vec<String> {
+        match self {
+            NodesSpec::Table1 { .. } => {
+                vec!["n01".into(), "n02".into(), "n03".into(), "n04".into()]
+            }
+            NodesSpec::Custom { count, .. } => {
+                (0..*count).map(|i| format!("n{:02}", i + 1)).collect()
+            }
+        }
+    }
+
+    pub fn prebooted(&self) -> bool {
+        match self {
+            NodesSpec::Table1 { prebooted } | NodesSpec::Custom { prebooted, .. } => *prebooted,
+        }
+    }
+
+    /// Widest single node (for `ppn` range checks at parse time).
+    pub fn max_cores(&self) -> u32 {
+        match self {
+            NodesSpec::Table1 { .. } => 12,
+            NodesSpec::Custom { cores, .. } => *cores,
+        }
+    }
+
+    pub fn node_count(&self) -> u32 {
+        match self {
+            NodesSpec::Table1 { .. } => 4,
+            NodesSpec::Custom { count, .. } => *count,
+        }
+    }
+}
+
+fn parse_nodes(j: Option<&Json>) -> Result<NodesSpec, DslError> {
+    let Some(j) = j else {
+        return Ok(NodesSpec::Table1 { prebooted: false });
+    };
+    let o = j.as_obj().ok_or_else(|| DslError::at("nodes", "must be an object"))?;
+    check_keys(
+        o,
+        "nodes",
+        &["preset", "count", "cores", "prebooted", "switch_hops", "stack_us", "link_mbps"],
+    )?;
+    let prebooted = get_bool(o, "nodes", "prebooted")?.unwrap_or(false);
+    match get_str(o, "nodes", "preset")?.as_deref() {
+        Some("table1") => {
+            for k in ["count", "cores", "switch_hops", "stack_us", "link_mbps"] {
+                if o.contains(k) {
+                    return Err(DslError::at(
+                        join("nodes", k),
+                        "not valid together with preset \"table1\"",
+                    ));
+                }
+            }
+            Ok(NodesSpec::Table1 { prebooted })
+        }
+        Some(other) => Err(DslError::at(
+            "nodes.preset",
+            format!("unknown preset '{other}' (expected table1)"),
+        )),
+        None => {
+            let count = get_count(o, "nodes", "count")?
+                .ok_or_else(|| DslError::at("nodes.count", "required without a preset"))?;
+            if count == 0 || count > 100_000 {
+                return Err(DslError::at("nodes.count", "must be in 1..=100000"));
+            }
+            let cores = get_count(o, "nodes", "cores")?
+                .ok_or_else(|| DslError::at("nodes.cores", "required without a preset"))?;
+            if cores == 0 || cores > 1024 {
+                return Err(DslError::at("nodes.cores", "must be in 1..=1024"));
+            }
+            let switch_hops = get_count(o, "nodes", "switch_hops")?.unwrap_or(2);
+            let stack_us = get_num(o, "nodes", "stack_us")?.unwrap_or(120.0);
+            let link_mbps = get_num(o, "nodes", "link_mbps")?.unwrap_or(1000.0);
+            Ok(NodesSpec::Custom {
+                count: count as u32,
+                cores: cores as u32,
+                prebooted,
+                switch_hops: switch_hops as u32,
+                stack_us,
+                link_mbps,
+            })
+        }
+    }
+}
+
+// ------------------------------------------------------------- faults
+
+/// When a fault block fires.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultTiming {
+    /// One shot at an absolute time.
+    At(SimTime),
+    /// `count` repetitions at `start`, `start + every`, ...
+    Every { start: SimTime, every: SimTime, count: u32 },
+    /// `count` events placed by the scenario seed inside a time window
+    /// (QSL-style `k = seed + idx` placement: each event draws its time
+    /// and target from its own derived generator).
+    Seeded { count: u32, window: (SimTime, SimTime) },
+}
+
+/// One declarative fault block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Resolved target node names (never empty; defaults to all nodes).
+    pub targets: Vec<String>,
+    pub timing: FaultTiming,
+    pub outage: SimTime,
+}
+
+fn parse_fault(j: &Json, path: &str, names: &[String]) -> Result<FaultSpec, DslError> {
+    let o = j.as_obj().ok_or_else(|| DslError::at(path, "must be an object"))?;
+    check_keys(
+        o,
+        path,
+        &[
+            "kind",
+            "target",
+            "targets",
+            "at_secs",
+            "every_secs",
+            "start_secs",
+            "count",
+            "seeded",
+            "window_secs",
+            "outage_secs",
+        ],
+    )?;
+    let kind = match get_str(o, path, "kind")?.as_deref() {
+        Some("vm_crash") => FaultKind::VmCrash,
+        Some("power_off") => FaultKind::ClientPowerOff,
+        Some("net_drop") => FaultKind::NetworkDrop,
+        Some(other) => {
+            return Err(DslError::at(
+                join(path, "kind"),
+                format!("unknown fault kind '{other}' (expected vm_crash, power_off, or net_drop)"),
+            ))
+        }
+        None => {
+            return Err(DslError::at(
+                join(path, "kind"),
+                "required (vm_crash, power_off, or net_drop)",
+            ))
+        }
+    };
+    let outage = get_secs(o, path, "outage_secs")?.unwrap_or(60 * DUR_SEC);
+
+    // Targets: a single name, an explicit list, "all", or (default) all.
+    let targets: Vec<String> = match (o.get("target"), o.get("targets")) {
+        (Some(_), Some(_)) => {
+            return Err(DslError::at(path, "give either target or targets, not both"))
+        }
+        (Some(t), None) => {
+            let name = t
+                .as_str()
+                .ok_or_else(|| DslError::at(join(path, "target"), "must be a node name string"))?;
+            vec![name.to_string()]
+        }
+        (None, Some(t)) => match t {
+            Json::Str(s) if s == "all" => names.to_vec(),
+            Json::Arr(a) => {
+                let mut v = Vec::new();
+                for (i, e) in a.iter().enumerate() {
+                    let name = e.as_str().ok_or_else(|| {
+                        DslError::at(
+                            format!("{}[{i}]", join(path, "targets")),
+                            "must be a node name string",
+                        )
+                    })?;
+                    v.push(name.to_string());
+                }
+                if v.is_empty() {
+                    return Err(DslError::at(join(path, "targets"), "must not be empty"));
+                }
+                v
+            }
+            _ => {
+                return Err(DslError::at(
+                    join(path, "targets"),
+                    "must be \"all\" or an array of node names",
+                ))
+            }
+        },
+        (None, None) => names.to_vec(),
+    };
+    for t in &targets {
+        if !names.iter().any(|n| n == t) {
+            return Err(DslError::at(
+                path,
+                format!("unknown node '{t}' (this grid has: {})", names.join(", ")),
+            ));
+        }
+    }
+
+    // Timing: exactly one of at_secs | every_secs | seeded.
+    let at = get_secs(o, path, "at_secs")?;
+    let every = get_secs(o, path, "every_secs")?;
+    let seeded = get_count(o, path, "seeded")?;
+    let modes = [at.is_some(), every.is_some(), seeded.is_some()]
+        .iter()
+        .filter(|b| **b)
+        .count();
+    if modes != 1 {
+        return Err(DslError::at(
+            path,
+            "exactly one of at_secs, every_secs, or seeded must be set",
+        ));
+    }
+    let timing = if let Some(at) = at {
+        for k in ["start_secs", "count", "window_secs"] {
+            if o.contains(k) {
+                return Err(DslError::at(
+                    join(path, k),
+                    "only valid with every_secs or seeded timing",
+                ));
+            }
+        }
+        FaultTiming::At(at)
+    } else if let Some(every) = every {
+        if o.contains("window_secs") {
+            return Err(DslError::at(
+                join(path, "window_secs"),
+                "only valid with seeded timing",
+            ));
+        }
+        if every == 0 {
+            return Err(DslError::at(join(path, "every_secs"), "must be > 0"));
+        }
+        let count = get_count(o, path, "count")?.ok_or_else(|| {
+            DslError::at(join(path, "count"), "required with every_secs (how many repetitions)")
+        })?;
+        if count == 0 || count > MAX_COUNT {
+            return Err(DslError::at(join(path, "count"), "must be in 1..=1000000"));
+        }
+        let start = get_secs(o, path, "start_secs")?.unwrap_or(every);
+        FaultTiming::Every { start, every, count: count as u32 }
+    } else {
+        let count = seeded.unwrap_or(0);
+        if count == 0 || count > MAX_COUNT {
+            return Err(DslError::at(join(path, "seeded"), "must be in 1..=1000000"));
+        }
+        for k in ["start_secs", "count"] {
+            if o.contains(k) {
+                return Err(DslError::at(join(path, k), "not valid with seeded timing"));
+            }
+        }
+        let w = o.get("window_secs").ok_or_else(|| {
+            DslError::at(
+                join(path, "window_secs"),
+                "required with seeded timing: [lo_secs, hi_secs]",
+            )
+        })?;
+        let arr = w
+            .as_arr()
+            .filter(|a| a.len() == 2)
+            .ok_or_else(|| DslError::at(join(path, "window_secs"), "must be [lo_secs, hi_secs]"))?;
+        let lo = secs_value(&arr[0], &format!("{}[0]", join(path, "window_secs")))?;
+        let hi = secs_value(&arr[1], &format!("{}[1]", join(path, "window_secs")))?;
+        if lo > hi {
+            return Err(DslError::at(join(path, "window_secs"), "window lo must be <= hi"));
+        }
+        FaultTiming::Seeded { count: count as u32, window: (lo, hi) }
+    };
+    Ok(FaultSpec { kind, targets, timing, outage })
+}
+
+// -------------------------------------------------------------- storm
+
+/// A random MTBF-driven fault storm (lowered to [`FaultPlan`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StormSpec {
+    pub power_off_mtbf: SimTime,
+    pub net_drop_mtbf: SimTime,
+    pub vm_crash_mtbf: SimTime,
+    pub mean_outage: SimTime,
+    pub scale: f64,
+}
+
+impl StormSpec {
+    pub fn to_plan(&self) -> FaultPlan {
+        FaultPlan {
+            mtbf_power_off: self.power_off_mtbf,
+            mtbf_net_drop: self.net_drop_mtbf,
+            mtbf_vm_crash: self.vm_crash_mtbf,
+            mean_outage: self.mean_outage,
+        }
+        .scaled(self.scale)
+    }
+}
+
+fn parse_storm(j: Option<&Json>) -> Result<Option<StormSpec>, DslError> {
+    let Some(j) = j else { return Ok(None) };
+    let o = j.as_obj().ok_or_else(|| DslError::at("storm", "must be an object"))?;
+    check_keys(
+        o,
+        "storm",
+        &[
+            "preset",
+            "scale",
+            "power_off_mtbf_secs",
+            "net_drop_mtbf_secs",
+            "vm_crash_mtbf_secs",
+            "mean_outage_secs",
+        ],
+    )?;
+    let (mut po, mut nd, mut vc, mut out) = match get_str(o, "storm", "preset")?.as_deref() {
+        Some("lab") => {
+            let p = FaultPlan::lab_default();
+            (p.mtbf_power_off, p.mtbf_net_drop, p.mtbf_vm_crash, p.mean_outage)
+        }
+        Some(other) => {
+            return Err(DslError::at(
+                "storm.preset",
+                format!("unknown preset '{other}' (expected lab)"),
+            ))
+        }
+        None => (0, 0, 0, 600 * DUR_SEC),
+    };
+    if let Some(v) = get_secs(o, "storm", "power_off_mtbf_secs")? {
+        po = v;
+    }
+    if let Some(v) = get_secs(o, "storm", "net_drop_mtbf_secs")? {
+        nd = v;
+    }
+    if let Some(v) = get_secs(o, "storm", "vm_crash_mtbf_secs")? {
+        vc = v;
+    }
+    if let Some(v) = get_secs(o, "storm", "mean_outage_secs")? {
+        out = v;
+    }
+    let scale = get_num(o, "storm", "scale")?.unwrap_or(1.0);
+    if scale <= 0.0 {
+        return Err(DslError::at("storm.scale", "must be > 0"));
+    }
+    if po == 0 && nd == 0 && vc == 0 {
+        return Err(DslError::at(
+            "storm",
+            "set preset \"lab\" or at least one *_mtbf_secs rate",
+        ));
+    }
+    Ok(Some(StormSpec {
+        power_off_mtbf: po,
+        net_drop_mtbf: nd,
+        vm_crash_mtbf: vc,
+        mean_outage: out,
+        scale,
+    }))
+}
+
+// ----------------------------------------------------------- workloads
+
+/// One workload block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// A batch of synthetic jobs: `count` submissions at `start`,
+    /// `start + every`, ...
+    Trace {
+        count: u32,
+        start: SimTime,
+        every: SimTime,
+        nodes: u32,
+        ppn: u32,
+        compute: SimTime,
+        walltime: SimTime,
+        owner: String,
+    },
+    /// An `ep:<offset>:<count>` flood: `slices` single-core real-compute
+    /// jobs over consecutive pair ranges.
+    Ep {
+        slices: u32,
+        pair_offset: u64,
+        pairs_per_slice: u64,
+        start: SimTime,
+        every: SimTime,
+        walltime: SimTime,
+    },
+    /// Open-loop multi-user arrivals via [`crate::workload::trace::TraceGenerator`],
+    /// seeded from the scenario seed.
+    Arrivals {
+        users: u32,
+        /// Submission horizon (defaults to the scenario horizon).
+        horizon: Option<SimTime>,
+        mean_gap: SimTime,
+        wide_fraction: f64,
+    },
+}
+
+fn parse_workload(j: &Json, path: &str, nodes: &NodesSpec) -> Result<WorkloadSpec, DslError> {
+    let o = j.as_obj().ok_or_else(|| DslError::at(path, "must be an object"))?;
+    let kind = get_str(o, path, "kind")?
+        .ok_or_else(|| DslError::at(join(path, "kind"), "required (trace, ep, or arrivals)"))?;
+    match kind.as_str() {
+        "trace" => {
+            check_keys(
+                o,
+                path,
+                &[
+                    "kind",
+                    "count",
+                    "start_secs",
+                    "every_secs",
+                    "nodes",
+                    "ppn",
+                    "compute_secs",
+                    "walltime_secs",
+                    "owner",
+                ],
+            )?;
+            let count = get_count(o, path, "count")?.unwrap_or(1);
+            if count == 0 || count > MAX_COUNT {
+                return Err(DslError::at(join(path, "count"), "must be in 1..=1000000"));
+            }
+            let start = get_secs(o, path, "start_secs")?.unwrap_or(0);
+            let every = get_secs(o, path, "every_secs")?.unwrap_or(0);
+            let req_nodes = get_count(o, path, "nodes")?.unwrap_or(1) as u32;
+            let ppn = get_count(o, path, "ppn")?.unwrap_or(1) as u32;
+            if req_nodes == 0 || req_nodes > nodes.node_count() {
+                return Err(DslError::at(
+                    join(path, "nodes"),
+                    format!("must be in 1..={} (this grid's node count)", nodes.node_count()),
+                ));
+            }
+            if ppn == 0 || ppn > nodes.max_cores() {
+                return Err(DslError::at(
+                    join(path, "ppn"),
+                    format!("must be in 1..={} (this grid's widest node)", nodes.max_cores()),
+                ));
+            }
+            let compute = get_secs(o, path, "compute_secs")?
+                .ok_or_else(|| DslError::at(join(path, "compute_secs"), "required (seconds)"))?;
+            let walltime =
+                get_secs(o, path, "walltime_secs")?.unwrap_or(compute.saturating_mul(4));
+            if walltime == 0 {
+                return Err(DslError::at(join(path, "walltime_secs"), "must be > 0"));
+            }
+            let owner = get_str(o, path, "owner")?.unwrap_or_else(|| "user".to_string());
+            Ok(WorkloadSpec::Trace {
+                count: count as u32,
+                start,
+                every,
+                nodes: req_nodes,
+                ppn,
+                compute,
+                walltime,
+                owner,
+            })
+        }
+        "ep" => {
+            check_keys(
+                o,
+                path,
+                &[
+                    "kind",
+                    "slices",
+                    "pair_offset",
+                    "pairs_per_slice",
+                    "start_secs",
+                    "every_secs",
+                    "walltime_secs",
+                ],
+            )?;
+            let slices = get_count(o, path, "slices")?
+                .ok_or_else(|| DslError::at(join(path, "slices"), "required (how many jobs)"))?;
+            if slices == 0 || slices > MAX_COUNT {
+                return Err(DslError::at(join(path, "slices"), "must be in 1..=1000000"));
+            }
+            let pairs_per_slice = get_count(o, path, "pairs_per_slice")?.ok_or_else(|| {
+                DslError::at(join(path, "pairs_per_slice"), "required (pairs per job)")
+            })?;
+            if pairs_per_slice == 0 {
+                return Err(DslError::at(join(path, "pairs_per_slice"), "must be > 0"));
+            }
+            let pair_offset = get_count(o, path, "pair_offset")?.unwrap_or(0);
+            let start = get_secs(o, path, "start_secs")?.unwrap_or(0);
+            let every = get_secs(o, path, "every_secs")?.unwrap_or(0);
+            let walltime = get_secs(o, path, "walltime_secs")?.unwrap_or(3600 * DUR_SEC);
+            if walltime == 0 {
+                return Err(DslError::at(join(path, "walltime_secs"), "must be > 0"));
+            }
+            Ok(WorkloadSpec::Ep {
+                slices: slices as u32,
+                pair_offset,
+                pairs_per_slice,
+                start,
+                every,
+                walltime,
+            })
+        }
+        "arrivals" => {
+            check_keys(
+                o,
+                path,
+                &["kind", "users", "horizon_secs", "mean_gap_secs", "wide_fraction"],
+            )?;
+            let users = get_count(o, path, "users")?
+                .ok_or_else(|| DslError::at(join(path, "users"), "required (how many users)"))?;
+            if users == 0 || users > MAX_COUNT {
+                return Err(DslError::at(join(path, "users"), "must be in 1..=1000000"));
+            }
+            let horizon = get_secs(o, path, "horizon_secs")?;
+            let mean_gap = get_secs(o, path, "mean_gap_secs")?.unwrap_or(1800 * DUR_SEC);
+            if mean_gap == 0 {
+                return Err(DslError::at(join(path, "mean_gap_secs"), "must be > 0"));
+            }
+            let wide_fraction = get_num(o, path, "wide_fraction")?.unwrap_or(0.15);
+            if !(0.0..=1.0).contains(&wide_fraction) {
+                return Err(DslError::at(join(path, "wide_fraction"), "must be in 0..=1"));
+            }
+            Ok(WorkloadSpec::Arrivals { users: users as u32, horizon, mean_gap, wide_fraction })
+        }
+        other => Err(DslError::at(
+            join(path, "kind"),
+            format!("unknown workload kind '{other}' (expected trace, ep, or arrivals)"),
+        )),
+    }
+}
+
+// -------------------------------------------------------------- engine
+
+/// Which compute backend runs EP payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineSpec {
+    Scalar,
+    Threaded(usize),
+}
+
+fn parse_engine(root: &JsonObj) -> Result<EngineSpec, DslError> {
+    match get_str(root, "", "engine")?.as_deref() {
+        None | Some("scalar") => Ok(EngineSpec::Scalar),
+        Some("threaded") => Ok(EngineSpec::Threaded(2)),
+        Some(s) if s.starts_with("threaded:") => {
+            let n: usize = s["threaded:".len()..]
+                .parse()
+                .map_err(|_| DslError::at("engine", format!("bad thread count in '{s}'")))?;
+            if n == 0 || n > 256 {
+                return Err(DslError::at("engine", "thread count must be in 1..=256"));
+            }
+            Ok(EngineSpec::Threaded(n))
+        }
+        Some(other) => Err(DslError::at(
+            "engine",
+            format!("unknown engine '{other}' (expected scalar, threaded, or threaded:N)"),
+        )),
+    }
+}
+
+// ---------------------------------------------------------------- spec
+
+/// A fully parsed + validated scenario document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Root of all randomness in the run (required in every file).
+    pub seed: u64,
+    pub horizon: SimTime,
+    pub sched: SchedPolicy,
+    pub sched_period: SimTime,
+    pub engine: EngineSpec,
+    pub nodes: NodesSpec,
+    pub faults: Vec<FaultSpec>,
+    pub storm: Option<StormSpec>,
+    pub workloads: Vec<WorkloadSpec>,
+    pub expect: Expect,
+}
+
+impl ScenarioSpec {
+    /// Parse a scenario document, reporting `line:col` on syntax errors
+    /// and a JSON path on semantic ones.
+    pub fn parse(src: &str) -> Result<ScenarioSpec, DslError> {
+        let doc = Json::parse(src).map_err(|e| {
+            let (line, col) = line_col(src, e.offset);
+            DslError::at(format!("line {line}:{col}"), format!("syntax error: {}", e.msg))
+        })?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<ScenarioSpec, DslError> {
+        let root = doc
+            .as_obj()
+            .ok_or_else(|| DslError::at("", "scenario file must be a JSON object"))?;
+        check_keys(
+            root,
+            "",
+            &[
+                "name",
+                "seed",
+                "horizon_secs",
+                "sched",
+                "sched_period_secs",
+                "engine",
+                "nodes",
+                "faults",
+                "storm",
+                "workloads",
+                "expect",
+            ],
+        )?;
+        let name = get_str(root, "", "name")?.unwrap_or_else(|| "scenario".to_string());
+        let seed = get_count(root, "", "seed")?.ok_or_else(|| {
+            DslError::at("seed", "required (integer): every scenario must pin its replay seed")
+        })?;
+        let horizon = get_secs(root, "", "horizon_secs")?.unwrap_or(4 * 3600 * DUR_SEC);
+        if horizon == 0 {
+            return Err(DslError::at("horizon_secs", "must be > 0"));
+        }
+        let sched = match get_str(root, "", "sched")?.as_deref() {
+            None | Some("fifo") => SchedPolicy::Fifo,
+            Some("backfill") => SchedPolicy::Backfill,
+            Some(other) => {
+                return Err(DslError::at(
+                    "sched",
+                    format!("unknown policy '{other}' (expected fifo or backfill)"),
+                ))
+            }
+        };
+        let sched_period = get_secs(root, "", "sched_period_secs")?.unwrap_or(10 * DUR_SEC);
+        if sched_period == 0 {
+            return Err(DslError::at("sched_period_secs", "must be > 0"));
+        }
+        let engine = parse_engine(root)?;
+        let nodes = parse_nodes(root.get("nodes"))?;
+        let names = nodes.names();
+
+        let mut faults = Vec::new();
+        if let Some(j) = root.get("faults") {
+            let arr = j
+                .as_arr()
+                .ok_or_else(|| DslError::at("faults", "must be an array of fault blocks"))?;
+            for (i, f) in arr.iter().enumerate() {
+                faults.push(parse_fault(f, &format!("faults[{i}]"), &names)?);
+            }
+        }
+        let storm = parse_storm(root.get("storm"))?;
+
+        let mut workloads = Vec::new();
+        if let Some(j) = root.get("workloads") {
+            let arr = j
+                .as_arr()
+                .ok_or_else(|| DslError::at("workloads", "must be an array of workload blocks"))?;
+            for (i, w) in arr.iter().enumerate() {
+                workloads.push(parse_workload(w, &format!("workloads[{i}]"), &nodes)?);
+            }
+        }
+
+        let expect = match root.get("expect") {
+            Some(j) => Expect::from_json(j, "expect")?,
+            None => Expect::default(),
+        };
+
+        Ok(ScenarioSpec {
+            name,
+            seed,
+            horizon,
+            sched,
+            sched_period,
+            engine,
+            nodes,
+            faults,
+            storm,
+            workloads,
+            expect,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal(extra: &str) -> String {
+        format!(r#"{{"seed": 7{}{extra}}}"#, if extra.is_empty() { "" } else { "," })
+    }
+
+    fn parse_err(src: &str) -> DslError {
+        ScenarioSpec::parse(src).expect_err("must fail to parse")
+    }
+
+    #[test]
+    fn minimal_spec_defaults() {
+        let s = ScenarioSpec::parse(&minimal("")).unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.name, "scenario");
+        assert_eq!(s.horizon, 4 * 3600 * DUR_SEC);
+        assert_eq!(s.sched, SchedPolicy::Fifo);
+        assert_eq!(s.sched_period, 10 * DUR_SEC);
+        assert_eq!(s.engine, EngineSpec::Scalar);
+        assert_eq!(s.nodes, NodesSpec::Table1 { prebooted: false });
+        assert!(s.faults.is_empty() && s.workloads.is_empty() && s.storm.is_none());
+        assert!(s.expect.is_empty());
+    }
+
+    #[test]
+    fn missing_seed_is_an_error() {
+        let e = parse_err(r#"{"name": "x"}"#);
+        assert_eq!(e.path, "seed");
+        assert!(e.msg.contains("required"), "{e}");
+    }
+
+    #[test]
+    fn unknown_top_level_key_is_an_error() {
+        let e = parse_err(r#"{"seed": 1, "nods": {}}"#);
+        assert_eq!(e.path, "nods");
+        assert!(e.msg.contains("unknown key"), "{e}");
+        assert!(e.msg.contains("nodes"), "suggestion list must name valid keys: {e}");
+    }
+
+    #[test]
+    fn unknown_nested_key_reports_json_path() {
+        let e = parse_err(&minimal(r#""faults": [{"kind": "vm_crash", "at_secs": 1, "outage": 5}]"#));
+        assert_eq!(e.path, "faults[0].outage");
+    }
+
+    #[test]
+    fn bad_fault_kind_lists_valid_kinds() {
+        let e = parse_err(&minimal(r#""faults": [{"kind": "meteor", "at_secs": 1}]"#));
+        assert_eq!(e.path, "faults[0].kind");
+        assert!(e.msg.contains("vm_crash") && e.msg.contains("power_off"), "{e}");
+    }
+
+    #[test]
+    fn out_of_range_node_reference_is_an_error() {
+        let e = parse_err(&minimal(r#""faults": [{"kind": "vm_crash", "at_secs": 1, "target": "n99"}]"#));
+        assert_eq!(e.path, "faults[0]");
+        assert!(e.msg.contains("n99") && e.msg.contains("n01"), "{e}");
+    }
+
+    #[test]
+    fn fault_timing_must_be_exactly_one_mode() {
+        let e = parse_err(&minimal(r#""faults": [{"kind": "vm_crash", "at_secs": 1, "every_secs": 2, "count": 3}]"#));
+        assert!(e.msg.contains("exactly one"), "{e}");
+        let e = parse_err(&minimal(r#""faults": [{"kind": "vm_crash"}]"#));
+        assert!(e.msg.contains("exactly one"), "{e}");
+    }
+
+    #[test]
+    fn every_requires_count_and_seeded_requires_window() {
+        let e = parse_err(&minimal(r#""faults": [{"kind": "net_drop", "every_secs": 900}]"#));
+        assert_eq!(e.path, "faults[0].count");
+        let e = parse_err(&minimal(r#""faults": [{"kind": "net_drop", "seeded": 3}]"#));
+        assert_eq!(e.path, "faults[0].window_secs");
+        let e = parse_err(&minimal(
+            r#""faults": [{"kind": "net_drop", "seeded": 3, "window_secs": [100, 10]}]"#,
+        ));
+        assert!(e.msg.contains("lo must be <= hi"), "{e}");
+    }
+
+    #[test]
+    fn syntax_error_reports_line_and_column() {
+        let e = parse_err("{\n  \"seed\": 1,\n  \"name\": ?\n}");
+        assert!(e.path.starts_with("line 3:"), "{e}");
+        assert!(e.msg.contains("syntax error"), "{e}");
+    }
+
+    #[test]
+    fn trace_workload_validates_against_the_grid() {
+        let e = parse_err(&minimal(
+            r#""workloads": [{"kind": "trace", "compute_secs": 60, "ppn": 64}]"#,
+        ));
+        assert_eq!(e.path, "workloads[0].ppn");
+        assert!(e.msg.contains("12"), "widest table-1 node is 12 cores: {e}");
+        let e = parse_err(&minimal(
+            r#""workloads": [{"kind": "trace", "compute_secs": 60, "nodes": 9}]"#,
+        ));
+        assert_eq!(e.path, "workloads[0].nodes");
+    }
+
+    #[test]
+    fn trace_walltime_defaults_to_4x_compute() {
+        let s = ScenarioSpec::parse(&minimal(
+            r#""workloads": [{"kind": "trace", "compute_secs": 60}]"#,
+        ))
+        .unwrap();
+        match &s.workloads[0] {
+            WorkloadSpec::Trace { compute, walltime, count, nodes, ppn, .. } => {
+                assert_eq!(*compute, 60 * DUR_SEC);
+                assert_eq!(*walltime, 240 * DUR_SEC);
+                assert_eq!((*count, *nodes, *ppn), (1, 1, 1));
+            }
+            other => panic!("wrong workload: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fractional_seconds_round_to_ns() {
+        let s = ScenarioSpec::parse(&minimal(
+            r#""faults": [{"kind": "vm_crash", "at_secs": 1000.2, "outage_secs": 0.5}]"#,
+        ))
+        .unwrap();
+        match &s.faults[0].timing {
+            FaultTiming::At(t) => assert_eq!(*t, 1_000_200_000_000),
+            other => panic!("wrong timing: {other:?}"),
+        }
+        assert_eq!(s.faults[0].outage, 500_000_000);
+    }
+
+    #[test]
+    fn custom_nodes_and_engine_parse() {
+        let s = ScenarioSpec::parse(&minimal(
+            r#""nodes": {"count": 16, "cores": 4, "prebooted": true}, "engine": "threaded:3""#,
+        ))
+        .unwrap();
+        assert_eq!(s.engine, EngineSpec::Threaded(3));
+        assert_eq!(s.nodes.node_count(), 16);
+        assert_eq!(s.nodes.max_cores(), 4);
+        assert!(s.nodes.prebooted());
+        assert_eq!(s.nodes.names()[0], "n01");
+        assert_eq!(s.nodes.names()[15], "n16");
+    }
+
+    #[test]
+    fn table1_preset_rejects_custom_fields() {
+        let e = parse_err(&minimal(r#""nodes": {"preset": "table1", "count": 8}"#));
+        assert_eq!(e.path, "nodes.count");
+    }
+
+    #[test]
+    fn storm_requires_a_rate() {
+        let e = parse_err(&minimal(r#""storm": {"scale": 2}"#));
+        assert_eq!(e.path, "storm");
+        let s = ScenarioSpec::parse(&minimal(r#""storm": {"preset": "lab", "scale": 5}"#)).unwrap();
+        let plan = s.storm.unwrap().to_plan();
+        let want = FaultPlan::lab_default().scaled(5.0);
+        assert_eq!(plan.mtbf_power_off, want.mtbf_power_off);
+        assert_eq!(plan.mtbf_vm_crash, want.mtbf_vm_crash);
+        assert_eq!(plan.mean_outage, want.mean_outage);
+    }
+
+    #[test]
+    fn targets_all_and_lists_resolve() {
+        let s = ScenarioSpec::parse(&minimal(
+            r#""faults": [
+                {"kind": "net_drop", "at_secs": 5, "targets": "all"},
+                {"kind": "net_drop", "at_secs": 5, "targets": ["n02", "n03"]}
+            ]"#,
+        ))
+        .unwrap();
+        assert_eq!(s.faults[0].targets.len(), 4);
+        assert_eq!(s.faults[1].targets, vec!["n02".to_string(), "n03".to_string()]);
+    }
+}

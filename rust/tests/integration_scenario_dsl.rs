@@ -1,0 +1,179 @@
+//! Integration: the declarative scenario DSL and its chaos corpus.
+//!
+//! Holds the determinism contract for every committed file under
+//! `scenarios/` — run twice, byte-identical event log and report JSON —
+//! and proves the DSL subsumes the hand-coded scenario tests it
+//! replaced (`Scenario::scripted_faults`, the mixed trace/EP storm).
+
+use std::path::{Path, PathBuf};
+
+use gridlan::config::Config;
+use gridlan::coordinator::gridlan::Gridlan;
+use gridlan::coordinator::scenario::{run_scenario_logged, Scenario};
+use gridlan::host::faults::{FaultEvent, FaultKind, FaultPlan};
+use gridlan::obs::event::{ScenarioEvent, ScenarioLogger};
+use gridlan::rm::alloc::ResourceRequest;
+use gridlan::runtime::engine::EpEngine;
+use gridlan::scenario_dsl::{corpus_files, load_file, run_compiled, run_file};
+use gridlan::sim::clock::{DUR_MS, DUR_SEC};
+use gridlan::workload::ep::EpSlice;
+use gridlan::workload::trace::{JobPayload, TraceJob};
+
+fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("scenarios")
+}
+
+#[test]
+fn corpus_has_at_least_ten_scenarios() {
+    let files = corpus_files(&corpus_dir()).expect("committed corpus present");
+    assert!(files.len() >= 10, "chaos corpus shrank to {} files", files.len());
+}
+
+#[test]
+fn every_corpus_file_passes_expect_and_replays_byte_identically() {
+    // The whole-corpus extension of integration_obs's fault-storm replay
+    // test: each file runs twice — once through the file-path entry
+    // point, once from its compiled form — and both the JSONL event log
+    // and the pretty report JSON must match byte for byte.
+    for path in corpus_files(&corpus_dir()).expect("corpus present") {
+        let spec = load_file(&path).unwrap_or_else(|e| panic!("{e}"));
+        let a = run_file(&path).unwrap_or_else(|e| panic!("{e}"));
+        assert!(a.passed(), "{}:\n{}", path.display(), a.render_summary());
+        assert!(
+            !a.expect.checks.is_empty(),
+            "{}: corpus files must assert something",
+            path.display()
+        );
+        assert!(!a.events_jsonl.is_empty(), "{}: no events logged", path.display());
+        let b = run_compiled(&spec.compile());
+        assert_eq!(
+            a.events_jsonl,
+            b.events_jsonl,
+            "{}: replay event logs must be byte-identical",
+            path.display()
+        );
+        assert_eq!(
+            a.report_json,
+            b.report_json,
+            "{}: replay report JSON must be byte-identical",
+            path.display()
+        );
+        // The emitted log is a valid, round-trippable obs event stream.
+        let events = ScenarioEvent::parse_jsonl(&a.events_jsonl).expect("log parses");
+        let re: String = events.iter().map(|e| e.to_line() + "\n").collect();
+        assert_eq!(a.events_jsonl, re, "{}: log round-trips", path.display());
+    }
+}
+
+#[test]
+fn dsl_subsumes_the_scripted_fault_scenario() {
+    // scenarios/10_scripted_crash_requeue.json is the declarative twin of
+    // the in-code `Scenario::scripted_faults` crash test: a pre-booted
+    // Table-1 grid, one 2M-pair EP job at t=1000s, every client VM
+    // crashed 200ms into the run.  The DSL path must emit the exact same
+    // event log and report as the hand-built scenario — byte for byte.
+    let file_out =
+        run_file(&corpus_dir().join("10_scripted_crash_requeue.json")).expect("corpus file runs");
+
+    let mut g = Gridlan::build(Config::table1());
+    g.boot_all(0);
+    let at = 1000 * DUR_SEC;
+    let trace = vec![
+        EpSlice { proc: 0, pair_offset: 5_000, pair_count: 2_000_000 }
+            .trace_job(at, 3600 * DUR_SEC),
+    ];
+    let scripted: Vec<FaultEvent> = ["n01", "n02", "n03", "n04"]
+        .iter()
+        .map(|n| FaultEvent {
+            at: at + 200 * DUR_MS,
+            client: n.to_string(),
+            kind: FaultKind::VmCrash,
+            outage: 60 * DUR_SEC,
+        })
+        .collect();
+    let scenario = Scenario {
+        horizon: 2 * 3600 * DUR_SEC,
+        scripted_faults: scripted,
+        ..Default::default()
+    };
+    let run =
+        run_scenario_logged(g, trace, &scenario, EpEngine::scalar(), ScenarioLogger::memory());
+
+    assert_eq!(
+        file_out.events_jsonl,
+        run.logger.to_jsonl(),
+        "DSL run and hand-coded scenario must emit identical event logs"
+    );
+    assert_eq!(file_out.report_json, run.report.to_json().to_pretty() + "\n");
+    assert!(file_out.metrics.jobs_requeued >= 1, "{:?}", file_out.metrics);
+    assert!(file_out.metrics.watchdog_restarts > 0);
+}
+
+#[test]
+fn dsl_subsumes_the_mixed_trace_ep_storm() {
+    // scenarios/09_mixed_trace_ep_storm.json re-expresses the
+    // `mixed_trace_and_ep_jobs_survive_a_fault_storm_exactly` lifecycle
+    // test: 8 synthetic jobs + 12 real-compute EP slices under a
+    // power-off/VM-crash storm.  Metrics and merged tallies must match
+    // the hand-built run exactly.
+    let file_out =
+        run_file(&corpus_dir().join("09_mixed_trace_ep_storm.json")).expect("corpus file runs");
+
+    let mut trace: Vec<TraceJob> = (0..8u64)
+        .map(|i| TraceJob {
+            at: i * 120 * DUR_SEC,
+            owner: "itest".into(),
+            request: ResourceRequest { nodes: 1, ppn: 2 },
+            compute: 600 * DUR_SEC,
+            walltime: 2400 * DUR_SEC,
+            payload: JobPayload::Synthetic,
+        })
+        .collect();
+    for i in 0..12u64 {
+        trace.push(
+            EpSlice { proc: i as u32, pair_offset: i * 250_000, pair_count: 250_000 }
+                .trace_job((300 + i * 60) * DUR_SEC, 3600 * DUR_SEC),
+        );
+    }
+    let faults = FaultPlan {
+        mtbf_power_off: 1800 * DUR_SEC,
+        mtbf_net_drop: 0,
+        mtbf_vm_crash: 2400 * DUR_SEC,
+        mean_outage: 300 * DUR_SEC,
+    };
+    let scenario = Scenario { horizon: 6 * 3600 * DUR_SEC, faults, ..Default::default() };
+    let run = run_scenario_logged(
+        Gridlan::build(Config::table1()),
+        trace,
+        &scenario,
+        EpEngine::scalar(),
+        ScenarioLogger::memory(),
+    );
+
+    assert_eq!(file_out.metrics, run.report.metrics, "metrics must match the in-code twin");
+    let twin_total = run.report.ep_total();
+    assert_eq!(file_out.ep_total.nacc, twin_total.nacc);
+    assert_eq!(file_out.ep_total.q, twin_total.q);
+    assert_eq!(file_out.ep_total.pairs, twin_total.pairs);
+    assert_eq!(file_out.metrics.jobs_completed, 20);
+    assert_eq!(file_out.metrics.ep_pairs_executed, 12 * 250_000);
+    assert!(file_out.metrics.faults > 0 && file_out.metrics.jobs_requeued > 0);
+}
+
+#[test]
+fn file_errors_carry_the_path() {
+    let missing = corpus_dir().join("no_such_scenario.json");
+    let err = run_file(&missing).expect_err("missing file must error");
+    assert!(err.contains("no_such_scenario.json"), "{err}");
+
+    let dir = std::env::temp_dir().join("gridlan_dsl_itest");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, "{\n  \"seed\": 1,\n  \"faults\": [{\"kind\": \"meteor\"}]\n}").unwrap();
+    let err = load_file(&bad).expect_err("bad fault kind must error");
+    assert!(err.contains("bad.json"), "{err}");
+    assert!(err.contains("faults[0].kind"), "{err}");
+    assert!(err.contains("meteor"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
