@@ -1,5 +1,7 @@
 //! Bench A3: boot-storm scaling — how node count and TFTP block size
 //! affect PXE/nfsroot boot time (the §5 "iPXE/HTTP alternative" motivation).
+//! Includes a 100k-node analytic storm (`storm100k_*` series) that runs to
+//! completion in quick mode too.
 //!
 //! Run: `cargo bench --bench boot_storm`
 //! Writes the deterministic series to `BENCH_boot_storm.json`.

@@ -1,5 +1,7 @@
 //! Bench A1: scheduler ablation — FIFO (Torque 2.4 default) vs EASY
-//! backfill on the synthetic lab trace, clean and under faults.
+//! backfill on the synthetic lab trace, clean and under faults.  Ends with
+//! a 100k-node / 100k-job drain through the indexed scheduler hot path
+//! (`drain100k_*` series), fixed-size in every mode.
 //!
 //! Run: `cargo bench --bench sched_ablation`
 //! Writes the deterministic series to `BENCH_sched_ablation.json`.

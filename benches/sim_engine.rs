@@ -1,5 +1,9 @@
 //! L3 perf bench: the discrete-event core and the scheduler hot path —
-//! the targets from DESIGN.md §7 (≥1M events/s; sub-100µs qsub→decision).
+//! the targets from DESIGN.md §7 (≥10M events/s; sub-100µs scheduling at
+//! a 100k-deep backlog).  Runs the timing wheel against the retired
+//! `BinaryHeap` baseline on identical workloads: chain throughput, a
+//! mixed schedule/cancel/advance storm whose firing traces must match
+//! exactly (`storm_divergence` must stay 0), and a deep-backlog churn.
 //!
 //! Wall-clock rates stay on stdout; `BENCH_sim_engine.json` carries the
 //! deterministic event/cycle counters.  `GRIDLAN_BENCH_QUICK=1` shrinks

@@ -133,7 +133,7 @@ const HANDLER_PANIC_PATTERNS: &[&str] =
 
 /// The DES scheduling entry points whose closure arguments count as
 /// event-handler scope.
-const HANDLER_CALLS: &[&str] = &["schedule_at(", "schedule_in("];
+const HANDLER_CALLS: &[&str] = &["schedule_at(", "schedule_in(", "schedule_batch("];
 
 /// Run every rule over one scanned file.  Pragmas on the finding's line or
 /// the line above suppress it; each suppression marks the pragma used, and
@@ -221,7 +221,8 @@ pub fn check_file(file: &ScannedFile) -> Vec<Finding> {
 }
 
 /// Find `panic!`/`.unwrap()`-style calls lexically inside the closure
-/// argument of `schedule_at(...)` / `schedule_in(...)`.  Tracking is by
+/// argument of `schedule_at(...)` / `schedule_in(...)` /
+/// `schedule_batch(...)`.  Tracking is by
 /// parenthesis depth from the call's opening paren, so multi-line closures
 /// are covered; named handler functions called *from* a closure are not
 /// (they are ordinary code and may assert their own invariants).

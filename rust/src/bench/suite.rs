@@ -37,7 +37,7 @@ use crate::runtime::backend::{ComputeBackend, ScalarBackend};
 use crate::runtime::engine::EpEngine;
 use crate::runtime::threaded::ThreadedBackend;
 use crate::sim::clock::DUR_SEC;
-use crate::sim::Simulator;
+use crate::sim::{HeapSimulator, Simulator};
 use crate::util::rng::SplitMix64;
 use crate::util::table::{secs, Align, Table};
 use crate::vm::cpu::CpuModel;
@@ -117,6 +117,7 @@ pub fn run_boot_storm() -> BenchHarness {
     let cfg = Config::table1();
     let mut h = BenchHarness::new("boot_storm", cfg.seed);
     h.param_str("fleet_sizes", "1,4,8,16,32,64");
+    h.param_u64("storm100k_nodes", 100_000);
     h.param_u64("blksize_default", BLKSIZE_DEFAULT as u64);
     h.param_u64("blksize_pxe", BLKSIZE_PXE as u64);
 
@@ -156,6 +157,42 @@ pub fn run_boot_storm() -> BenchHarness {
         h.sample(&format!("fleet_mean_{n}"), "s", total as f64 / n as f64 / 1e9);
     }
     print!("{}", t.render());
+
+    // 100k-node storm, analytic: per-node plans straight through
+    // `BootPlan::compute` (the same arithmetic the scenario runner uses),
+    // skipping the full grid build.  Deterministic, so it runs — and feeds
+    // the JSON — in quick mode too.
+    {
+        let nfs = NfsExport::debian();
+        let tftp = TftpServer::new(BLKSIZE_PXE);
+        let n: u32 = 100_000;
+        let t0 = std::time::Instant::now();
+        let mut slowest = 0u64;
+        let mut total = 0u64;
+        for i in 0..n {
+            let hv = match i % 3 {
+                0 => HypervisorKind::QemuKvm,
+                1 => HypervisorKind::VirtualBox,
+                _ => HypervisorKind::PureQemu,
+            };
+            let params = BootParams {
+                one_way_us: 500.0 + 25.0 * (i % 8) as f64,
+                us_per_byte: 0.008,
+                kernel_init_ms: 2500.0 + 100.0 * (i % 5) as f64,
+            };
+            let p = BootPlan::compute(&Hypervisor::new(hv), &tftp, &nfs, &params).total();
+            slowest = slowest.max(p);
+            total += p;
+        }
+        println!(
+            "\n100k-node analytic storm: slowest {}  mean {}  ({:.0} ms wall)",
+            secs(slowest as f64 / 1e9),
+            secs(total as f64 / n as f64 / 1e9),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        h.sample("storm100k_slowest", "s", slowest as f64 / 1e9);
+        h.sample("storm100k_mean", "s", total as f64 / n as f64 / 1e9);
+    }
 
     // Ablation: TFTP block size x hypervisor kernel-init penalty.
     println!("\nTFTP blksize x hypervisor ablation (n01-like node, 700 µs one-way):");
@@ -469,6 +506,8 @@ pub fn run_sched_ablation() -> BenchHarness {
     let mut h = BenchHarness::new("sched_ablation", 1234);
     h.param_str("policies", "fifo,backfill");
     h.param_str("fault_combos", "clean,labx4");
+    h.param_u64("drain100k_nodes", 100_000);
+    h.param_u64("drain100k_jobs", 100_000);
 
     let gen = TraceGenerator::lab_day();
     let mut t = Table::new(&[
@@ -567,6 +606,50 @@ pub fn run_sched_ablation() -> BenchHarness {
         h.sample(&format!("{key}_mean_wait"), "s", report.metrics.mean_wait_secs());
         h.sample(&format!("{key}_makespan"), "s", report.metrics.makespan as f64 / 1e9);
     }
+
+    // 100k-node / 100k-job drain through the indexed hot path.  Fixed
+    // size in every mode (the cycle/start counters feed the JSON); only
+    // the wall-clock report stays on stdout.  DESIGN.md §7 target:
+    // sub-100 µs per scheduling decision at this scale.
+    {
+        let nodes: u32 = 100_000;
+        let jobs: usize = 100_000;
+        let mut s = PbsServer::new();
+        for i in 0..nodes {
+            let name = format!("n{i:06}");
+            s.register_node(&name, 8, NodePool::Gridlan);
+            s.node_up(&name);
+        }
+        let script =
+            PbsScript::parse("#PBS -q gridlan\n#PBS -l nodes=1:ppn=8,walltime=00:10:00\n./x\n")
+                .unwrap();
+        for i in 0..jobs {
+            s.qsub(&script, "u", "", i as u64).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        let mut cycles = 0u64;
+        let mut started = 0u64;
+        loop {
+            let d = s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1_000_000);
+            if d.is_empty() {
+                break;
+            }
+            cycles += 1;
+            started += d.len() as u64;
+            for (id, _) in d {
+                s.complete(id, 0, 2_000_000);
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "\n100k-node drain: {started} jobs over {cycles} cycle(s) in {:.0} ms \
+             ({:.1} µs/job, target <100 µs)",
+            dt * 1e3,
+            dt * 1e6 / started.max(1) as f64
+        );
+        h.sample("drain100k_cycles", "count", cycles as f64);
+        h.sample("drain100k_started", "count", started as f64);
+    }
     h
 }
 
@@ -596,6 +679,107 @@ fn run_chains(chains: usize, limit: u64) -> u64 {
     sim.executed()
 }
 
+fn heap_chain_tick(s: &mut HeapSimulator<ChainWorld>, w: &mut ChainWorld) {
+    w.count += 1;
+    if w.count < w.limit {
+        s.schedule_in(1_000, heap_chain_tick);
+    }
+}
+
+fn run_chains_heap(chains: usize, limit: u64) -> u64 {
+    let mut sim = HeapSimulator::new();
+    let mut w = ChainWorld { count: 0, limit };
+    for _ in 0..chains {
+        sim.schedule_at(0, heap_chain_tick);
+    }
+    sim.run_to_completion(&mut w);
+    sim.executed()
+}
+
+/// One operation of the deterministic mixed storm both engines replay.
+enum StormOp {
+    /// Schedule an event `delay` ns out, tagged `key`.
+    Schedule { delay: u64, key: u64 },
+    /// Cancel the `nth % live` previously issued event id.
+    Cancel { nth: usize },
+    /// `run_until(now + dt)`.
+    Advance { dt: u64 },
+}
+
+fn storm_ops(n: usize) -> Vec<StormOp> {
+    let mut rng = SplitMix64::new(9);
+    let mut ops = Vec::with_capacity(n);
+    for k in 0..n as u64 {
+        match rng.next_u64() % 10 {
+            0..=5 => {
+                // Mostly near-future; every ~64th lands past the 2^48 ns
+                // wheel horizon to exercise the overflow level.
+                let delay = if rng.next_u64() % 64 == 0 {
+                    1u64 << 49
+                } else {
+                    rng.next_u64() % 10_000_000
+                };
+                ops.push(StormOp::Schedule { delay, key: k });
+            }
+            6 | 7 => ops.push(StormOp::Cancel { nth: rng.next_u64() as usize }),
+            _ => ops.push(StormOp::Advance { dt: rng.next_u64() % 5_000_000 }),
+        }
+    }
+    ops
+}
+
+/// (executed, final now, firing trace) of the storm on the wheel engine.
+fn storm_wheel(ops: &[StormOp]) -> (u64, u64, Vec<u64>) {
+    let mut sim: Simulator<Vec<u64>> = Simulator::new();
+    let mut fired: Vec<u64> = Vec::new();
+    let mut ids = Vec::new();
+    for op in ops {
+        match *op {
+            StormOp::Schedule { delay, key } => {
+                ids.push(sim.schedule_in(delay, move |_s, w: &mut Vec<u64>| w.push(key)));
+            }
+            StormOp::Cancel { nth } => {
+                if !ids.is_empty() {
+                    let id = ids[nth % ids.len()];
+                    sim.cancel(id);
+                }
+            }
+            StormOp::Advance { dt } => {
+                let until = sim.now().saturating_add(dt);
+                sim.run_until(&mut fired, until);
+            }
+        }
+    }
+    sim.run_to_completion(&mut fired);
+    (sim.executed(), sim.now(), fired)
+}
+
+/// The same storm on the retired `BinaryHeap` baseline.
+fn storm_heap(ops: &[StormOp]) -> (u64, u64, Vec<u64>) {
+    let mut sim: HeapSimulator<Vec<u64>> = HeapSimulator::new();
+    let mut fired: Vec<u64> = Vec::new();
+    let mut ids = Vec::new();
+    for op in ops {
+        match *op {
+            StormOp::Schedule { delay, key } => {
+                ids.push(sim.schedule_in(delay, move |_s, w: &mut Vec<u64>| w.push(key)));
+            }
+            StormOp::Cancel { nth } => {
+                if !ids.is_empty() {
+                    let id = ids[nth % ids.len()];
+                    sim.cancel(id);
+                }
+            }
+            StormOp::Advance { dt } => {
+                let until = sim.now().saturating_add(dt);
+                sim.run_until(&mut fired, until);
+            }
+        }
+    }
+    sim.run_to_completion(&mut fired);
+    (sim.executed(), sim.now(), fired)
+}
+
 /// L3 perf bench: the discrete-event core and the scheduler hot path.
 /// Wall-clock rates stay on stdout; the JSON carries the deterministic
 /// event/cycle counters and the simulated ping RTT.
@@ -606,8 +790,11 @@ pub fn run_sim_engine() -> BenchHarness {
     h.param_u64("verify_chain_limit", 100_000);
     h.param_u64("verify_chains", 8);
     h.param_u64("ping_probes", 200);
+    h.param_u64("storm_ops", 4_000);
+    h.param_u64("deep_backlog", 100_000);
 
-    // Self-rescheduling event chains: pure engine overhead (wall clock).
+    // Self-rescheduling event chains: pure engine overhead (wall clock),
+    // timing wheel vs the retired BinaryHeap core on the same workload.
     let n: u64 = harness::pick(2_000_000, 200_000);
     let mut sim = Simulator::new();
     let mut w = ChainWorld { count: 0, limit: n };
@@ -618,13 +805,71 @@ pub fn run_sim_engine() -> BenchHarness {
     sim.run_to_completion(&mut w);
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "event engine: {} events in {:.3}s = {:.2}M events/s  (target: >=1M/s)",
+        "event engine (wheel): {} events in {:.3}s = {:.2}M events/s  (target: >=10M/s)",
         sim.executed(),
         dt,
         sim.executed() as f64 / dt / 1e6
     );
-    // Fixed-size run for the JSON (independent of quick mode).
+    let mut hsim = HeapSimulator::new();
+    let mut hwld = ChainWorld { count: 0, limit: n };
+    for _ in 0..64 {
+        hsim.schedule_at(0, heap_chain_tick);
+    }
+    let t1 = std::time::Instant::now();
+    hsim.run_to_completion(&mut hwld);
+    let hdt = t1.elapsed().as_secs_f64();
+    println!(
+        "heap baseline:        {} events in {:.3}s = {:.2}M events/s  (wheel speedup {:.2}x)",
+        hsim.executed(),
+        hdt,
+        hsim.executed() as f64 / hdt / 1e6,
+        hdt / dt.max(1e-12)
+    );
+    // Fixed-size runs for the JSON (independent of quick mode): both
+    // engines must execute the identical count.
     h.sample("engine_events", "count", run_chains(8, 100_000) as f64);
+    h.sample("heap_engine_events", "count", run_chains_heap(8, 100_000) as f64);
+
+    // Mixed schedule/cancel/advance storm replayed on both engines.  The
+    // firing traces and clock trajectories must be identical — the JSON
+    // records the count and a divergence flag that must stay 0.
+    let ops = storm_ops(4_000);
+    let (we, wnow, wtrace) = storm_wheel(&ops);
+    let (he, hnow, htrace) = storm_heap(&ops);
+    let diverged = if we == he && wnow == hnow && wtrace == htrace { 0.0 } else { 1.0 };
+    println!(
+        "storm parity: {we} events to t={wnow} ns; heap-vs-wheel divergence: {}",
+        if diverged == 0.0 { "none" } else { "MISMATCH" }
+    );
+    h.sample("storm_events", "count", we as f64);
+    h.sample("storm_final_time", "ns", wnow as f64);
+    h.sample("storm_divergence", "count", diverged);
+
+    // Scheduling latency against a deep backlog: 100k pending events,
+    // then timed schedule+cancel churn (wall clock only; the pending
+    // count after the churn feeds the JSON).
+    {
+        let mut sim: Simulator<Vec<u64>> = Simulator::new();
+        let mut rng = SplitMix64::new(11);
+        let mut ids = Vec::with_capacity(100_000);
+        for _ in 0..100_000u32 {
+            ids.push(sim.schedule_in(rng.next_u64() % (3_600 * DUR_SEC), |_s, _w| {}));
+        }
+        let churn: usize = harness::pick(100_000, 10_000);
+        let t0 = std::time::Instant::now();
+        for i in 0..churn {
+            let id = sim.schedule_in(rng.next_u64() % (3_600 * DUR_SEC), |_s, _w| {});
+            sim.cancel(ids[i % ids.len()]);
+            ids[i % ids.len()] = id;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "deep backlog: {churn} schedule+cancel pairs at 100k pending: {:.2} µs/pair \
+             (target <100 µs)",
+            dt * 1e6 / churn as f64
+        );
+        h.sample("deep_backlog_pending", "count", sim.pending() as f64);
+    }
 
     // qsub -> scheduling decision latency at realistic queue depths.
     for depth in [1usize, 10, 100, 1000] {

@@ -30,6 +30,10 @@ pub struct Gridlan {
     pub server_dev: DeviceId,
     pub hub: VpnHub,
     pub clients: Vec<ClientAgent>,
+    /// Name → position in `clients` (and `config.clients`, which share
+    /// insertion order).  Keeps per-client lookups O(log n): at 100k-node
+    /// scenarios a linear `find` per boot/poll turns quadratic.
+    client_idx: BTreeMap<String, usize>,
     pub client_dev: BTreeMap<String, DeviceId>,
     pub nodes: BTreeMap<String, VmNode>,
     pub pbs: PbsServer,
@@ -70,6 +74,7 @@ impl Gridlan {
         // ---- VPN hub + client agents + VM nodes
         let hub = VpnHub::new(server_dev, rng.next_u64());
         let mut clients = Vec::new();
+        let mut client_idx = BTreeMap::new();
         let mut nodes = BTreeMap::new();
         for c in &config.clients {
             let mut agent = ClientAgent::new(&c.name, c.os, c.cpu.clone());
@@ -77,6 +82,9 @@ impl Gridlan {
                 agent = agent.with_hypervisor(hv);
             }
             nodes.insert(c.name.clone(), VmNode::new(&c.name, &c.name, c.cpu.cores));
+            // `or_insert` keeps the first occurrence, matching the old
+            // linear `find` on a (malformed) duplicate-name config.
+            client_idx.entry(c.name.clone()).or_insert(clients.len());
             clients.push(agent);
         }
         // ---- resource manager
@@ -107,6 +115,7 @@ impl Gridlan {
             server_dev,
             hub,
             clients,
+            client_idx,
             client_dev,
             nodes,
             pbs,
@@ -128,16 +137,21 @@ impl Gridlan {
     pub fn scheduler(&self) -> Box<dyn Scheduler> {
         match self.config.sched {
             SchedPolicy::Fifo => Box::new(FifoScheduler),
-            SchedPolicy::Backfill => Box::new(BackfillScheduler),
+            SchedPolicy::Backfill => Box::new(BackfillScheduler::new()),
         }
     }
 
     pub fn client(&self, name: &str) -> Option<&ClientAgent> {
-        self.clients.iter().find(|c| c.name == name)
+        self.client_idx.get(name).map(|&i| &self.clients[i])
+    }
+
+    pub fn client_mut(&mut self, name: &str) -> Option<&mut ClientAgent> {
+        self.client_idx.get(name).map(|&i| &mut self.clients[i])
     }
 
     fn client_config(&self, name: &str) -> &ClientConfig {
-        self.config.clients.iter().find(|c| c.name == name).expect("unknown client")
+        let i = *self.client_idx.get(name).expect("unknown client");
+        &self.config.clients[i]
     }
 
     /// Speed-model pool view of this deployment.
@@ -152,7 +166,7 @@ impl Gridlan {
         let dev = *self.client_dev.get(name).ok_or("unknown client")?;
         let key = self.hub.provision(name); // admin pre-provisioned
         self.hub.connect(name, &key, dev, TunnelCost::default())?;
-        if let Some(c) = self.clients.iter_mut().find(|c| c.name == name) {
+        if let Some(c) = self.client_mut(name) {
             c.vpn_connected = true;
         }
         Ok(())

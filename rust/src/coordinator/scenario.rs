@@ -25,14 +25,15 @@ use crate::host::watchdog::{Watchdog, WatchdogAction};
 use crate::rm::job::JobId;
 use crate::rm::mom::Mom;
 use crate::rm::queue::NodePool;
+use crate::rm::sched::Scheduler;
 use crate::rm::script::PbsScript;
 use crate::runtime::engine::EpEngine;
 use crate::sim::clock::{SimTime, DUR_SEC};
-use crate::sim::Simulator;
+use crate::sim::{Handler, Simulator};
 use crate::vm::node::NodeState;
 use crate::workload::ep::{EpClass, EpJob, EpSlice, EpTally};
 use crate::workload::trace::{JobPayload, TraceJob};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Reference core rate used to normalize trace job compute times
 /// (Mpairs/s; a mid-range Table-1 core).
@@ -112,6 +113,9 @@ pub struct ScenarioRun {
 
 struct World {
     g: Gridlan,
+    /// Policy object built once per run: the cached backfill scheduler
+    /// carries its shadow memo across cycles.
+    sched: Box<dyn Scheduler>,
     m: Metrics,
     engine: EpEngine,
     watchdogs: BTreeMap<String, Watchdog>,
@@ -155,8 +159,10 @@ pub fn run_scenario_logged(
     let mut sim: Simulator<World> = Simulator::new();
     let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
     let watchdogs = names.iter().map(|n| (n.clone(), Watchdog::new(n))).collect();
+    let sched = g.scheduler();
     let mut world = World {
         g,
+        sched,
         m: Metrics::default(),
         engine,
         watchdogs,
@@ -176,14 +182,13 @@ pub fn run_scenario_logged(
         }
     }
 
-    // --- job submissions.
-    for (i, tj) in trace.iter().enumerate() {
-        let tj = tj.clone();
-        world.m.jobs_submitted += 1;
-        sim.schedule_at(tj.at, move |s, w: &mut World| {
-            submit(s, w, &tj, i);
-        });
-    }
+    // --- job submissions (batched: one slab reserve for the whole trace).
+    world.m.jobs_submitted += trace.len() as u64;
+    sim.schedule_batch(trace.into_iter().enumerate().map(|(i, tj)| {
+        let at = tj.at;
+        let h: Handler<World> = Box::new(move |s, w| submit(s, w, &tj, i));
+        (at, h)
+    }));
 
     // --- periodic machinery.
     let period = scenario.sched_period;
@@ -201,12 +206,13 @@ pub fn run_scenario_logged(
     let mut frng = world.g.rng.fork();
     let mut faults = scenario.faults.generate(&names, scenario.horizon, &mut frng);
     faults.extend(scenario.scripted_faults.iter().cloned());
-    for ev in faults {
-        world.m.faults += 1;
-        sim.schedule_at(ev.at, move |s, w: &mut World| {
-            apply_fault(s, w, &ev.client, ev.kind, ev.outage);
-        });
-    }
+    world.m.faults += faults.len() as u64;
+    sim.schedule_batch(faults.into_iter().map(|ev| {
+        let at = ev.at;
+        let h: Handler<World> =
+            Box::new(move |s, w| apply_fault(s, w, &ev.client, ev.kind, ev.outage));
+        (at, h)
+    }));
 
     // --- run: until horizon, then drain (cap at 4x horizon).
     sim.run_until(&mut world, scenario.horizon);
@@ -394,9 +400,8 @@ fn sched_tick(sim: &mut Simulator<World>, w: &mut World, period: SimTime) {
 }
 
 fn run_sched(sim: &mut Simulator<World>, w: &mut World) {
-    let scheduler = w.g.scheduler();
     let now = sim.now();
-    let decisions = w.g.pbs.schedule_cycle(NodePool::Gridlan, scheduler.as_ref(), now);
+    let decisions = w.g.pbs.schedule_cycle(NodePool::Gridlan, w.sched.as_ref(), now);
     for (id, alloc) in decisions {
         let payload = w.g.pbs.job(id).map(|j| j.payload.clone()).unwrap_or_default();
         w.logger.log(
@@ -480,15 +485,17 @@ fn job_done(sim: &mut Simulator<World>, w: &mut World, id: JobId, started: SimTi
 fn monitor_sweep(sim: &mut Simulator<World>, w: &mut World) {
     let now = sim.now();
     // A node answers if its VM is Up, the tunnel is connected, and the
-    // client has power.
-    let mut responding = Vec::new();
+    // client has power.  Set lookup, not a linear scan: the sweep calls
+    // the probe once per tracked node, and at 100k-node scenarios an
+    // O(n) probe would make each sweep quadratic.
+    let mut responding = BTreeSet::new();
     for c in &w.g.clients {
         let node_up = w.g.nodes.get(&c.name).map(|n| n.state.is_running()).unwrap_or(false);
         if c.powered && w.g.hub.is_connected(&c.name) && node_up {
-            responding.push(c.name.clone());
+            responding.insert(c.name.clone());
         }
     }
-    w.g.pinger.sweep(now, |n| responding.iter().any(|r| r == n));
+    w.g.pinger.sweep(now, |n| responding.contains(n));
     sim.schedule_in(300 * DUR_SEC, monitor_sweep);
 }
 
@@ -572,7 +579,7 @@ fn apply_fault(
     };
     match kind {
         FaultKind::ClientPowerOff => {
-            if let Some(c) = w.g.clients.iter_mut().find(|c| c.name == client) {
+            if let Some(c) = w.g.client_mut(client) {
                 if !c.powered {
                     return; // already down
                 }
@@ -589,7 +596,7 @@ fn apply_fault(
             // Owner turns it back on after the outage; VM boots again.
             let c = client.to_string();
             sim.schedule_in(outage, move |s, w: &mut World| {
-                if let Some(cl) = w.g.clients.iter_mut().find(|cl| cl.name == c) {
+                if let Some(cl) = w.g.client_mut(&c) {
                     cl.powered = true;
                 }
                 let _ = w.g.connect_client(&c);
@@ -602,7 +609,7 @@ fn apply_fault(
         }
         FaultKind::NetworkDrop => {
             w.g.hub.disconnect(client);
-            if let Some(c) = w.g.clients.iter_mut().find(|c| c.name == client) {
+            if let Some(c) = w.g.client_mut(client) {
                 c.vpn_connected = false;
             }
             waste_and_requeue(w, now);
@@ -737,8 +744,10 @@ mod tests {
         let g = Gridlan::build(Config::table1());
         let names: Vec<String> = g.config.clients.iter().map(|c| c.name.clone()).collect();
         let watchdogs = names.iter().map(|n| (n.clone(), Watchdog::new(n))).collect();
+        let sched = g.scheduler();
         let mut w = World {
             g,
+            sched,
             m: Metrics::default(),
             engine: EpEngine::scalar(),
             watchdogs,

@@ -2,7 +2,11 @@
 
 use crate::sim::clock::{from_us_f64, SimTime};
 use crate::util::rng::SplitMix64;
+use std::cell::RefCell;
 use std::collections::{BTreeMap, VecDeque};
+
+/// Sentinel in a BFS parent forest: not reached from the source.
+const NO_PARENT: usize = usize::MAX;
 
 /// Index of a device in the network graph.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -77,6 +81,16 @@ pub struct Network {
     devices: Vec<Device>,
     adj: Vec<Vec<Edge>>,
     by_name: BTreeMap<String, usize>,
+    /// Link profile per directed pair, mirroring `adj` (the first link
+    /// wins on parallel edges, like the linear scan it replaces).  A star
+    /// hub's adjacency list holds every client, so a per-window scan in
+    /// `delay_model` would be O(clients) per packet.
+    edge_idx: BTreeMap<(usize, usize), LinkProfile>,
+    /// Memoized BFS parent forests keyed by source device.  One forest
+    /// answers every `path`/`hops` query from that source in O(path);
+    /// without it a 100k-node boot storm pays a full-graph BFS per boot.
+    /// Cleared on any topology mutation.
+    bfs_cache: RefCell<BTreeMap<usize, Vec<usize>>>,
     /// Per-path gaussian jitter sigma (µs) applied to one-way samples.
     pub jitter_sigma_us: f64,
 }
@@ -95,6 +109,7 @@ impl Network {
         self.devices.push(Device { name: name.to_string(), kind });
         self.adj.push(Vec::new());
         self.by_name.insert(name.to_string(), id);
+        self.bfs_cache.borrow_mut().clear();
         DeviceId(id)
     }
 
@@ -119,45 +134,56 @@ impl Network {
         assert_ne!(a, b, "self-link");
         self.adj[a.0].push(Edge { to: b.0, profile });
         self.adj[b.0].push(Edge { to: a.0, profile });
+        self.edge_idx.entry((a.0, b.0)).or_insert(profile);
+        self.edge_idx.entry((b.0, a.0)).or_insert(profile);
+        self.bfs_cache.borrow_mut().clear();
     }
 
-    /// BFS shortest path (device ids, inclusive of endpoints).
+    /// BFS shortest path (device ids, inclusive of endpoints).  The
+    /// parent forest is memoized per source: the tree is identical to
+    /// what an early-exit BFS would build (parents are fixed at first
+    /// discovery), so the returned path is bit-identical to the
+    /// uncached version.
     pub fn path(&self, from: DeviceId, to: DeviceId) -> Option<Vec<DeviceId>> {
         if from == to {
             return Some(vec![from]);
         }
-        let mut prev: Vec<Option<usize>> = vec![None; self.devices.len()];
+        let mut cache = self.bfs_cache.borrow_mut();
+        let parent = cache.entry(from.0).or_insert_with(|| self.bfs_parents(from.0));
+        if to.0 >= parent.len() || parent[to.0] == NO_PARENT {
+            return None;
+        }
+        let mut path = vec![to.0];
+        let mut cur = to.0;
+        while cur != from.0 {
+            cur = parent[cur];
+            path.push(cur);
+        }
+        path.reverse();
+        Some(path.into_iter().map(DeviceId).collect())
+    }
+
+    /// Full BFS from `from`, same adjacency order as the query path.
+    fn bfs_parents(&self, from: usize) -> Vec<usize> {
+        let mut parent = vec![NO_PARENT; self.devices.len()];
         let mut seen = vec![false; self.devices.len()];
         let mut q = VecDeque::new();
-        seen[from.0] = true;
-        q.push_back(from.0);
+        seen[from] = true;
+        q.push_back(from);
         while let Some(u) = q.pop_front() {
             for e in &self.adj[u] {
                 if !seen[e.to] {
                     seen[e.to] = true;
-                    prev[e.to] = Some(u);
-                    if e.to == to.0 {
-                        let mut path = vec![to.0];
-                        let mut cur = u;
-                        loop {
-                            path.push(cur);
-                            match prev[cur] {
-                                Some(p) => cur = p,
-                                None => break,
-                            }
-                        }
-                        path.reverse();
-                        return Some(path.into_iter().map(DeviceId).collect());
-                    }
+                    parent[e.to] = u;
                     q.push_back(e.to);
                 }
             }
         }
-        None
+        parent
     }
 
     fn edge_between(&self, a: usize, b: usize) -> Option<LinkProfile> {
-        self.adj[a].iter().find(|e| e.to == b).map(|e| e.profile)
+        self.edge_idx.get(&(a, b)).copied()
     }
 
     /// Analytic one-way delay decomposition for `bytes` from `from` to `to`.

@@ -1,7 +1,26 @@
 //! Resource requests and allocations: matching `nodes=X:ppn=Y` against the
 //! node registry.
+//!
+//! Two allocator paths produce bit-identical decisions:
+//!
+//! * [`match_request`] — the slice path, for callers holding an ad-hoc
+//!   `&[FreeNode]` (shadow-time projections, tests).  It no longer clones
+//!   and fully sorts the node list per call: a single scan finds the
+//!   biggest eligible node and returns early when every chunk fits there,
+//!   and the general case sorts *indices* in thread-local scratch storage.
+//! * [`FreePool::match_request`] — the indexed path used by the server's
+//!   hot scheduling loop: an incrementally maintained ordered index
+//!   (`free cores → sorted node names`) updated on alloc/free/fault, so a
+//!   match walks only the eligible buckets in O(log n + nodes granted)
+//!   instead of sorting the whole grid.
+//!
+//! Both walk nodes in (free cores descending, name ascending) order and
+//! pack `floor(free/ppn)` chunks per node, so for any pool state the two
+//! paths return the same `Allocation`.
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// What a job asks for (`#PBS -l nodes=X:ppn=Y`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,31 +69,258 @@ pub struct FreeNode {
     pub free_cores: u32,
 }
 
+thread_local! {
+    /// Scratch index buffer for the slice allocator's general path, reused
+    /// across calls so a scheduling cycle doesn't allocate per decision.
+    static SCRATCH: RefCell<Vec<usize>> = const { RefCell::new(Vec::new()) };
+}
+
 /// First-fit decreasing match of a request against free nodes.  Torque
 /// semantics: each requested "node" needs `ppn` cores on a single node;
 /// multiple requested nodes may land on the same physical node if it has
 /// capacity (like Torque with `np` overcommit disabled, chunks packed).
 /// Returns None if unsatisfiable.
 pub fn match_request(request: &ResourceRequest, free: &[FreeNode]) -> Option<Allocation> {
-    let mut nodes: Vec<FreeNode> = free.iter().filter(|n| n.free_cores >= request.ppn).cloned().collect();
-    // Big nodes first: minimizes fragmentation; name tiebreak = determinism.
-    nodes.sort_by(|a, b| b.free_cores.cmp(&a.free_cores).then(a.name.cmp(&b.name)));
     let mut alloc = Allocation::default();
     let mut remaining = request.nodes;
-    for node in &mut nodes {
-        while remaining > 0 && node.free_cores >= request.ppn {
-            *alloc.cores.entry(node.name.clone()).or_insert(0) += request.ppn;
-            node.free_cores -= request.ppn;
-            remaining -= 1;
+    if remaining == 0 {
+        return Some(alloc);
+    }
+    // One scan for the biggest eligible node (free desc, name asc — the
+    // head of the historic full sort).
+    let mut best: Option<&FreeNode> = None;
+    for n in free {
+        if n.free_cores < request.ppn {
+            continue;
         }
-        if remaining == 0 {
-            break;
+        let better = match best {
+            None => true,
+            Some(b) => {
+                n.free_cores > b.free_cores
+                    || (n.free_cores == b.free_cores && n.name < b.name)
+            }
+        };
+        if better {
+            best = Some(n);
         }
     }
+    let best = best?;
+    if request.ppn == 0 {
+        // Degenerate zero-width chunks: historically every chunk packed
+        // onto the first sorted node, granting zero cores.
+        alloc.cores.insert(best.name.clone(), 0);
+        return Some(alloc);
+    }
+    // Early return: the whole request fits the best node, no sort needed.
+    if best.free_cores / request.ppn >= remaining {
+        alloc.cores.insert(best.name.clone(), remaining * request.ppn);
+        return Some(alloc);
+    }
+    // General path: order eligible node *indices* in reusable scratch.
+    SCRATCH.with(|cell| {
+        let order = &mut *cell.borrow_mut();
+        order.clear();
+        order.extend(
+            free.iter()
+                .enumerate()
+                .filter(|(_, n)| n.free_cores >= request.ppn)
+                .map(|(i, _)| i),
+        );
+        // Big nodes first: minimizes fragmentation; name tiebreak =
+        // determinism.
+        order.sort_by(|&a, &b| {
+            free[b]
+                .free_cores
+                .cmp(&free[a].free_cores)
+                .then(free[a].name.cmp(&free[b].name))
+        });
+        for &i in order.iter() {
+            let chunks = (free[i].free_cores / request.ppn).min(remaining);
+            *alloc.cores.entry(free[i].name.clone()).or_insert(0) += chunks * request.ppn;
+            remaining -= chunks;
+            if remaining == 0 {
+                break;
+            }
+        }
+    });
     if remaining == 0 {
         Some(alloc)
     } else {
         None
+    }
+}
+
+static NEXT_POOL_TAG: AtomicU64 = AtomicU64::new(1);
+
+/// Incrementally maintained free-core index over one node pool.
+///
+/// Invariants:
+/// * `by_node` (name → free cores) is the source of truth; `by_free`
+///   contains exactly the inverse mapping, with no empty buckets.
+/// * `version` bumps on **every** mutating call, even logical no-ops
+///   (`touch`, a zero-core alloc), so any memo keyed on `(tag, version)` —
+///   the backfill shadow cache — can never see a stale hit.
+/// * `tag` is unique per pool instance (process-lifetime counter), so
+///   memos can't confuse two pools that happen to share version numbers.
+#[derive(Debug)]
+pub struct FreePool {
+    tag: u64,
+    version: u64,
+    by_free: BTreeMap<u32, BTreeSet<String>>,
+    by_node: BTreeMap<String, u32>,
+}
+
+impl Default for FreePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FreePool {
+    pub fn new() -> Self {
+        Self {
+            tag: NEXT_POOL_TAG.fetch_add(1, Ordering::Relaxed),
+            version: 0,
+            by_free: BTreeMap::new(),
+            by_node: BTreeMap::new(),
+        }
+    }
+
+    /// Instance identity for memo keys.
+    pub fn tag(&self) -> u64 {
+        self.tag
+    }
+
+    /// Mutation counter for memo keys.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_node.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_node.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<u32> {
+        self.by_node.get(name).copied()
+    }
+
+    /// Insert a node or update its free-core count.
+    pub fn set(&mut self, name: &str, free_cores: u32) {
+        self.version += 1;
+        match self.by_node.get(name).copied() {
+            Some(from) => self.rebucket(name, from, free_cores),
+            None => {
+                self.by_node.insert(name.to_string(), free_cores);
+                self.by_free.entry(free_cores).or_default().insert(name.to_string());
+            }
+        }
+    }
+
+    /// Drop a node from the index (offline / faulted).
+    pub fn remove(&mut self, name: &str) {
+        self.version += 1;
+        if let Some(from) = self.by_node.remove(name) {
+            self.unbucket(name, from);
+        }
+    }
+
+    /// Subtract an allocation's cores from the indexed nodes.
+    pub fn apply_alloc(&mut self, alloc: &Allocation) {
+        self.version += 1;
+        for (name, &cores) in &alloc.cores {
+            if let Some(from) = self.by_node.get(name).copied() {
+                self.rebucket(name, from, from.saturating_sub(cores));
+            }
+        }
+    }
+
+    /// Return an allocation's cores to the indexed nodes.  Nodes no longer
+    /// indexed (gone offline since the grant) are skipped — the server
+    /// re-`set`s them on power-up from its own busy-core accounting.
+    pub fn release_alloc(&mut self, alloc: &Allocation) {
+        self.version += 1;
+        for (name, &cores) in &alloc.cores {
+            if let Some(from) = self.by_node.get(name).copied() {
+                self.rebucket(name, from, from.saturating_add(cores));
+            }
+        }
+    }
+
+    /// Bump the version without changing contents: used when the *running
+    /// set* changes with no free-core movement (e.g. a zero-core EP stub
+    /// completes), which still invalidates backfill shadow projections.
+    pub fn touch(&mut self) {
+        self.version += 1;
+    }
+
+    /// Snapshot as a name-sorted `FreeNode` slice (for shadow projections
+    /// and the slice-path allocator).
+    pub fn to_free_nodes(&self) -> Vec<FreeNode> {
+        self.by_node
+            .iter()
+            .map(|(name, &free_cores)| FreeNode { name: name.clone(), free_cores })
+            .collect()
+    }
+
+    /// Indexed first-fit decreasing match: walks `by_free` buckets from
+    /// the largest eligible down, names ascending within a bucket — the
+    /// exact visit order of the slice path's full sort, without the sort.
+    pub fn match_request(&self, request: &ResourceRequest) -> Option<Allocation> {
+        let mut alloc = Allocation::default();
+        let mut remaining = request.nodes;
+        if remaining == 0 {
+            return Some(alloc);
+        }
+        if request.ppn == 0 {
+            let (_, names) = self.by_free.iter().next_back()?;
+            let name = names.iter().next().expect("by_free buckets are never empty");
+            alloc.cores.insert(name.clone(), 0);
+            return Some(alloc);
+        }
+        for (&cap, names) in self.by_free.range(request.ppn..).rev() {
+            for name in names {
+                let chunks = (cap / request.ppn).min(remaining);
+                *alloc.cores.entry(name.clone()).or_insert(0) += chunks * request.ppn;
+                remaining -= chunks;
+                if remaining == 0 {
+                    return Some(alloc);
+                }
+            }
+        }
+        None
+    }
+
+    fn rebucket(&mut self, name: &str, from: u32, to: u32) {
+        if from == to {
+            return;
+        }
+        self.unbucket(name, from);
+        self.by_free.entry(to).or_default().insert(name.to_string());
+        self.by_node.insert(name.to_string(), to);
+    }
+
+    fn unbucket(&mut self, name: &str, from: u32) {
+        if let Some(set) = self.by_free.get_mut(&from) {
+            set.remove(name);
+            if set.is_empty() {
+                self.by_free.remove(&from);
+            }
+        }
+    }
+
+    /// Structural invariant check, used by tests.
+    #[cfg(test)]
+    pub fn audit(&self) {
+        let mut rebuilt: BTreeMap<u32, BTreeSet<String>> = BTreeMap::new();
+        for (name, &free) in &self.by_node {
+            rebuilt.entry(free).or_default().insert(name.clone());
+        }
+        assert_eq!(self.by_free, rebuilt, "by_free diverged from by_node");
+        assert!(self.by_free.values().all(|s| !s.is_empty()), "empty bucket left behind");
     }
 }
 
@@ -87,6 +333,39 @@ mod tests {
         spec.iter()
             .map(|&(n, c)| FreeNode { name: n.to_string(), free_cores: c })
             .collect()
+    }
+
+    /// The original clone-and-sort allocator, kept as the equivalence
+    /// oracle for both the fast-path slice allocator and the index.
+    fn reference_match(request: &ResourceRequest, free: &[FreeNode]) -> Option<Allocation> {
+        let mut nodes: Vec<FreeNode> =
+            free.iter().filter(|n| n.free_cores >= request.ppn).cloned().collect();
+        nodes.sort_by(|a, b| b.free_cores.cmp(&a.free_cores).then(a.name.cmp(&b.name)));
+        let mut alloc = Allocation::default();
+        let mut remaining = request.nodes;
+        for node in &mut nodes {
+            while remaining > 0 && node.free_cores >= request.ppn {
+                *alloc.cores.entry(node.name.clone()).or_insert(0) += request.ppn;
+                node.free_cores -= request.ppn;
+                remaining -= 1;
+            }
+            if remaining == 0 {
+                break;
+            }
+        }
+        if remaining == 0 {
+            Some(alloc)
+        } else {
+            None
+        }
+    }
+
+    fn pool_of(free: &[FreeNode]) -> FreePool {
+        let mut p = FreePool::new();
+        for n in free {
+            p.set(&n.name, n.free_cores);
+        }
+        p
     }
 
     #[test]
@@ -163,5 +442,142 @@ mod tests {
                 }
             }
         });
+    }
+
+    // ------------------------------------------- fast paths + index
+
+    #[test]
+    fn zero_nodes_and_zero_ppn_edges_match_the_reference() {
+        let nodes = free(&[("n01", 8), ("n02", 12), ("n03", 12)]);
+        let pool = pool_of(&nodes);
+        for req in [
+            ResourceRequest { nodes: 0, ppn: 4 },
+            ResourceRequest { nodes: 0, ppn: 0 },
+            ResourceRequest { nodes: 3, ppn: 0 },
+        ] {
+            let want = reference_match(&req, &nodes);
+            assert_eq!(match_request(&req, &nodes), want, "slice path, {req:?}");
+            assert_eq!(pool.match_request(&req), want, "indexed path, {req:?}");
+        }
+        // Zero-width chunks on an empty pool: still unsatisfiable.
+        let req = ResourceRequest { nodes: 2, ppn: 0 };
+        assert_eq!(match_request(&req, &[]), None);
+        assert_eq!(FreePool::new().match_request(&req), None);
+    }
+
+    #[test]
+    fn prop_fast_paths_match_the_reference() {
+        prop::check(500, |g| {
+            let n_nodes = g.usize_in(0..8);
+            let free_nodes: Vec<FreeNode> = (0..n_nodes)
+                .map(|i| FreeNode { name: format!("n{i:02}"), free_cores: g.u64_in(0..20) as u32 })
+                .collect();
+            let req = ResourceRequest {
+                nodes: g.u64_in(0..6) as u32,
+                ppn: g.u64_in(0..9) as u32,
+            };
+            let want = reference_match(&req, &free_nodes);
+            let got = match_request(&req, &free_nodes);
+            expect(
+                got == want,
+                &format!("req={req:?} free={free_nodes:?} got={got:?} want={want:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_indexed_pool_matches_the_slice_path() {
+        prop::check(500, |g| {
+            let n_nodes = g.usize_in(0..8);
+            let free_nodes: Vec<FreeNode> = (0..n_nodes)
+                .map(|i| FreeNode { name: format!("n{i:02}"), free_cores: g.u64_in(0..20) as u32 })
+                .collect();
+            let pool = pool_of(&free_nodes);
+            let req = ResourceRequest {
+                nodes: g.u64_in(0..6) as u32,
+                ppn: g.u64_in(0..9) as u32,
+            };
+            let want = reference_match(&req, &free_nodes);
+            let got = pool.match_request(&req);
+            expect(
+                got == want,
+                &format!("req={req:?} free={free_nodes:?} got={got:?} want={want:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn pool_tracks_alloc_and_release() {
+        let mut pool = pool_of(&free(&[("n01", 12), ("n02", 6), ("n03", 4)]));
+        let req = ResourceRequest { nodes: 3, ppn: 4 };
+        let a = pool.match_request(&req).unwrap();
+        assert_eq!(a.cores["n01"], 8);
+        assert_eq!(a.cores["n02"], 4);
+        pool.apply_alloc(&a);
+        pool.audit();
+        assert_eq!(pool.get("n01"), Some(4));
+        assert_eq!(pool.get("n02"), Some(2));
+        // Post-alloc matches see the reduced capacity.
+        let b = pool.match_request(&ResourceRequest { nodes: 1, ppn: 4 }).unwrap();
+        assert_eq!(b.cores.keys().next().unwrap(), "n01");
+        pool.release_alloc(&a);
+        pool.audit();
+        assert_eq!(pool.to_free_nodes(), free(&[("n01", 12), ("n02", 6), ("n03", 4)]));
+    }
+
+    #[test]
+    fn prop_pool_mutations_keep_the_index_consistent() {
+        prop::check(200, |g| {
+            let mut pool = FreePool::new();
+            let mut shadow: BTreeMap<String, u32> = BTreeMap::new();
+            for _ in 0..g.usize_in(1..40) {
+                let name = format!("n{:02}", g.u64_in(0..6));
+                match g.u64_in(0..4) {
+                    0 | 1 => {
+                        let c = g.u64_in(0..16) as u32;
+                        pool.set(&name, c);
+                        shadow.insert(name, c);
+                    }
+                    2 => {
+                        pool.remove(&name);
+                        shadow.remove(&name);
+                    }
+                    _ => {
+                        let mut a = Allocation::default();
+                        a.cores.insert(name.clone(), g.u64_in(0..8) as u32);
+                        if g.bool() {
+                            pool.apply_alloc(&a);
+                            if let Some(f) = shadow.get_mut(&name) {
+                                *f = f.saturating_sub(a.cores[&name]);
+                            }
+                        } else {
+                            pool.release_alloc(&a);
+                            if let Some(f) = shadow.get_mut(&name) {
+                                *f = f.saturating_add(a.cores[&name]);
+                            }
+                        }
+                    }
+                }
+            }
+            pool.audit();
+            let got: BTreeMap<String, u32> =
+                pool.to_free_nodes().into_iter().map(|n| (n.name, n.free_cores)).collect();
+            expect(got == shadow, &format!("index {got:?} != shadow {shadow:?}"))
+        });
+    }
+
+    #[test]
+    fn versions_bump_on_every_mutation_and_tags_differ() {
+        let mut a = FreePool::new();
+        let b = FreePool::new();
+        assert_ne!(a.tag(), b.tag());
+        let v0 = a.version();
+        a.set("n01", 4);
+        a.touch();
+        a.apply_alloc(&Allocation::default());
+        a.release_alloc(&Allocation::default());
+        a.remove("n01");
+        a.remove("n01"); // even a no-op removal invalidates memos
+        assert_eq!(a.version(), v0 + 6);
     }
 }

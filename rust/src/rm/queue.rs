@@ -2,8 +2,9 @@
 //! helps users choose the appropriate resources for their calculations" —
 //! a `gridlan` queue next to pre-existing `cluster` queues on one server.
 
-/// Which node pool a queue schedules onto.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Which node pool a queue schedules onto.  `Ord` so pools can key the
+/// server's per-pool free-core indexes deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum NodePool {
     /// Gridlan VMs (heterogeneous, fault-prone, behind the VPN).
     Gridlan,

@@ -4,10 +4,19 @@
 //! conservative EASY backfill as the A1 ablation (DESIGN.md): backfill
 //! lets short jobs jump ahead *only* if they cannot delay the head job's
 //! earliest possible start.
+//!
+//! Policies select against a [`FreePool`] — the server's incrementally
+//! maintained free-core index — and apply their own grants to it, so one
+//! scheduling cycle costs O(decisions · log n) instead of cloning and
+//! sorting every free node per decision.  [`BackfillScheduler`] memoizes
+//! the head job's shadow projection across cycles keyed on the pool's
+//! `(tag, version)`: any alloc/free/fault/completion bumps the version,
+//! so a hit is only possible when provably *nothing* changed.
 
-use super::alloc::{match_request, Allocation, FreeNode, ResourceRequest};
+use super::alloc::{match_request, Allocation, FreeNode, FreePool, ResourceRequest};
 use super::job::JobId;
 use crate::sim::clock::SimTime;
+use std::cell::{Cell, RefCell};
 
 /// A queued job as the scheduler sees it.
 #[derive(Debug, Clone)]
@@ -35,11 +44,12 @@ pub trait Scheduler {
     fn name(&self) -> &'static str;
 
     /// Choose jobs to start now.  `pending` is in queue order (priority
-    /// then FIFO), `free` is current per-node free capacity.
+    /// then FIFO); `pool` is the live free-core index — the policy applies
+    /// its own grants to it, so on return the pool reflects the decision.
     fn select(
         &self,
         pending: &[PendingJob],
-        free: &[FreeNode],
+        pool: &mut FreePool,
         running: &[RunningJob],
         now: SimTime,
     ) -> Decision;
@@ -57,16 +67,15 @@ impl Scheduler for FifoScheduler {
     fn select(
         &self,
         pending: &[PendingJob],
-        free: &[FreeNode],
+        pool: &mut FreePool,
         _running: &[RunningJob],
         _now: SimTime,
     ) -> Decision {
-        let mut free = free.to_vec();
         let mut out = Decision::new();
         for job in pending {
-            match match_request(&job.request, &free) {
+            match pool.match_request(&job.request) {
                 Some(alloc) => {
-                    apply(&mut free, &alloc);
+                    pool.apply_alloc(&alloc);
                     out.push((job.id, alloc));
                 }
                 None => break, // strict: nobody overtakes the head
@@ -74,6 +83,16 @@ impl Scheduler for FifoScheduler {
         }
         out
     }
+}
+
+/// One memoized shadow projection: valid for exactly one head job against
+/// one pool state (and, via the version discipline, one running set — the
+/// server touches the pool whenever the running set changes).
+struct ShadowCache {
+    head: JobId,
+    pool_tag: u64,
+    pool_version: u64,
+    shadow: Option<(SimTime, Allocation)>,
 }
 
 /// EASY backfill: like FIFO, but when the head job blocks, compute its
@@ -84,7 +103,63 @@ impl Scheduler for FifoScheduler {
 /// can never start with the currently-online nodes, even after every
 /// running job releases), nothing started now can delay it further, so
 /// any fitting job may backfill.
-pub struct BackfillScheduler;
+///
+/// The shadow is maintained incrementally across scheduling rounds: on the
+/// common idle-head cycle (same blocked head, untouched pool) the replay
+/// of running-job completions is skipped entirely.
+pub struct BackfillScheduler {
+    cache: RefCell<Option<ShadowCache>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl Default for BackfillScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BackfillScheduler {
+    pub fn new() -> Self {
+        Self { cache: RefCell::new(None), hits: Cell::new(0), misses: Cell::new(0) }
+    }
+
+    /// (cache hits, cache misses) of the shadow memo — observability for
+    /// the sched_ablation bench and tests.
+    pub fn shadow_stats(&self) -> (u64, u64) {
+        (self.hits.get(), self.misses.get())
+    }
+
+    fn shadow_for(
+        &self,
+        head: &PendingJob,
+        pool: &FreePool,
+        running: &[RunningJob],
+        cacheable: bool,
+    ) -> Option<(SimTime, Allocation)> {
+        if cacheable {
+            let cached = self.cache.borrow().as_ref().and_then(|c| {
+                (c.head == head.id && c.pool_tag == pool.tag() && c.pool_version == pool.version())
+                    .then(|| c.shadow.clone())
+            });
+            if let Some(shadow) = cached {
+                self.hits.set(self.hits.get() + 1);
+                return shadow;
+            }
+        }
+        self.misses.set(self.misses.get() + 1);
+        let shadow = shadow_time(&head.request, &pool.to_free_nodes(), running);
+        if cacheable {
+            *self.cache.borrow_mut() = Some(ShadowCache {
+                head: head.id,
+                pool_tag: pool.tag(),
+                pool_version: pool.version(),
+                shadow: shadow.clone(),
+            });
+        }
+        shadow
+    }
+}
 
 impl Scheduler for BackfillScheduler {
     fn name(&self) -> &'static str {
@@ -94,19 +169,18 @@ impl Scheduler for BackfillScheduler {
     fn select(
         &self,
         pending: &[PendingJob],
-        free: &[FreeNode],
+        pool: &mut FreePool,
         running: &[RunningJob],
         now: SimTime,
     ) -> Decision {
-        let mut free = free.to_vec();
         let mut out = Decision::new();
         let mut idx = 0;
         // Greedy FIFO prefix.
         while idx < pending.len() {
             let job = &pending[idx];
-            match match_request(&job.request, &free) {
+            match pool.match_request(&job.request) {
                 Some(alloc) => {
-                    apply(&mut free, &alloc);
+                    pool.apply_alloc(&alloc);
                     out.push((job.id, alloc));
                     idx += 1;
                 }
@@ -116,13 +190,16 @@ impl Scheduler for BackfillScheduler {
         if idx >= pending.len() {
             return out;
         }
-        // Head job blocked: find its shadow (time + allocation witness)
-        // by replaying completions.
+        // Head job blocked: find its shadow (time + allocation witness) by
+        // replaying completions — or reuse the memo from the last round.
+        // Memoizable only when no prefix start just moved the pool (a
+        // prefix apply bumps the version, so the memo could never be
+        // reused anyway — skip storing it).
         let head = &pending[idx];
-        let shadow = shadow_time(&head.request, &free, running);
+        let shadow = self.shadow_for(head, pool, running, idx == 0);
         // Backfill the rest.
         for job in &pending[idx + 1..] {
-            let Some(alloc) = match_request(&job.request, &free) else { continue };
+            let Some(alloc) = pool.match_request(&job.request) else { continue };
             let ok = match &shadow {
                 // (b1) ends before the head could start, or (b2) runs on
                 // nodes the head's shadow allocation never touches — the
@@ -136,7 +213,7 @@ impl Scheduler for BackfillScheduler {
                 None => true,
             };
             if ok {
-                apply(&mut free, &alloc);
+                pool.apply_alloc(&alloc);
                 out.push((job.id, alloc));
             }
         }
@@ -147,7 +224,7 @@ impl Scheduler for BackfillScheduler {
 /// Earliest time the blocked head job could start — and the allocation it
 /// would get then — assuming running jobs end at their expected_end and
 /// release their cores.
-fn shadow_time(
+pub(crate) fn shadow_time(
     request: &ResourceRequest,
     free: &[FreeNode],
     running: &[RunningJob],
@@ -171,6 +248,7 @@ fn shadow_time(
     None
 }
 
+#[cfg(test)]
 fn apply(free: &mut [FreeNode], alloc: &Allocation) {
     for (node, cores) in &alloc.cores {
         let f = free.iter_mut().find(|f| &f.name == node).expect("alloc on unknown node");
@@ -198,10 +276,18 @@ mod tests {
         spec.iter().map(|&(n, c)| FreeNode { name: n.into(), free_cores: c }).collect()
     }
 
+    fn pool_of(free: &[FreeNode]) -> FreePool {
+        let mut p = FreePool::new();
+        for n in free {
+            p.set(&n.name, n.free_cores);
+        }
+        p
+    }
+
     #[test]
     fn fifo_starts_in_order_until_blocked() {
         let pending = vec![pj(1, 1, 4, 100), pj(2, 1, 8, 100), pj(3, 1, 1, 100)];
-        let d = FifoScheduler.select(&pending, &free(&[("n01", 8)]), &[], 0);
+        let d = FifoScheduler.select(&pending, &mut pool_of(&free(&[("n01", 8)])), &[], 0);
         // Job 1 takes 4 cores; job 2 needs 8 and blocks; job 3 must NOT
         // overtake under strict FIFO.
         assert_eq!(d.len(), 1);
@@ -218,7 +304,12 @@ mod tests {
         let pending = vec![pj(2, 1, 8, 100), pj(3, 1, 2, 100)];
         // 4 cores free now; head needs 8 (must wait for job 99).  Job 3
         // (2 cores, 100s) finishes long before t=1000s: backfill it.
-        let d = BackfillScheduler.select(&pending, &free(&[("n01", 4)]), &running, 0);
+        let d = BackfillScheduler::new().select(
+            &pending,
+            &mut pool_of(&free(&[("n01", 4)])),
+            &running,
+            0,
+        );
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].0, JobId(3));
     }
@@ -232,7 +323,12 @@ mod tests {
         }];
         // Job 3 would run 100s but head could start at t=50s: no backfill.
         let pending = vec![pj(2, 1, 8, 100), pj(3, 1, 2, 100)];
-        let d = BackfillScheduler.select(&pending, &free(&[("n01", 4)]), &running, 0);
+        let d = BackfillScheduler::new().select(
+            &pending,
+            &mut pool_of(&free(&[("n01", 4)])),
+            &running,
+            0,
+        );
         assert!(d.is_empty());
     }
 
@@ -250,7 +346,12 @@ mod tests {
         }];
         // n01: 2 free now, 8 after job 99 ends; n02: 4 free.
         let pending = vec![pj(2, 1, 8, 5000), pj(3, 1, 4, 5000)];
-        let d = BackfillScheduler.select(&pending, &free(&[("n01", 2), ("n02", 4)]), &running, 0);
+        let d = BackfillScheduler::new().select(
+            &pending,
+            &mut pool_of(&free(&[("n01", 2), ("n02", 4)])),
+            &running,
+            0,
+        );
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].0, JobId(3));
         assert!(d[0].1.cores.contains_key("n02"));
@@ -262,7 +363,8 @@ mod tests {
         // (shadow None), backfill used to shut off entirely and strand
         // every fitting job behind it.
         let pending = vec![pj(2, 1, 16, 100), pj(3, 1, 2, 100)];
-        let d = BackfillScheduler.select(&pending, &free(&[("n01", 8)]), &[], 0);
+        let d =
+            BackfillScheduler::new().select(&pending, &mut pool_of(&free(&[("n01", 8)])), &[], 0);
         assert_eq!(d.len(), 1);
         assert_eq!(d[0].0, JobId(3));
     }
@@ -271,8 +373,8 @@ mod tests {
     fn backfill_equals_fifo_when_unblocked() {
         let pending = vec![pj(1, 1, 2, 10), pj(2, 1, 2, 10)];
         let f = free(&[("n01", 8)]);
-        let d1 = FifoScheduler.select(&pending, &f, &[], 0);
-        let d2 = BackfillScheduler.select(&pending, &f, &[], 0);
+        let d1 = FifoScheduler.select(&pending, &mut pool_of(&f), &[], 0);
+        let d2 = BackfillScheduler::new().select(&pending, &mut pool_of(&f), &[], 0);
         assert_eq!(d1.len(), 2);
         assert_eq!(d1.iter().map(|x| x.0).collect::<Vec<_>>(), d2.iter().map(|x| x.0).collect::<Vec<_>>());
     }
@@ -318,10 +420,11 @@ mod tests {
         // Ties everywhere: three 8-core nodes, jobs that fit several ways.
         let f = free(&[("n03", 8), ("n01", 8), ("n02", 4)]);
         let pending = vec![pj(1, 2, 4, 300), pj(2, 1, 8, 800), pj(3, 1, 4, 100), pj(4, 1, 2, 50)];
-        for sched in [&FifoScheduler as &dyn Scheduler, &BackfillScheduler] {
-            let first = sched.select(&pending, &f, &running, 0);
+        let bf = BackfillScheduler::new();
+        for sched in [&FifoScheduler as &dyn Scheduler, &bf] {
+            let first = sched.select(&pending, &mut pool_of(&f), &running, 0);
             for _ in 0..50 {
-                let again = sched.select(&pending, &f, &running, 0);
+                let again = sched.select(&pending, &mut pool_of(&f), &running, 0);
                 assert_eq!(first, again, "{} decisions drifted across runs", sched.name());
             }
             // And the placement itself is name-deterministic: every
@@ -333,6 +436,64 @@ mod tests {
                 assert_eq!(nodes, sorted);
             }
         }
+    }
+
+    #[test]
+    fn shadow_memo_hits_only_while_nothing_changed() {
+        // Head blocked, nothing can backfill: the select is a read-only
+        // cycle, so the shadow memo must hit on repeats and invalidate on
+        // any pool mutation.
+        let running = vec![RunningJob {
+            id: JobId(99),
+            allocation: Allocation { cores: [("n01".to_string(), 6u32)].into_iter().collect() },
+            expected_end: 300 * DUR_SEC,
+        }];
+        let pending = vec![pj(1, 1, 8, 600)];
+        let mut pool = pool_of(&free(&[("n01", 2)]));
+        let bf = BackfillScheduler::new();
+        let d1 = bf.select(&pending, &mut pool, &running, 0);
+        assert!(d1.is_empty());
+        assert_eq!(bf.shadow_stats(), (0, 1), "first cycle computes");
+        let d2 = bf.select(&pending, &mut pool, &running, 10 * DUR_SEC);
+        assert_eq!(d1, d2);
+        assert_eq!(bf.shadow_stats(), (1, 1), "idle repeat reuses the memo");
+        // Any mutation — here a running-set change surfaced via touch —
+        // forces a recompute.
+        pool.touch();
+        bf.select(&pending, &mut pool, &running, 20 * DUR_SEC);
+        assert_eq!(bf.shadow_stats(), (1, 2));
+        // A different head never reuses another head's memo.
+        let other = vec![pj(2, 1, 8, 600)];
+        bf.select(&other, &mut pool, &running, 20 * DUR_SEC);
+        assert_eq!(bf.shadow_stats(), (1, 3));
+    }
+
+    #[test]
+    fn cached_scheduler_matches_a_fresh_one_across_a_round_sequence() {
+        // Same cycle sequence through one long-lived (memoizing) scheduler
+        // and through fresh instances: decisions must be identical.
+        let running = vec![RunningJob {
+            id: JobId(99),
+            allocation: Allocation { cores: [("n01".to_string(), 6u32)].into_iter().collect() },
+            expected_end: 400 * DUR_SEC,
+        }];
+        let f = free(&[("n01", 2), ("n02", 4)]);
+        let rounds: Vec<Vec<PendingJob>> = vec![
+            vec![pj(1, 1, 8, 900), pj(2, 1, 4, 600)],
+            vec![pj(1, 1, 8, 900)],
+            vec![pj(1, 1, 8, 900), pj(3, 1, 2, 10)],
+        ];
+        let cached = BackfillScheduler::new();
+        let mut cached_pool = pool_of(&f);
+        let mut fresh_pool = pool_of(&f);
+        for (i, pending) in rounds.iter().enumerate() {
+            let now = i as SimTime * 60 * DUR_SEC;
+            let a = cached.select(pending, &mut cached_pool, &running, now);
+            let b = BackfillScheduler::new().select(pending, &mut fresh_pool, &running, now);
+            assert_eq!(a, b, "round {i} diverged");
+        }
+        let (hits, misses) = cached.shadow_stats();
+        assert!(hits + misses >= 3);
     }
 
     #[test]
@@ -369,8 +530,9 @@ mod tests {
             let pending: Vec<PendingJob> = (0..g.usize_in(1..8))
                 .map(|i| pj(i as u64, g.u64_in(1..4) as u32, g.u64_in(1..9) as u32, g.u64_in(1..1000)))
                 .collect();
-            for sched in [&FifoScheduler as &dyn Scheduler, &BackfillScheduler] {
-                let d = sched.select(&pending, &f, &running, 0);
+            let bf = BackfillScheduler::new();
+            for sched in [&FifoScheduler as &dyn Scheduler, &bf] {
+                let d = sched.select(&pending, &mut pool_of(&f), &running, 0);
                 // Sum of grants per node <= free capacity.  BTreeMap: the
                 // accounting (and any diagnostic it prints) must not vary
                 // with hasher state.

@@ -7,13 +7,13 @@
 //! [`PbsServer::start`] / [`PbsServer::complete`] so the server stays a
 //! pure state machine — easy to test exhaustively.
 
-use super::alloc::{Allocation, FreeNode};
+use super::alloc::{Allocation, FreePool};
 use super::job::{Job, JobId, JobState};
 use super::queue::{NodePool, Queue};
 use super::sched::{Decision, PendingJob, RunningJob, Scheduler};
 use super::script::PbsScript;
 use crate::sim::clock::{SimTime, DUR_SEC};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Node power/reachability as pbs_server sees it (fed by the monitor).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,6 +63,14 @@ pub struct CompletionRecord {
     pub wait: SimTime,
 }
 
+/// Static per-pool capacity bounds, maintained at registration so `qsub`'s
+/// admission check is O(log pools) instead of a full registry scan.
+#[derive(Debug, Clone, Copy, Default)]
+struct PoolCaps {
+    max_node_cores: u32,
+    total_cores: u32,
+}
+
 /// The server.
 pub struct PbsServer {
     nodes: BTreeMap<String, NodeInfo>,
@@ -70,6 +78,14 @@ pub struct PbsServer {
     jobs: BTreeMap<JobId, Job>,
     /// Queued job ids in submission order.
     pending: Vec<JobId>,
+    /// Ids of jobs in `Running` state (mirrors the job table), so a
+    /// scheduling cycle walks the runners, not the whole job history.
+    running: BTreeSet<JobId>,
+    /// Per-pool free-core index over *online* nodes, kept in sync on every
+    /// alloc/release/power transition.  Schedulers match and apply grants
+    /// against this directly.
+    free_idx: BTreeMap<NodePool, FreePool>,
+    pool_caps: BTreeMap<NodePool, PoolCaps>,
     next_id: u64,
     pub default_queue: String,
 }
@@ -82,21 +98,66 @@ impl PbsServer {
         let default_queue = c.name.clone();
         queues.insert(g.name.clone(), g);
         queues.insert(c.name.clone(), c);
-        Self { nodes: BTreeMap::new(), queues, jobs: BTreeMap::new(), pending: Vec::new(), next_id: 1, default_queue }
+        Self {
+            nodes: BTreeMap::new(),
+            queues,
+            jobs: BTreeMap::new(),
+            pending: Vec::new(),
+            running: BTreeSet::new(),
+            free_idx: BTreeMap::new(),
+            pool_caps: BTreeMap::new(),
+            next_id: 1,
+            default_queue,
+        }
     }
 
     // ---------------------------------------------------------- registry
 
     pub fn register_node(&mut self, name: &str, cores: u32, pool: NodePool) {
-        self.nodes.insert(
+        let prev = self.nodes.insert(
             name.to_string(),
             NodeInfo { name: name.to_string(), cores, pool, power: NodePower::Offline, busy_cores: 0 },
         );
+        match prev {
+            None => {
+                let caps = self.pool_caps.entry(pool).or_default();
+                caps.max_node_cores = caps.max_node_cores.max(cores);
+                caps.total_cores += cores;
+            }
+            Some(old) => {
+                // Re-registration replaces the node: drop the previous
+                // incarnation from its index and rebuild the affected caps.
+                if let Some(idx) = self.free_idx.get_mut(&old.pool) {
+                    idx.remove(name);
+                }
+                self.recompute_caps(old.pool);
+                if old.pool != pool {
+                    self.recompute_caps(pool);
+                }
+            }
+        }
+    }
+
+    fn recompute_caps(&mut self, pool: NodePool) {
+        let mut caps = PoolCaps::default();
+        for n in self.nodes.values().filter(|n| n.pool == pool) {
+            caps.max_node_cores = caps.max_node_cores.max(n.cores);
+            caps.total_cores += n.cores;
+        }
+        self.pool_caps.insert(pool, caps);
     }
 
     pub fn set_node_power(&mut self, name: &str, power: NodePower) {
-        if let Some(n) = self.nodes.get_mut(name) {
-            n.power = power;
+        let Some(n) = self.nodes.get_mut(name) else { return };
+        n.power = power;
+        let (pool, free) = (n.pool, n.cores - n.busy_cores);
+        match power {
+            NodePower::Online => self.free_idx.entry(pool).or_default().set(name, free),
+            NodePower::Offline => {
+                if let Some(idx) = self.free_idx.get_mut(&pool) {
+                    idx.remove(name);
+                }
+            }
         }
     }
 
@@ -137,22 +198,18 @@ impl PbsServer {
             return Err(format!("qsub: queue '{queue_name}' disabled"));
         }
         // Reject requests that can never fit the pool (Torque does this at
-        // submission when resources exceed any node).
+        // submission when resources exceed any node).  The bounds come
+        // from the registration-time caps, not a registry scan.
         let pool = queue.pool;
-        let max_node_cores = self
-            .nodes
-            .values()
-            .filter(|n| n.pool == pool)
-            .map(|n| n.cores)
-            .max()
-            .unwrap_or(0);
+        let caps = self.pool_caps.get(&pool).copied().unwrap_or_default();
+        let max_node_cores = caps.max_node_cores;
         if script.request.ppn > max_node_cores {
             return Err(format!(
                 "qsub: ppn={} exceeds any {queue_name} node ({max_node_cores} cores max)",
                 script.request.ppn
             ));
         }
-        let total_pool: u32 = self.nodes.values().filter(|n| n.pool == pool).map(|n| n.cores).sum();
+        let total_pool = caps.total_cores;
         if script.request.total_cores() > total_pool {
             return Err(format!(
                 "qsub: request {}x{} exceeds pool capacity {total_pool}",
@@ -195,10 +252,17 @@ impl PbsServer {
             }
             JobState::Running | JobState::Exiting => {
                 let alloc = job.allocation.clone().unwrap_or_default();
+                let queue = job.queue.clone();
                 job.state = JobState::Completed;
                 job.completed_at = Some(now);
                 job.exit_code = None;
+                self.running.remove(&id);
                 self.release(&alloc);
+                // The running set changed even if no cores moved (e.g. a
+                // zero-core grant): invalidate shadow memos.
+                if let Some(pool) = self.queues.get(&queue).map(|q| q.pool) {
+                    self.free_idx.entry(pool).or_default().touch();
+                }
                 Ok(())
             }
             JobState::Completed => Err(format!("qdel: job {id} already completed")),
@@ -223,18 +287,12 @@ impl PbsServer {
 
     // ---------------------------------------------------------- scheduling
 
-    fn free_nodes(&self, pool: NodePool) -> Vec<FreeNode> {
-        self.nodes
-            .values()
-            .filter(|n| n.pool == pool && n.power == NodePower::Online)
-            .map(|n| FreeNode { name: n.name.clone(), free_cores: n.free_cores() })
-            .collect()
-    }
-
     fn running_jobs(&self, pool: NodePool) -> Vec<RunningJob> {
-        self.jobs
-            .values()
-            .filter(|j| j.state == JobState::Running)
+        // Walk the running set (id order == the old full-table scan order),
+        // not the whole job history.
+        self.running
+            .iter()
+            .map(|id| &self.jobs[id])
             .filter(|j| self.queues.get(&j.queue).map(|q| q.pool == pool).unwrap_or(false))
             .map(|j| RunningJob {
                 id: j.id,
@@ -256,10 +314,8 @@ impl PbsServer {
         // Pending jobs of queues on this pool, priority then FIFO order.
         let mut pending: Vec<PendingJob> = Vec::new();
         let mut running_per_queue: BTreeMap<String, u32> = BTreeMap::new();
-        for j in self.jobs.values() {
-            if j.state == JobState::Running {
-                *running_per_queue.entry(j.queue.clone()).or_insert(0) += 1;
-            }
+        for id in &self.running {
+            *running_per_queue.entry(self.jobs[id].queue.clone()).or_insert(0) += 1;
         }
         for &id in &self.pending {
             let j = &self.jobs[&id];
@@ -278,11 +334,22 @@ impl PbsServer {
             });
         }
         pending.sort_by(|a, b| b.queue_priority.cmp(&a.queue_priority).then(a.id.cmp(&b.id)));
-        let free = self.free_nodes(pool);
         let running = self.running_jobs(pool);
-        let decision = scheduler.select(&pending, &free, &running, now);
+        // The scheduler works against the incrementally-maintained free-core
+        // index and applies its grants to it; `start` only mirrors them onto
+        // the node records (and asserts they fit).
+        let decision = {
+            let idx = self.free_idx.entry(pool).or_default();
+            scheduler.select(&pending, idx, &running, now)
+        };
         for (id, alloc) in &decision {
             self.start(*id, alloc.clone(), now);
+        }
+        // One pass over the pending list for the whole batch: a 100k-job
+        // cycle must not pay a per-start O(pending) retain.
+        if !decision.is_empty() {
+            let started: BTreeSet<JobId> = decision.iter().map(|(id, _)| *id).collect();
+            self.pending.retain(|id| !started.contains(id));
         }
         decision
     }
@@ -305,7 +372,8 @@ impl PbsServer {
         job.state = JobState::Running;
         job.started_at = Some(now);
         job.allocation = Some(alloc);
-        self.pending.retain(|&p| p != id);
+        self.running.insert(id);
+        // The caller (schedule_cycle) prunes `pending` for the whole batch.
     }
 
     /// Job finished (successfully or not).  Returns the completion record
@@ -316,6 +384,7 @@ impl PbsServer {
         job.state = JobState::Completed;
         job.completed_at = Some(now);
         job.exit_code = Some(exit_code);
+        let queue = job.queue.clone();
         let record = CompletionRecord {
             id,
             exit_code,
@@ -324,14 +393,24 @@ impl PbsServer {
             started_at: job.started_at.unwrap_or(now),
             wait: job.wait_time().unwrap_or(0),
         };
+        self.running.remove(&id);
         self.release(&record.allocation);
+        // A completion can move zero cores (zero-core grants), but it still
+        // changes the running set a shadow memo may depend on.
+        if let Some(pool) = self.queues.get(&queue).map(|q| q.pool) {
+            self.free_idx.entry(pool).or_default().touch();
+        }
         record
     }
 
     fn release(&mut self, alloc: &Allocation) {
         for (node, cores) in &alloc.cores {
-            if let Some(n) = self.nodes.get_mut(node) {
-                n.busy_cores = n.busy_cores.saturating_sub(*cores);
+            let Some(n) = self.nodes.get_mut(node) else { continue };
+            n.busy_cores = n.busy_cores.saturating_sub(*cores);
+            let (pool, free, online) =
+                (n.pool, n.cores - n.busy_cores, n.power == NodePower::Online);
+            if online {
+                self.free_idx.entry(pool).or_default().set(node, free);
             }
         }
     }
@@ -345,15 +424,14 @@ impl PbsServer {
             n.busy_cores = 0;
         }
         let victims: Vec<JobId> = self
-            .jobs
-            .values()
-            .filter(|j| {
-                j.state == JobState::Running
-                    && j.allocation.as_ref().map(|a| a.cores.contains_key(name)).unwrap_or(false)
-            })
+            .running
+            .iter()
+            .map(|id| &self.jobs[id])
+            .filter(|j| j.allocation.as_ref().map(|a| a.cores.contains_key(name)).unwrap_or(false))
             .map(|j| j.id)
             .collect();
         for id in &victims {
+            self.running.remove(id);
             let job = self.jobs.get_mut(id).unwrap();
             let alloc = job.allocation.take().unwrap_or_default();
             job.state = JobState::Queued;
@@ -384,6 +462,44 @@ impl PbsServer {
             total += n.cores;
         }
         (busy, total)
+    }
+
+    /// Cross-check every incrementally maintained structure against a
+    /// from-scratch recomputation off the node/job tables.  Test-only: this
+    /// is the O(everything) scan the indexes exist to avoid.
+    #[cfg(test)]
+    pub fn audit_free_index(&self) {
+        use std::collections::BTreeMap as Map;
+        // Per-pool free map over online nodes, rebuilt from the registry.
+        let mut want_free: Map<NodePool, Map<String, u32>> = Map::new();
+        let mut want_caps: Map<NodePool, (u32, u32)> = Map::new();
+        for n in self.nodes.values() {
+            let caps = want_caps.entry(n.pool).or_default();
+            caps.0 = caps.0.max(n.cores);
+            caps.1 += n.cores;
+            if n.power == NodePower::Online {
+                want_free.entry(n.pool).or_default().insert(n.name.clone(), n.cores - n.busy_cores);
+            }
+        }
+        for (pool, idx) in &self.free_idx {
+            idx.audit();
+            let got: Map<String, u32> =
+                idx.to_free_nodes().into_iter().map(|f| (f.name, f.free_cores)).collect();
+            let want = want_free.remove(pool).unwrap_or_default();
+            assert_eq!(got, want, "free index diverged for {pool:?}");
+        }
+        assert!(
+            want_free.values().all(|m| m.is_empty()),
+            "online nodes missing from the free index: {want_free:?}"
+        );
+        for (pool, caps) in &self.pool_caps {
+            let (max_node, total) = want_caps.get(pool).copied().unwrap_or_default();
+            assert_eq!(caps.max_node_cores, max_node, "max_node_cores stale for {pool:?}");
+            assert_eq!(caps.total_cores, total, "total_cores stale for {pool:?}");
+        }
+        let want_running: BTreeSet<JobId> =
+            self.jobs.values().filter(|j| j.state == JobState::Running).map(|j| j.id).collect();
+        assert_eq!(self.running, want_running, "running-set mirror diverged");
     }
 }
 
@@ -531,5 +647,57 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].0, a);
         assert_eq!(rows[0].3, 'Q');
+    }
+
+    #[test]
+    fn free_index_tracks_the_full_lifecycle() {
+        let mut s = server_with_grid();
+        s.audit_free_index();
+        let a = s.qsub(&ep_script(2, 4), "u", "", 0).unwrap();
+        let b = s.qsub(&ep_script(1, 6), "u", "", 0).unwrap();
+        s.audit_free_index();
+        s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+        s.audit_free_index();
+        assert_eq!(s.job(a).unwrap().state, JobState::Running);
+        assert_eq!(s.job(b).unwrap().state, JobState::Running);
+        s.complete(a, 0, 50);
+        s.audit_free_index();
+        s.qdel(b, 60).unwrap();
+        s.audit_free_index();
+    }
+
+    #[test]
+    fn free_index_survives_power_flaps_and_faults() {
+        let mut s = server_with_grid();
+        let id = s.qsub(&ep_script(2, 4), "u", "", 0).unwrap();
+        s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+        let victim =
+            s.job(id).unwrap().allocation.clone().unwrap().cores.keys().next().unwrap().clone();
+        s.node_down(&victim, 100);
+        s.audit_free_index();
+        s.set_node_power("n03", NodePower::Offline);
+        s.audit_free_index();
+        s.node_up(&victim);
+        s.node_up("n03");
+        s.audit_free_index();
+        s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 200);
+        s.audit_free_index();
+        assert_eq!(s.job(id).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn free_index_tracks_reregistration_and_caps() {
+        let mut s = server_with_grid();
+        // Re-register n02 with more cores while online: the index drops the
+        // old incarnation (new one starts Offline) and caps are rebuilt.
+        s.register_node("n02", 16, NodePool::Gridlan);
+        s.audit_free_index();
+        assert!(s.qsub(&ep_script(1, 13), "u", "", 0).is_ok(), "caps follow the bigger node");
+        s.node_up("n02");
+        s.audit_free_index();
+        // Moving a node across pools rebuilds both pools' caps.
+        s.register_node("n04", 8, NodePool::Cluster);
+        s.node_up("n04");
+        s.audit_free_index();
     }
 }

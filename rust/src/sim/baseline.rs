@@ -1,0 +1,227 @@
+//! The original `BinaryHeap + tombstone-set` event core, kept verbatim as a
+//! reference implementation.
+//!
+//! [`HeapSimulator`] is the oracle for the timing-wheel engine in
+//! [`super::engine`]: property tests drive identical schedule / cancel /
+//! advance sequences through both and assert identical firing order and
+//! `now()` trajectories, and `benches/sim_engine.rs` uses it for the
+//! heap-vs-wheel comparison series.  It is **not** wired into any scenario
+//! path — production code runs on the wheel.
+//!
+//! Semantics intentionally preserved, quirks included:
+//!
+//! * deterministic (time, then insertion sequence) tie-break;
+//! * `schedule_at` clamps past times to `now`;
+//! * `run_until`'s gating peek sees cancelled tombstones, so a tombstone at
+//!   `t <= until` admits a step that can fire the next live event past
+//!   `until`;
+//! * tombstones are only reclaimed when popped.
+//!
+//! The one deliberate divergence from the historical code: `cancel` returns
+//! whether the event was live (tracked by a key set), matching the wheel's
+//! fixed signature so tests can compare return values too.
+
+use super::clock::SimTime;
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// Handle for a scheduled event (usable for cancellation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct HeapEventId(u64);
+
+type Handler<W> = Box<dyn FnOnce(&mut HeapSimulator<W>, &mut W)>;
+
+struct Entry<W> {
+    time: SimTime,
+    seq: u64,
+    id: HeapEventId,
+    handler: Handler<W>,
+}
+
+// Order by (time, seq): deterministic FIFO within a timestamp.
+impl<W> PartialEq for Entry<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<W> Eq for Entry<W> {}
+impl<W> PartialOrd for Entry<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Entry<W> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// The reference heap-based discrete-event simulator.
+pub struct HeapSimulator<W> {
+    now: SimTime,
+    queue: BinaryHeap<Reverse<Entry<W>>>,
+    next_seq: u64,
+    /// Ordered sets: core DES state must never introduce hasher-dependent
+    /// behavior.
+    cancelled: BTreeSet<HeapEventId>,
+    live: BTreeSet<HeapEventId>,
+    executed: u64,
+}
+
+impl<W> Default for HeapSimulator<W> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<W> HeapSimulator<W> {
+    pub fn new() -> Self {
+        Self {
+            now: 0,
+            queue: BinaryHeap::new(),
+            next_seq: 0,
+            cancelled: BTreeSet::new(),
+            live: BTreeSet::new(),
+            executed: 0,
+        }
+    }
+
+    /// Current simulated time (ns).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Number of pending (non-cancelled) events.
+    pub fn pending(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Timestamp of the earliest stored event, tombstones included.
+    pub fn next_event_time(&self) -> Option<SimTime> {
+        self.queue.peek().map(|Reverse(e)| e.time)
+    }
+
+    /// Schedule `handler` at absolute time `at` (>= now).
+    pub fn schedule_at<F>(&mut self, at: SimTime, handler: F) -> HeapEventId
+    where
+        F: FnOnce(&mut HeapSimulator<W>, &mut W) + 'static,
+    {
+        let at = at.max(self.now);
+        let id = HeapEventId(self.next_seq);
+        self.queue.push(Reverse(Entry {
+            time: at,
+            seq: self.next_seq,
+            id,
+            handler: Box::new(handler),
+        }));
+        self.live.insert(id);
+        self.next_seq += 1;
+        id
+    }
+
+    /// Schedule `handler` after a relative delay.
+    pub fn schedule_in<F>(&mut self, delay: SimTime, handler: F) -> HeapEventId
+    where
+        F: FnOnce(&mut HeapSimulator<W>, &mut W) + 'static,
+    {
+        self.schedule_at(self.now.saturating_add(delay), handler)
+    }
+
+    /// Cancel a pending event; returns whether it was live.
+    pub fn cancel(&mut self, id: HeapEventId) -> bool {
+        if self.live.remove(&id) {
+            self.cancelled.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Execute the next event. Returns false when the queue is empty.
+    pub fn step(&mut self, world: &mut W) -> bool {
+        while let Some(Reverse(e)) = self.queue.pop() {
+            if self.cancelled.remove(&e.id) {
+                continue;
+            }
+            debug_assert!(e.time >= self.now, "time went backwards");
+            self.live.remove(&e.id);
+            self.now = e.time;
+            self.executed += 1;
+            (e.handler)(self, world);
+            return true;
+        }
+        false
+    }
+
+    /// Run until the queue drains or `until` is reached (events exactly at
+    /// `until` still run). Returns the number of events executed.
+    pub fn run_until(&mut self, world: &mut W, until: SimTime) -> u64 {
+        let start = self.executed;
+        loop {
+            match self.queue.peek() {
+                None => break,
+                Some(Reverse(e)) if e.time > until => break,
+                _ => {}
+            }
+            if !self.step(world) {
+                break;
+            }
+        }
+        // Even if no events remain beyond `until`, time advances to it.
+        if self.now < until {
+            self.now = until;
+        }
+        self.executed - start
+    }
+
+    /// Run until the queue is fully drained.
+    pub fn run_to_completion(&mut self, world: &mut W) -> u64 {
+        let start = self.executed;
+        while self.step(world) {}
+        self.executed - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct World {
+        trace: Vec<(SimTime, u32)>,
+    }
+
+    #[test]
+    fn oracle_preserves_heap_order_and_quirks() {
+        let mut sim = HeapSimulator::<World>::new();
+        let mut w = World::default();
+        let a = sim.schedule_at(10, |s, w| w.trace.push((s.now(), 1)));
+        sim.schedule_at(20, |s, w| w.trace.push((s.now(), 2)));
+        assert!(sim.cancel(a));
+        assert!(!sim.cancel(a));
+        assert_eq!(sim.pending(), 1);
+        // The tombstone at 10 gates run_until(15) open: the live event at
+        // 20 fires past the boundary, as the historical core did.
+        let n = sim.run_until(&mut w, 15);
+        assert_eq!(n, 1);
+        assert_eq!(sim.now(), 20);
+        assert_eq!(w.trace, vec![(20, 2)]);
+    }
+
+    #[test]
+    fn oracle_equal_times_fifo() {
+        let mut sim = HeapSimulator::<World>::new();
+        let mut w = World::default();
+        for i in 0..10u32 {
+            sim.schedule_at(5, move |s, w| w.trace.push((s.now(), i)));
+        }
+        sim.run_to_completion(&mut w);
+        let order: Vec<u32> = w.trace.iter().map(|&(_, i)| i).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,53 +1,100 @@
-//! The event engine: a priority queue of timestamped closures over a
-//! user-supplied world state `W`.
+//! The event engine: a hierarchical timing wheel of timestamped closures
+//! over a user-supplied world state `W`.
 //!
 //! Handlers get `(&mut Simulator<W>, &mut W)` so they can schedule further
 //! events — the standard process-interaction DES pattern without coroutines.
+//!
+//! # Structure
+//!
+//! Events live in a slab (`Vec<Slot>` + free list): a stable `u32` index
+//! plus a per-slot generation counter form the public [`EventId`], so
+//! cancellation is O(1) — mark the slot, drop the closure — with no
+//! tombstone set to search.  The *order* of events is kept separately as
+//! bare slot indices in a hierarchical timing wheel:
+//!
+//! * 8 levels × 64 slots, 6 bits per level, 1 tick = 1 ns.  The wheel spans
+//!   2^48 ns (~78 h) ahead of its `cursor`; anything beyond parks in a
+//!   `BTreeMap` overflow keyed by `(time, seq)`.
+//! * An event at time `t` is bucketed by the *highest bit in which `t`
+//!   differs from the cursor*: level `floor(h/6)`, slot `(t >> 6·level) & 63`.
+//!   `t == cursor` maps to level 0.  Per-level occupancy bitmaps make
+//!   find-minimum a couple of `trailing_zeros` calls.
+//! * Draining the earliest level-0 bucket yields every event at one exact
+//!   timestamp; the batch is sorted by insertion sequence (`seq`) and fired
+//!   FIFO, preserving the documented deterministic tie-break — (time, then
+//!   insertion order) — bit-for-bit against the previous `BinaryHeap` core
+//!   (see `sim::baseline::HeapSimulator`, the reference implementation kept
+//!   as a test oracle).
+//! * Draining a level ≥ 1 bucket first advances the cursor to the bucket's
+//!   base time, then re-buckets ("cascades") its entries; each provably
+//!   lands at a strictly lower level, so cascades terminate.
+//!
+//! # Invariants (see also DESIGN.md §7)
+//!
+//! * Every stored event has `t >= cursor`, and `cursor <= now` whenever
+//!   user code can observe the engine.
+//! * For levels ≥ 1, occupied slots are strictly greater than the cursor's
+//!   slot at that level; at level 0, `>=`.  Hence the lowest set bit of the
+//!   lowest non-empty level's bitmap names the bucket holding the global
+//!   minimum, and no wrap-around handling is needed.
+//! * Overflow entries are strictly later than every in-wheel entry, and
+//!   cursor advances within the wheel never pull overflow into the horizon
+//!   (the moved bits sit below bit 48), so promotion happens only when the
+//!   wheel itself is empty.
 
 use super::clock::SimTime;
-use std::cmp::Reverse;
-use std::collections::{BTreeSet, BinaryHeap};
+use std::collections::BTreeMap;
+
+const LEVEL_BITS: usize = 6;
+const SLOTS: usize = 1 << LEVEL_BITS; // 64 slots per level
+const LEVELS: usize = 8;
+const WHEEL_BITS: usize = LEVEL_BITS * LEVELS; // 48-bit horizon
+const SLOT_MASK: u64 = (SLOTS - 1) as u64;
 
 /// Handle for a scheduled event (usable for cancellation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct EventId(u64);
 
-type Handler<W> = Box<dyn FnOnce(&mut Simulator<W>, &mut W)>;
+/// The closure type fired by the engine.  Public so call sites can build
+/// batches for [`Simulator::schedule_batch`].
+pub type Handler<W> = Box<dyn FnOnce(&mut Simulator<W>, &mut W)>;
 
-struct Entry<W> {
+/// One slab slot.  Occupied-live: `handler` is `Some`.  Occupied-cancelled
+/// (tombstone awaiting its bucket drain): `cancelled` true, handler already
+/// dropped.  Free: neither.
+struct Slot<W> {
+    gen: u32,
     time: SimTime,
     seq: u64,
-    id: EventId,
-    handler: Handler<W>,
-}
-
-// Order by (time, seq): deterministic FIFO within a timestamp.
-impl<W> PartialEq for Entry<W> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<W> Eq for Entry<W> {}
-impl<W> PartialOrd for Entry<W> {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<W> Ord for Entry<W> {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        (self.time, self.seq).cmp(&(other.time, other.seq))
-    }
+    cancelled: bool,
+    handler: Option<Handler<W>>,
 }
 
 /// The discrete-event simulator.
 pub struct Simulator<W> {
     now: SimTime,
-    queue: BinaryHeap<Reverse<Entry<W>>>,
+    /// Wheel reference time: all stored events are at `t >= cursor`, and
+    /// `(t ^ cursor) >> 48 == 0` for in-wheel events.
+    cursor: SimTime,
     next_seq: u64,
-    /// Ordered set: the cancellation table is core DES state and must
-    /// never introduce hasher-dependent behavior.
-    cancelled: BTreeSet<EventId>,
     executed: u64,
+    /// Pending non-cancelled events.
+    live: u64,
+    /// Occupied slab slots: live + cancelled-but-not-yet-drained.
+    stored: usize,
+    slots: Vec<Slot<W>>,
+    free_list: Vec<u32>,
+    /// `LEVELS * SLOTS` buckets of slab indices.
+    buckets: Vec<Vec<u32>>,
+    /// Per-level occupancy bitmaps (bit = slot has a non-empty bucket).
+    occupied: [u64; LEVELS],
+    /// Events beyond the wheel horizon, ordered: deterministic promotion.
+    overflow: BTreeMap<(SimTime, u64), u32>,
+    /// The batch currently being fired: one exact timestamp, seq-sorted.
+    due: Vec<u32>,
+    due_head: usize,
+    due_time: SimTime,
+    due_active: bool,
 }
 
 impl<W> Default for Simulator<W> {
@@ -60,10 +107,20 @@ impl<W> Simulator<W> {
     pub fn new() -> Self {
         Self {
             now: 0,
-            queue: BinaryHeap::new(),
+            cursor: 0,
             next_seq: 0,
-            cancelled: BTreeSet::new(),
             executed: 0,
+            live: 0,
+            stored: 0,
+            slots: Vec::new(),
+            free_list: Vec::new(),
+            buckets: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; LEVELS],
+            overflow: BTreeMap::new(),
+            due: Vec::new(),
+            due_head: 0,
+            due_time: 0,
+            due_active: false,
         }
     }
 
@@ -79,7 +136,33 @@ impl<W> Simulator<W> {
 
     /// Number of pending (non-cancelled) events.
     pub fn pending(&self) -> usize {
-        self.queue.len() - self.cancelled.len().min(self.queue.len())
+        self.live as usize
+    }
+
+    /// Timestamp of the earliest *stored* event, cancelled tombstones
+    /// included — the same view the old heap's `peek` had, which
+    /// `run_until` depends on (see the boundary note there).
+    pub fn next_event_time(&self) -> Option<SimTime> {
+        if self.due_head < self.due.len() {
+            return Some(self.due_time);
+        }
+        for level in 0..LEVELS {
+            if self.occupied[level] == 0 {
+                continue;
+            }
+            let slot = self.occupied[level].trailing_zeros() as usize;
+            if level == 0 {
+                // Level-0 buckets hold one exact timestamp.
+                return Some((self.cursor & !SLOT_MASK) | slot as u64);
+            }
+            // The lowest bucket of the lowest non-empty level contains the
+            // global minimum; for levels >= 1 low-order bits vary, so scan.
+            return self.buckets[level * SLOTS + slot]
+                .iter()
+                .map(|&i| self.slots[i as usize].time)
+                .min();
+        }
+        self.overflow.keys().next().map(|&(t, _)| t)
     }
 
     /// Schedule `handler` at absolute time `at` (>= now).
@@ -88,15 +171,7 @@ impl<W> Simulator<W> {
         F: FnOnce(&mut Simulator<W>, &mut W) + 'static,
     {
         let at = at.max(self.now);
-        let id = EventId(self.next_seq);
-        self.queue.push(Reverse(Entry {
-            time: at,
-            seq: self.next_seq,
-            id,
-            handler: Box::new(handler),
-        }));
-        self.next_seq += 1;
-        id
+        self.insert(at, Box::new(handler))
     }
 
     /// Schedule `handler` after a relative delay.
@@ -107,38 +182,88 @@ impl<W> Simulator<W> {
         self.schedule_at(self.now.saturating_add(delay), handler)
     }
 
-    /// Cancel a pending event. Safe to call on already-fired ids (no-op).
-    pub fn cancel(&mut self, id: EventId) {
-        self.cancelled.insert(id);
+    /// Batched insertion for storm workloads (boot storms, trace replays):
+    /// one slab/ids reservation up front, then the exact per-event path, so
+    /// ids and firing order are identical to sequential `schedule_at` calls.
+    pub fn schedule_batch<I>(&mut self, events: I) -> Vec<EventId>
+    where
+        I: IntoIterator<Item = (SimTime, Handler<W>)>,
+    {
+        let events = events.into_iter();
+        let hint = events.size_hint().0;
+        let mut ids = Vec::with_capacity(hint);
+        let shortfall = hint.saturating_sub(self.free_list.len());
+        self.slots.reserve(shortfall);
+        for (at, handler) in events {
+            ids.push(self.insert(at.max(self.now), handler));
+        }
+        ids
+    }
+
+    /// Cancel a pending event: O(1), drops the handler immediately.
+    /// Returns whether the event was live — `false` for already-fired,
+    /// already-cancelled, or otherwise stale ids (which previously
+    /// *silently succeeded* and skewed `pending()`).
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        let idx = (id.0 & u32::MAX as u64) as usize;
+        let gen = (id.0 >> 32) as u32;
+        match self.slots.get_mut(idx) {
+            Some(s) if s.gen == gen && s.handler.is_some() => {
+                s.handler = None;
+                s.cancelled = true;
+                self.live -= 1;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Execute the next event. Returns false when the queue is empty.
     pub fn step(&mut self, world: &mut W) -> bool {
-        while let Some(Reverse(e)) = self.queue.pop() {
-            if self.cancelled.remove(&e.id) {
-                continue;
+        loop {
+            while self.due_head < self.due.len() {
+                let idx = self.due[self.due_head];
+                self.due_head += 1;
+                if self.slots[idx as usize].cancelled {
+                    self.free_slot(idx);
+                    continue;
+                }
+                let handler = self.slots[idx as usize]
+                    .handler
+                    .take()
+                    .expect("due entry neither cancelled nor live");
+                let time = self.slots[idx as usize].time;
+                self.free_slot(idx);
+                debug_assert!(time >= self.now, "time went backwards");
+                self.now = time;
+                self.executed += 1;
+                self.live -= 1;
+                (handler)(self, world);
+                return true;
             }
-            debug_assert!(e.time >= self.now, "time went backwards");
-            self.now = e.time;
-            self.executed += 1;
-            (e.handler)(self, world);
-            return true;
+            if !self.take_due() {
+                return false;
+            }
         }
-        false
     }
 
     /// Run until the queue drains or `until` is reached (events exactly at
     /// `until` still run). Returns the number of events executed.
+    ///
+    /// Boundary semantics match the original heap core exactly: the peek
+    /// that gates the loop sees cancelled tombstones, so a tombstone at
+    /// `t <= until` admits one `step` that may fire the next *live* event
+    /// past `until`.  `sim::baseline` keeps the reference behaviour.
     pub fn run_until(&mut self, world: &mut W, until: SimTime) -> u64 {
         let start = self.executed;
         loop {
-            match self.queue.peek() {
-                None => break,
-                Some(Reverse(e)) if e.time > until => break,
-                _ => {}
-            }
-            if !self.step(world) {
-                break;
+            match self.next_event_time() {
+                Some(t) if t <= until => {
+                    if !self.step(world) {
+                        break;
+                    }
+                }
+                _ => break,
             }
         }
         // Even if no events remain beyond `until`, time advances to it.
@@ -153,6 +278,165 @@ impl<W> Simulator<W> {
         let start = self.executed;
         while self.step(world) {}
         self.executed - start
+    }
+
+    // ------------------------------------------------------------ internals
+
+    fn insert(&mut self, t: SimTime, handler: Handler<W>) -> EventId {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let idx = match self.free_list.pop() {
+            Some(i) => {
+                let s = &mut self.slots[i as usize];
+                s.time = t;
+                s.seq = seq;
+                s.cancelled = false;
+                s.handler = Some(handler);
+                i
+            }
+            None => {
+                debug_assert!(self.slots.len() < u32::MAX as usize, "slab index overflow");
+                self.slots.push(Slot { gen: 0, time: t, seq, cancelled: false, handler: Some(handler) });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.live += 1;
+        self.stored += 1;
+        self.place(idx);
+        EventId(((self.slots[idx as usize].gen as u64) << 32) | idx as u64)
+    }
+
+    fn free_slot(&mut self, idx: u32) {
+        let s = &mut self.slots[idx as usize];
+        s.gen = s.gen.wrapping_add(1);
+        s.handler = None;
+        s.cancelled = false;
+        self.stored -= 1;
+        self.free_list.push(idx);
+    }
+
+    /// Bucket slab index `idx` by its slot's time, relative to the cursor.
+    fn place(&mut self, idx: u32) {
+        let t = self.slots[idx as usize].time;
+        if self.due_active && t == self.due_time {
+            // Scheduled at the timestamp currently being fired (t == now ==
+            // cursor == due_time): its seq is the largest allocated, so
+            // appending keeps the batch seq-sorted and it fires this round —
+            // exactly what the heap did with an equal-time push mid-fire.
+            self.due.push(idx);
+            return;
+        }
+        let x = t ^ self.cursor;
+        if x >> WHEEL_BITS != 0 {
+            let seq = self.slots[idx as usize].seq;
+            self.overflow.insert((t, seq), idx);
+            return;
+        }
+        let level = if x == 0 { 0 } else { (63 - x.leading_zeros() as usize) / LEVEL_BITS };
+        let slot = ((t >> (LEVEL_BITS * level)) & SLOT_MASK) as usize;
+        self.buckets[level * SLOTS + slot].push(idx);
+        self.occupied[level] |= 1u64 << slot;
+    }
+
+    /// Refill `due` with the earliest pending batch.  Returns false when
+    /// nothing is stored anywhere (and re-anchors the cursor to `now`, so a
+    /// drain that consumed only tombstones cannot leave `cursor > now` and
+    /// misplace a later, earlier-than-cursor schedule).
+    fn take_due(&mut self) -> bool {
+        self.due.clear();
+        self.due_head = 0;
+        loop {
+            if self.stored == 0 {
+                self.cursor = self.now;
+                return false;
+            }
+            let Some(level) = (0..LEVELS).find(|&l| self.occupied[l] != 0) else {
+                // Wheel empty, overflow is not: promote.
+                self.promote_overflow();
+                continue;
+            };
+            let slot = self.occupied[level].trailing_zeros() as usize;
+            let bi = level * SLOTS + slot;
+            if level == 0 {
+                let t0 = (self.cursor & !SLOT_MASK) | slot as u64;
+                self.cursor = t0;
+                self.occupied[0] &= !(1u64 << slot);
+                // Swap recycles the previous batch Vec's capacity.
+                std::mem::swap(&mut self.due, &mut self.buckets[bi]);
+                let mut due = std::mem::take(&mut self.due);
+                due.sort_by_key(|&i| self.slots[i as usize].seq);
+                self.due = due;
+                self.due_time = t0;
+                self.due_active = true;
+                return true;
+            }
+            // Cascade: advance the cursor to the bucket's base time first —
+            // every entry then re-buckets at a strictly lower level.
+            let span_mask = (1u64 << (LEVEL_BITS * (level + 1))) - 1;
+            let base = (self.cursor & !span_mask) | ((slot as u64) << (LEVEL_BITS * level));
+            self.cursor = base;
+            self.occupied[level] &= !(1u64 << slot);
+            let mut entries = std::mem::take(&mut self.buckets[bi]);
+            for &idx in &entries {
+                self.place(idx);
+            }
+            entries.clear();
+            self.buckets[bi] = entries;
+        }
+    }
+
+    /// Wheel is empty but overflow is not: jump the cursor to the overflow
+    /// minimum and pull everything inside the new horizon into the wheel.
+    fn promote_overflow(&mut self) {
+        let t_min = self
+            .overflow
+            .keys()
+            .next()
+            .map(|&(t, _)| t)
+            .expect("promote_overflow called with an empty overflow");
+        self.cursor = t_min;
+        loop {
+            let Some(&(t, seq)) = self.overflow.keys().next() else { break };
+            if (t ^ self.cursor) >> WHEEL_BITS != 0 {
+                break;
+            }
+            let idx = self.overflow.remove(&(t, seq)).expect("key just observed");
+            self.place(idx);
+        }
+    }
+
+    /// Structural invariant check, used by tests.
+    #[cfg(test)]
+    fn audit(&self) {
+        let unfired_due = self.due.len() - self.due_head;
+        let in_buckets: usize = self.buckets.iter().map(|b| b.len()).sum();
+        assert_eq!(self.stored, in_buckets + self.overflow.len() + unfired_due, "stored count");
+        let occupied_live =
+            self.slots.iter().filter(|s| s.handler.is_some()).count() as u64;
+        assert_eq!(self.live, occupied_live, "live count");
+        for level in 0..LEVELS {
+            for slot in 0..SLOTS {
+                let bucket = &self.buckets[level * SLOTS + slot];
+                assert_eq!(
+                    self.occupied[level] & (1u64 << slot) != 0,
+                    !bucket.is_empty(),
+                    "occupancy bit vs bucket at L{level} S{slot}"
+                );
+                for &idx in bucket {
+                    let t = self.slots[idx as usize].time;
+                    assert!(t >= self.cursor, "bucketed event before cursor");
+                    let x = t ^ self.cursor;
+                    assert_eq!(x >> WHEEL_BITS, 0, "bucketed event beyond horizon");
+                    let want_level =
+                        if x == 0 { 0 } else { (63 - x.leading_zeros() as usize) / LEVEL_BITS };
+                    let want_slot = ((t >> (LEVEL_BITS * want_level)) & SLOT_MASK) as usize;
+                    assert_eq!((level, slot), (want_level, want_slot), "misfiled event");
+                }
+            }
+        }
+        for &(t, _) in self.overflow.keys() {
+            assert_ne!((t ^ self.cursor) >> WHEEL_BITS, 0, "overflow event within horizon");
+        }
     }
 }
 
@@ -264,5 +548,230 @@ mod tests {
         });
         sim.run_to_completion(&mut w);
         assert_eq!(w.trace, vec![(100, 7)]);
+    }
+
+    // ------------------------------------------- wheel-specific coverage
+
+    #[test]
+    fn cancel_reports_liveness() {
+        // Regression for the silent-success edge: cancelling a fired or
+        // already-cancelled id must return false and not skew pending().
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        let a = sim.schedule_at(10, |s, w| w.trace.push((s.now(), 1)));
+        let b = sim.schedule_at(20, |s, w| w.trace.push((s.now(), 2)));
+        assert!(sim.cancel(a), "first cancel of a pending event is live");
+        assert!(!sim.cancel(a), "second cancel is a stale no-op");
+        assert_eq!(sim.pending(), 1);
+        sim.run_to_completion(&mut w);
+        assert!(!sim.cancel(b), "cancelling a fired event reports dead");
+        assert_eq!(sim.pending(), 0);
+        assert_eq!(w.trace, vec![(20, 2)]);
+    }
+
+    #[test]
+    fn stale_cancel_does_not_hit_a_reused_slot() {
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        let a = sim.schedule_at(5, |s, w| w.trace.push((s.now(), 1)));
+        sim.run_to_completion(&mut w);
+        // The freed slot is reused with a bumped generation: the stale id
+        // must not cancel the new tenant.
+        let _b = sim.schedule_at(9, |s, w| w.trace.push((s.now(), 2)));
+        assert!(!sim.cancel(a));
+        assert_eq!(sim.pending(), 1);
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(5, 1), (9, 2)]);
+    }
+
+    #[test]
+    fn cancelled_only_drain_keeps_earlier_schedules_valid() {
+        // Regression for the cursor leak: a step() that consumes only
+        // tombstones must not strand the cursor past now, or a later
+        // schedule at an earlier absolute time would be misplaced.
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        let a = sim.schedule_at(100, |s, w| w.trace.push((s.now(), 1)));
+        assert!(sim.cancel(a));
+        assert!(!sim.step(&mut w));
+        assert_eq!(sim.now(), 0, "draining tombstones does not advance time");
+        sim.audit();
+        sim.schedule_at(50, |s, w| w.trace.push((s.now(), 2)));
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(50, 2)]);
+    }
+
+    #[test]
+    fn run_until_boundary_counts_tombstones_like_the_heap() {
+        // The old heap's peek saw cancelled entries, so a tombstone at
+        // t <= until admitted a step that fired the next live event past
+        // until.  The wheel preserves that observable behaviour.
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        let a = sim.schedule_at(10, |s, w| w.trace.push((s.now(), 1)));
+        sim.schedule_at(20, |s, w| w.trace.push((s.now(), 2)));
+        sim.cancel(a);
+        let n = sim.run_until(&mut w, 15);
+        assert_eq!(n, 1);
+        assert_eq!(sim.now(), 20);
+        assert_eq!(w.trace, vec![(20, 2)]);
+    }
+
+    #[test]
+    fn level_boundaries_fire_in_order() {
+        // Times straddling every wheel-level boundary, scheduled shuffled.
+        let times: Vec<SimTime> = vec![
+            0,
+            1,
+            63,
+            64,
+            65,
+            4_095,
+            4_096,
+            4_097,
+            262_143,
+            262_144,
+            (1u64 << 42) - 1,
+            1u64 << 42,
+            (1u64 << 47) + 123,
+        ];
+        let mut shuffled = times.clone();
+        shuffled.reverse();
+        shuffled.swap(0, 5);
+        shuffled.swap(2, 9);
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        for (i, &t) in shuffled.iter().enumerate() {
+            sim.schedule_at(t, move |s, w| w.trace.push((s.now(), i as u32)));
+        }
+        sim.audit();
+        sim.run_to_completion(&mut w);
+        let fired: Vec<SimTime> = w.trace.iter().map(|&(t, _)| t).collect();
+        assert_eq!(fired, times);
+        sim.audit();
+    }
+
+    #[test]
+    fn overflow_beyond_horizon_fires_in_order() {
+        // Events past the 2^48 ns wheel horizon park in overflow and
+        // promote deterministically, interleaved with near events.
+        let horizon = 1u64 << 48;
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.schedule_at(horizon + 10, |s, w| w.trace.push((s.now(), 3)));
+        sim.schedule_at(5, |s, w| w.trace.push((s.now(), 1)));
+        sim.schedule_at(horizon - 1, |s, w| w.trace.push((s.now(), 2)));
+        sim.schedule_at(3 * horizon + 7, |s, w| w.trace.push((s.now(), 4)));
+        sim.audit();
+        sim.run_to_completion(&mut w);
+        assert_eq!(
+            w.trace,
+            vec![(5, 1), (horizon - 1, 2), (horizon + 10, 3), (3 * horizon + 7, 4)]
+        );
+        assert_eq!(sim.pending(), 0);
+    }
+
+    #[test]
+    fn far_future_now_still_schedules_immediates() {
+        // run_until can push now far past the cursor with an empty wheel; a
+        // schedule at that now lands in overflow and must still fire.
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.schedule_at(10, |s, w| w.trace.push((s.now(), 1)));
+        sim.run_to_completion(&mut w);
+        let far = 10 + (1u64 << 50);
+        sim.run_until(&mut w, far);
+        assert_eq!(sim.now(), far);
+        sim.schedule_at(far, |s, w| w.trace.push((s.now(), 2)));
+        sim.audit();
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(10, 1), (far, 2)]);
+    }
+
+    #[test]
+    fn same_time_storm_keeps_insertion_order() {
+        // One deep equal-timestamp batch: the seq sort on the drained
+        // bucket must reproduce exact insertion order.
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        for i in 0..1_000u32 {
+            sim.schedule_at(7 * DUR_SEC, move |s, w| w.trace.push((s.now(), i)));
+        }
+        sim.run_to_completion(&mut w);
+        let order: Vec<u32> = w.trace.iter().map(|&(_, i)| i).collect();
+        assert_eq!(order, (0..1_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mid_fire_schedule_at_current_time_joins_the_batch() {
+        // A handler scheduling at the timestamp currently firing appends to
+        // the live batch and fires this round, after all earlier seqs —
+        // exactly the heap's equal-time push semantics.
+        let mut sim = Simulator::<World>::new();
+        let mut w = World::default();
+        sim.schedule_at(10, |s, w: &mut World| {
+            w.trace.push((s.now(), 1));
+            s.schedule_at(10, |s2, w2| w2.trace.push((s2.now(), 3)));
+        });
+        sim.schedule_at(10, |s, w| w.trace.push((s.now(), 2)));
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.trace, vec![(10, 1), (10, 2), (10, 3)]);
+        assert_eq!(sim.now(), 10);
+    }
+
+    #[test]
+    fn schedule_batch_matches_sequential_scheduling() {
+        let mut seq_sim = Simulator::<World>::new();
+        let mut batch_sim = Simulator::<World>::new();
+        let times = [40u64, 10, 10, 30, 20];
+        let mut seq_ids = Vec::new();
+        for (i, &t) in times.iter().enumerate() {
+            let i = i as u32;
+            seq_ids.push(seq_sim.schedule_at(t, move |s, w: &mut World| {
+                w.trace.push((s.now(), i))
+            }));
+        }
+        let batch: Vec<(SimTime, Handler<World>)> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let i = i as u32;
+                let h: Handler<World> =
+                    Box::new(move |s: &mut Simulator<World>, w: &mut World| {
+                        w.trace.push((s.now(), i))
+                    });
+                (t, h)
+            })
+            .collect();
+        let batch_ids = batch_sim.schedule_batch(batch);
+        assert_eq!(seq_ids, batch_ids, "ids are allocated identically");
+        let mut w1 = World::default();
+        let mut w2 = World::default();
+        seq_sim.run_to_completion(&mut w1);
+        batch_sim.run_to_completion(&mut w2);
+        assert_eq!(w1.trace, w2.trace, "firing order is identical");
+        assert_eq!(w1.trace, vec![(10, 1), (10, 2), (20, 4), (30, 3), (40, 0)]);
+    }
+
+    #[test]
+    fn slab_reuses_slots_across_a_long_run() {
+        // A periodic chain keeps at most a couple of events live; the slab
+        // must recycle rather than grow per event.
+        struct P {
+            count: u32,
+        }
+        fn tick(s: &mut Simulator<P>, w: &mut P) {
+            w.count += 1;
+            if w.count < 10_000 {
+                s.schedule_in(1_000, tick);
+            }
+        }
+        let mut sim = Simulator::<P>::new();
+        let mut w = P { count: 0 };
+        sim.schedule_at(0, tick);
+        sim.run_to_completion(&mut w);
+        assert_eq!(w.count, 10_000);
+        assert!(sim.slots.len() <= 4, "slab grew to {} slots", sim.slots.len());
+        sim.audit();
     }
 }

@@ -6,9 +6,15 @@
 //! order (a monotone sequence number breaks ties), and all randomness comes
 //! from seeded [`crate::util::rng::SplitMix64`] streams, so a scenario
 //! replays bit-identically.
+//!
+//! The production engine is the hierarchical timing wheel in [`engine`];
+//! [`baseline`] keeps the original `BinaryHeap` core as a test oracle and
+//! bench comparison point.
 
+pub mod baseline;
 pub mod clock;
 pub mod engine;
 
+pub use baseline::HeapSimulator;
 pub use clock::{SimTime, DUR_MS, DUR_SEC, DUR_US};
-pub use engine::{EventId, Simulator};
+pub use engine::{EventId, Handler, Simulator};

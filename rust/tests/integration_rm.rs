@@ -2,7 +2,7 @@
 //! job-lifecycle layers — FIFO vs backfill ordering, submission-time
 //! rejection against pool capacity, and job-state transitions.
 
-use gridlan::rm::alloc::{match_request, Allocation, FreeNode, ResourceRequest};
+use gridlan::rm::alloc::{match_request, Allocation, FreeNode, FreePool, ResourceRequest};
 use gridlan::rm::job::{JobId, JobState};
 use gridlan::rm::queue::{NodePool, Queue};
 use gridlan::rm::sched::{BackfillScheduler, FifoScheduler, PendingJob, RunningJob, Scheduler};
@@ -17,6 +17,14 @@ fn grid_server() -> PbsServer {
         s.node_up(name);
     }
     s
+}
+
+fn pool_of(free: &[FreeNode]) -> FreePool {
+    let mut p = FreePool::new();
+    for f in free {
+        p.set(&f.name, f.free_cores);
+    }
+    p
 }
 
 fn script(nodes: u32, ppn: u32, wall: &str) -> PbsScript {
@@ -56,9 +64,9 @@ fn fifo_blocks_at_head_where_backfill_overtakes() {
             queue_priority: 0,
         },
     ];
-    let fifo = FifoScheduler.select(&pending, &free, &running, 0);
+    let fifo = FifoScheduler.select(&pending, &mut pool_of(&free), &running, 0);
     assert!(fifo.is_empty(), "strict FIFO must not overtake the blocked head");
-    let bf = BackfillScheduler.select(&pending, &free, &running, 0);
+    let bf = BackfillScheduler::new().select(&pending, &mut pool_of(&free), &running, 0);
     assert_eq!(bf.len(), 1);
     assert_eq!(bf[0].0, JobId(2));
 }
@@ -87,7 +95,7 @@ fn backfill_respects_the_head_job_reservation() {
             queue_priority: 0,
         },
     ];
-    let bf = BackfillScheduler.select(&pending, &free, &running, 0);
+    let bf = BackfillScheduler::new().select(&pending, &mut pool_of(&free), &running, 0);
     assert!(bf.is_empty(), "backfill must not delay the head job");
 }
 

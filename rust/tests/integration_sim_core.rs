@@ -1,0 +1,224 @@
+//! Integration: the timing-wheel engine against the retired `BinaryHeap`
+//! core (`sim::baseline`), which is kept in-tree precisely as an oracle.
+//!
+//! The contract under test is bit-level behavioural equality: identical
+//! schedule/cancel/advance sequences must produce identical firing
+//! orders, `now()` trajectories, `pending()` counts, `cancel` return
+//! values, and `next_event_time()` peeks (tombstones included — the
+//! wheel replicates the heap's run_until gating quirk exactly).
+
+use gridlan::sim::baseline::HeapEventId;
+use gridlan::sim::engine::EventId;
+use gridlan::sim::{HeapSimulator, Simulator};
+use gridlan::util::prop::{self, Outcome};
+use gridlan::util::rng::SplitMix64;
+
+/// Both engines plus the paired id map, driven in lockstep.
+struct Pair {
+    wheel: Simulator<Vec<u64>>,
+    heap: HeapSimulator<Vec<u64>>,
+    wheel_fired: Vec<u64>,
+    heap_fired: Vec<u64>,
+    ids: Vec<(EventId, HeapEventId)>,
+}
+
+impl Pair {
+    fn new() -> Self {
+        Self {
+            wheel: Simulator::new(),
+            heap: HeapSimulator::new(),
+            wheel_fired: Vec::new(),
+            heap_fired: Vec::new(),
+            ids: Vec::new(),
+        }
+    }
+
+    fn schedule(&mut self, delay: u64, key: u64) {
+        let at = self.wheel.now().saturating_add(delay);
+        let w = self.wheel.schedule_at(at, move |_s, f: &mut Vec<u64>| f.push(key));
+        let h = self.heap.schedule_at(at, move |_s, f: &mut Vec<u64>| f.push(key));
+        self.ids.push((w, h));
+    }
+
+    /// Cancel the nth issued pair; Err if the two engines disagree on
+    /// whether the event was still live.
+    fn cancel(&mut self, nth: usize) -> Result<(), String> {
+        if self.ids.is_empty() {
+            return Ok(());
+        }
+        let (w, h) = self.ids[nth % self.ids.len()];
+        let cw = self.wheel.cancel(w);
+        let ch = self.heap.cancel(h);
+        if cw != ch {
+            return Err(format!("cancel({nth}): wheel={cw} heap={ch}"));
+        }
+        Ok(())
+    }
+
+    fn advance(&mut self, dt: u64) {
+        let until = self.wheel.now().saturating_add(dt);
+        self.wheel.run_until(&mut self.wheel_fired, until);
+        self.heap.run_until(&mut self.heap_fired, until);
+    }
+
+    fn drain(&mut self) {
+        self.wheel.run_to_completion(&mut self.wheel_fired);
+        self.heap.run_to_completion(&mut self.heap_fired);
+    }
+
+    /// Full lockstep comparison; Err with the first divergence.
+    fn compare(&self, ctx: &str) -> Result<(), String> {
+        if self.wheel.now() != self.heap.now() {
+            return Err(format!("{ctx}: now {} vs {}", self.wheel.now(), self.heap.now()));
+        }
+        if self.wheel.executed() != self.heap.executed() {
+            return Err(format!(
+                "{ctx}: executed {} vs {}",
+                self.wheel.executed(),
+                self.heap.executed()
+            ));
+        }
+        if self.wheel.pending() != self.heap.pending() {
+            return Err(format!(
+                "{ctx}: pending {} vs {}",
+                self.wheel.pending(),
+                self.heap.pending()
+            ));
+        }
+        if self.wheel.next_event_time() != self.heap.next_event_time() {
+            return Err(format!(
+                "{ctx}: next_event_time {:?} vs {:?}",
+                self.wheel.next_event_time(),
+                self.heap.next_event_time()
+            ));
+        }
+        if self.wheel_fired != self.heap_fired {
+            return Err(format!(
+                "{ctx}: firing order diverged at #{}",
+                self.wheel_fired
+                    .iter()
+                    .zip(&self.heap_fired)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(self.wheel_fired.len().min(self.heap_fired.len()))
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn wheel_matches_the_heap_oracle_on_random_op_sequences() {
+    prop::check(60, |g| {
+        let n_ops = g.usize_in(1..120);
+        let mut p = Pair::new();
+        let mut key = 0u64;
+        for op in 0..n_ops {
+            match g.u64_in(0..10) {
+                0..=4 => {
+                    let delay = match g.u64_in(0..8) {
+                        0 => 0,
+                        // Same-tick collisions probe the FIFO tie-break.
+                        1 => g.u64_in(0..4),
+                        // Level boundaries and the 2^48 ns overflow edge.
+                        2 => 1u64 << g.u64_in(40..52),
+                        _ => g.u64_in(0..10_000_000),
+                    };
+                    p.schedule(delay, key);
+                    key += 1;
+                }
+                5 | 6 => {
+                    if let Err(e) = p.cancel(g.usize_in(0..4096)) {
+                        return Outcome::Fail(format!("op {op}: {e}"));
+                    }
+                }
+                _ => p.advance(g.u64_in(0..5_000_000)),
+            }
+            if let Err(e) = p.compare(&format!("op {op}")) {
+                return Outcome::Fail(e);
+            }
+        }
+        p.drain();
+        match p.compare("after drain") {
+            Ok(()) => Outcome::Pass,
+            Err(e) => Outcome::Fail(e),
+        }
+    });
+}
+
+#[test]
+fn large_storm_with_overflow_and_cancellations_matches_the_oracle() {
+    // A bigger fixed-seed run than the shrinkable property above: 5k ops
+    // deep enough to force cascades across wheel levels, overflow
+    // promotion, slab slot reuse, and mid-drain cancellations.
+    let mut rng = SplitMix64::new(0xD15C_0DE5);
+    let mut p = Pair::new();
+    for k in 0..5_000u64 {
+        match rng.next_u64() % 10 {
+            0..=5 => {
+                let delay = if rng.next_u64() % 64 == 0 {
+                    1u64 << 49 // past the wheel horizon → overflow level
+                } else {
+                    rng.next_u64() % 50_000_000
+                };
+                p.schedule(delay, k);
+            }
+            6 | 7 => p.cancel(rng.next_u64() as usize).expect("cancel parity"),
+            _ => p.advance(rng.next_u64() % 10_000_000),
+        }
+    }
+    p.compare("mid-storm").expect("lockstep parity");
+    p.drain();
+    p.compare("after drain").expect("lockstep parity");
+    assert!(p.wheel.executed() > 1_000, "storm was supposed to fire thousands of events");
+}
+
+#[test]
+fn batched_inserts_match_sequential_inserts_across_both_engines() {
+    // schedule_batch must produce the same ids, order, and firing trace
+    // as a sequential loop — and both must match the heap oracle.
+    let times = [40u64, 10, 10, 30, 10, 20, 1 << 49, 0];
+    let mut batched: Simulator<Vec<u64>> = Simulator::new();
+    let ids = batched.schedule_batch(times.iter().enumerate().map(|(k, &t)| {
+        let h: gridlan::sim::Handler<Vec<u64>> =
+            Box::new(move |_s, f: &mut Vec<u64>| f.push(k as u64));
+        (t, h)
+    }));
+    assert_eq!(ids.len(), times.len());
+
+    let mut p = Pair::new();
+    for (k, &t) in times.iter().enumerate() {
+        p.schedule(t, k as u64);
+    }
+    assert_eq!(
+        ids,
+        p.ids.iter().map(|&(w, _)| w).collect::<Vec<_>>(),
+        "batch ids must equal sequential ids"
+    );
+    let mut batched_fired: Vec<u64> = Vec::new();
+    batched.run_to_completion(&mut batched_fired);
+    p.drain();
+    p.compare("after drain").expect("lockstep parity");
+    assert_eq!(batched_fired, p.wheel_fired, "batch firing order must equal sequential");
+    assert_eq!(batched_fired, vec![7, 1, 2, 4, 5, 3, 0, 6]);
+}
+
+#[test]
+fn cancel_liveness_reports_agree_through_fire_and_reuse() {
+    // cancel() returns whether the event was still live; the contract
+    // must hold identically across both engines through firing, double
+    // cancellation, and slab slot reuse.
+    let mut p = Pair::new();
+    p.schedule(10, 0);
+    p.schedule(20, 1);
+    p.cancel(0).expect("first cancel agrees (live)");
+    p.cancel(0).expect("second cancel agrees (already dead)");
+    p.advance(30);
+    p.cancel(1).expect("cancel after firing agrees (dead)");
+    // Slot reuse: the wheel recycles slot 0; the stale pair-0 id must
+    // still report dead on both sides.
+    p.schedule(40, 2);
+    p.cancel(0).expect("stale id stays dead after slot reuse");
+    p.drain();
+    p.compare("after drain").expect("lockstep parity");
+    assert_eq!(p.wheel_fired, vec![1, 2]);
+}
