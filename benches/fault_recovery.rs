@@ -1,5 +1,8 @@
 //! Bench X1: goodput and completion under increasing fault pressure — the
-//! quantitative version of §2.6/§4's resilience story.
+//! quantitative version of §2.6/§4's resilience story — plus the
+//! partial-range EP recovery series (wasted/salvaged pairs, recovery
+//! makespan, naive vs checkpointed) and the heterogeneous straggler
+//! flood with and without range work stealing (DESIGN.md §11).
 //!
 //! Run: `cargo bench --bench fault_recovery`
 //! Writes the deterministic series to `BENCH_fault_recovery.json`.

@@ -17,11 +17,11 @@
 use crate::boot::nfs::NfsExport;
 use crate::boot::pxe::{BootParams, BootPlan};
 use crate::boot::tftp::{TftpServer, BLKSIZE_DEFAULT, BLKSIZE_PXE};
-use crate::config::{Config, SchedPolicy};
+use crate::config::{ClientConfig, Config, SchedPolicy};
 use crate::coordinator::gridlan::Gridlan;
-use crate::coordinator::scenario::{run_trace, Scenario};
+use crate::coordinator::scenario::{run_scenario, run_trace, RecoveryPolicy, Scenario, ScenarioRun};
 use crate::host::client::{ClientAgent, ClientOs};
-use crate::host::faults::FaultPlan;
+use crate::host::faults::{FaultEvent, FaultKind, FaultPlan};
 use crate::mpi::collectives::{allreduce_us, bcast_us};
 use crate::mpi::comm::{Communicator, RankLoc};
 use crate::mpi::latency::mpi_latency_test;
@@ -36,14 +36,14 @@ use crate::rm::server::PbsServer;
 use crate::runtime::backend::{ComputeBackend, ScalarBackend};
 use crate::runtime::engine::EpEngine;
 use crate::runtime::threaded::ThreadedBackend;
-use crate::sim::clock::DUR_SEC;
+use crate::sim::clock::{DUR_MS, DUR_SEC};
 use crate::sim::{HeapSimulator, Simulator};
 use crate::util::rng::SplitMix64;
 use crate::util::table::{secs, Align, Table};
 use crate::vm::cpu::CpuModel;
 use crate::vm::hypervisor::{Hypervisor, HypervisorKind};
 use crate::vpn::tunnel::TunnelCost;
-use crate::workload::ep::{ep_scalar, EpClass};
+use crate::workload::ep::{ep_scalar, EpClass, EpSlice};
 use crate::workload::trace::{JobPayload, TraceGenerator, TraceJob};
 
 /// Canonical bench names, in the order `gridlan bench all` runs them.
@@ -326,13 +326,90 @@ fn fault_trace() -> Vec<TraceJob> {
         .collect()
 }
 
-/// Bench X1: goodput and completion under increasing fault pressure.
+/// One partial-range recovery run: Table-1 grid, a single EP job at
+/// t=1000s, every client VM-crashed `crash_ms` after the start instant.
+/// Everything measured is simulated time — fully deterministic.
+fn ep_crash_run(count: u64, crash_ms: u64, salvage: bool) -> ScenarioRun {
+    let mut g = Gridlan::build(Config::table1());
+    g.boot_all(0);
+    let at = 1000 * DUR_SEC;
+    let trace =
+        vec![EpSlice { proc: 0, pair_offset: 0, pair_count: count }.trace_job(at, 3600 * DUR_SEC)];
+    let scripted: Vec<FaultEvent> = ["n01", "n02", "n03", "n04"]
+        .iter()
+        .map(|n| FaultEvent {
+            at: at + crash_ms * DUR_MS,
+            client: n.to_string(),
+            kind: FaultKind::VmCrash,
+            outage: 60 * DUR_SEC,
+        })
+        .collect();
+    let scenario = Scenario {
+        horizon: 2 * 3600 * DUR_SEC,
+        scripted_faults: scripted,
+        recovery: RecoveryPolicy { salvage, ..Default::default() },
+        ..Default::default()
+    };
+    run_scenario(g, trace, &scenario, EpEngine::scalar())
+}
+
+/// A two-node grid with a 20x-slow single-core straggler: flat clocks so
+/// every rate is exact, one slice lands on the slow core, and the steal
+/// window is wide.  Mirrors the lifecycle-test fixture.
+fn straggler_grid() -> Config {
+    let mk = |name: &str, cores: u32, ppc: f64| ClientConfig {
+        name: name.into(),
+        os: ClientOs::Linux,
+        cpu: CpuModel {
+            name: format!("flat-{name}"),
+            cores,
+            base_ghz: 3.0,
+            max_turbo_ghz: 3.0,
+            all_core_ghz: 3.0,
+            pairs_per_cycle: ppc,
+        },
+        hypervisor: None,
+        switch_hops: 2,
+        stack_us: 120.0,
+        link_mbps: 1000.0,
+    };
+    let mut cfg = Config::table1();
+    cfg.clients = vec![mk("fast", 4, 0.004), mk("slow", 1, 0.00002)];
+    cfg
+}
+
+fn straggler_flood(steal: bool) -> ScenarioRun {
+    let mut g = Gridlan::build(straggler_grid());
+    g.boot_all(0);
+    let trace: Vec<TraceJob> = (0..5)
+        .map(|i| {
+            EpSlice { proc: i, pair_offset: i as u64 * 200_000, pair_count: 200_000 }
+                .trace_job(0, 3600 * DUR_SEC)
+        })
+        .collect();
+    let scenario = Scenario {
+        horizon: 3600 * DUR_SEC,
+        recovery: RecoveryPolicy { steal, ..Default::default() },
+        ..Default::default()
+    };
+    run_scenario(g, trace, &scenario, EpEngine::scalar())
+}
+
+/// Bench X1: goodput and completion under increasing fault pressure,
+/// plus the partial-range recovery and range-stealing series (DESIGN.md
+/// §11): wasted/salvaged pairs and recovery makespan, naive vs
+/// checkpointed, and the heterogeneous straggler flood with and without
+/// work stealing.
 pub fn run_fault_recovery() -> BenchHarness {
     let cfg = Config::table1();
     let mut h = BenchHarness::new("fault_recovery", cfg.seed);
     h.param_str("fault_scales", "0,1,2,4,8,16,32");
     h.param_u64("jobs", 24);
     h.param_u64("horizon_hours", 8);
+    h.param_u64("ep_crash_pairs", 2_000_000);
+    h.param_str("ep_crash_ms", "360,400,440");
+    h.param_u64("straggler_slices", 5);
+    h.param_u64("straggler_pairs_per_slice", 200_000);
 
     let mut t = Table::new(&[
         "fault scale",
@@ -380,6 +457,97 @@ pub fn run_fault_recovery() -> BenchHarness {
     print!("{}", t.render());
     println!("\nexpected shape: goodput decays and makespan stretches with fault scale,");
     println!("but completion stays 24/24 — the §4 script-folder + watchdog loop holds.");
+
+    // X1b — partial-range recovery: one 2M-pair EP job, all clients
+    // crashed mid-compute, naive re-execution vs sub-span salvage at the
+    // default checkpoint interval.  Waste = executed - logical pairs.
+    let count: u64 = 2_000_000;
+    let mut t = Table::new(&[
+        "crash at",
+        "mode",
+        "checkpoints",
+        "salvaged",
+        "wasted",
+        "recovery makespan",
+    ])
+    .title("X1b — partial-range EP recovery (2M pairs, all-node crash)")
+    .align(&[Align::Right, Align::Left, Align::Right, Align::Right, Align::Right, Align::Right]);
+    println!();
+    for crash_ms in [360u64, 400, 440] {
+        let mut naive_wasted = 0u64;
+        let mut salv_wasted = 0u64;
+        for (mode, salvage) in [("naive", false), ("salvage", true)] {
+            let run = ep_crash_run(count, crash_ms, salvage);
+            let m = &run.report.metrics;
+            let wasted = m.ep_pairs_executed.saturating_sub(run.report.ep_total().pairs);
+            if salvage {
+                salv_wasted = wasted;
+            } else {
+                naive_wasted = wasted;
+            }
+            t.row(&[
+                format!("{crash_ms} ms"),
+                mode.to_string(),
+                m.ep_checkpoints.to_string(),
+                m.ep_pairs_salvaged.to_string(),
+                wasted.to_string(),
+                secs(m.makespan as f64 / 1e9),
+            ]);
+            h.sample(&format!("{mode}_wasted_{crash_ms}ms"), "pairs", wasted as f64);
+            h.sample(
+                &format!("{mode}_salvaged_{crash_ms}ms"),
+                "pairs",
+                m.ep_pairs_salvaged as f64,
+            );
+            h.sample(&format!("{mode}_makespan_{crash_ms}ms"), "s", m.makespan as f64 / 1e9);
+        }
+        let reduction = if naive_wasted > 0 {
+            1.0 - salv_wasted as f64 / naive_wasted as f64
+        } else {
+            0.0
+        };
+        h.sample(&format!("waste_reduction_{crash_ms}ms"), "frac", reduction);
+        println!(
+            "  crash +{crash_ms} ms: wasted pairs {naive_wasted} (naive) -> {salv_wasted} \
+             (salvage) = {:.0}% reduction",
+            100.0 * reduction
+        );
+    }
+    print!("{}", t.render());
+    println!("expected shape: salvage banks every completed sub-span, so its waste is 0");
+    println!("and the requeued attempt carries only the remainder of the range.");
+
+    // X1c — straggler range stealing on the heterogeneous flat-clock
+    // grid: the slice stranded on the 20x-slow core is split and its
+    // tail re-queued onto an idle fast core.
+    println!("\nX1c — straggler work stealing (5 x 200k pairs, 20x-slow straggler):");
+    let base = straggler_flood(false);
+    let stolen = straggler_flood(true);
+    let bm = &base.report.metrics;
+    let sm = &stolen.report.metrics;
+    let speedup = bm.makespan as f64 / sm.makespan.max(1) as f64;
+    for (label, key, run) in
+        [("steal off", "steal_off", &base), ("steal on", "steal_on", &stolen)]
+    {
+        let m = &run.report.metrics;
+        let wasted = m.ep_pairs_executed.saturating_sub(run.report.ep_total().pairs);
+        println!(
+            "  {label:<9} makespan {}  steals {}  completed {}  wasted {wasted}",
+            secs(m.makespan as f64 / 1e9),
+            m.ep_steals,
+            m.jobs_completed
+        );
+        h.sample(&format!("{key}_makespan"), "s", m.makespan as f64 / 1e9);
+        h.sample(&format!("{key}_steals"), "count", m.ep_steals as f64);
+        h.sample(&format!("{key}_wasted"), "pairs", wasted as f64);
+    }
+    h.sample("steal_speedup", "ratio", speedup);
+    println!(
+        "  speedup {speedup:.2}x; lineage {:?}",
+        stolen.report.steal_lineage
+    );
+    println!("expected shape: stealing splits the straggler's remaining span, every pair");
+    println!("still executes exactly once, and the flood makespan drops.");
     h
 }
 
@@ -1149,5 +1317,27 @@ mod tests {
     fn file_names_match_bench_names() {
         let h = run_table1_inventory();
         assert_eq!(h.file_name(), "BENCH_table1_inventory.json");
+    }
+
+    #[test]
+    fn recovery_and_steal_series_shapes_hold() {
+        // The X1b fixture: naive re-execution wastes the pre-crash spans,
+        // salvage wastes nothing — comfortably past the 50% reduction the
+        // recovery work targets — and never recovers slower.
+        let naive = ep_crash_run(2_000_000, 400, false);
+        let salv = ep_crash_run(2_000_000, 400, true);
+        let waste = |r: &ScenarioRun| {
+            r.report.metrics.ep_pairs_executed.saturating_sub(r.report.ep_total().pairs)
+        };
+        assert!(waste(&naive) > 0, "mid-compute crash must waste pairs in naive mode");
+        assert_eq!(waste(&salv), 0, "salvage must re-execute nothing");
+        assert!(waste(&salv) * 2 <= waste(&naive));
+        assert!(salv.report.metrics.makespan <= naive.report.metrics.makespan);
+        // The X1c fixture: the straggler flood steals at least once and
+        // finishes strictly sooner than the no-steal baseline.
+        let base = straggler_flood(false);
+        let stolen = straggler_flood(true);
+        assert!(stolen.report.metrics.ep_steals >= 1);
+        assert!(stolen.report.metrics.makespan < base.report.metrics.makespan);
     }
 }

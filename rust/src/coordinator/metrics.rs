@@ -26,8 +26,18 @@ pub struct Metrics {
     pub ep_jobs_completed: u64,
     /// Real-compute jobs whose backend execution failed (exit != 0).
     pub ep_jobs_failed: u64,
-    /// EP pairs actually executed on the compute backend.
+    /// EP pairs *executed* on the compute backend, including any wasted
+    /// re-execution after faults.  The merged logical range lives in
+    /// `ScenarioReport::ep_tallies`; `executed - logical` is the wasted
+    /// pair count (zero on clean runs and under salvage recovery).
     pub ep_pairs_executed: u64,
+    /// Sub-span checkpoints recorded for running EP jobs.
+    pub ep_checkpoints: u64,
+    /// EP pairs salvaged across fault requeues (checkpointed sub-spans
+    /// whose tallies were banked instead of re-executed).
+    pub ep_pairs_salvaged: u64,
+    /// Straggler range-steal operations (child jobs spawned).
+    pub ep_steals: u64,
 }
 
 impl Metrics {
@@ -72,6 +82,9 @@ impl Metrics {
             ("ep_jobs_completed", Json::Num(self.ep_jobs_completed as f64)),
             ("ep_jobs_failed", Json::Num(self.ep_jobs_failed as f64)),
             ("ep_pairs_executed", Json::Num(self.ep_pairs_executed as f64)),
+            ("ep_checkpoints", Json::Num(self.ep_checkpoints as f64)),
+            ("ep_pairs_salvaged", Json::Num(self.ep_pairs_salvaged as f64)),
+            ("ep_steals", Json::Num(self.ep_steals as f64)),
         ])
     }
 }

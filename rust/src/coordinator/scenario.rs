@@ -39,6 +39,33 @@ use std::collections::{BTreeMap, BTreeSet};
 /// (Mpairs/s; a mid-range Table-1 core).
 const REF_RATE_MPAIRS: f64 = 15.0;
 
+/// Partial-range recovery & work-stealing policy for EP jobs.
+///
+/// As a running EP job's sub-spans complete on the DES clock, their
+/// tallies are banked and a checkpoint event is logged.  With `salvage`
+/// on, a fault requeues only the unexecuted remainder (`ep:<cursor>:<rest>`)
+/// and the banked spans merge into the final tally — the exact-merge
+/// pair-range protocol makes any partition bit-identical.  With `steal`
+/// on, the scheduler splits a straggler's remainder onto idle cores at a
+/// sub-span boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Bank completed sub-span tallies across a fault and requeue only
+    /// the unexecuted remainder (`false` = naive full-range re-execution).
+    pub salvage: bool,
+    /// Sub-span checkpoint interval in pairs; 0 = auto (~`count/16`,
+    /// clamped to `[1024, 4194304]`).
+    pub checkpoint_interval: u64,
+    /// Split stragglers' remaining ranges onto idle cores.
+    pub steal: bool,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        Self { salvage: true, checkpoint_interval: 0, steal: false }
+    }
+}
+
 /// Scenario parameters.
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -49,6 +76,8 @@ pub struct Scenario {
     /// Deterministic, hand-placed fault events applied in addition to the
     /// generated plan (tests use these to hit exact race windows).
     pub scripted_faults: Vec<FaultEvent>,
+    /// EP checkpoint/salvage/steal policy.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for Scenario {
@@ -58,6 +87,7 @@ impl Default for Scenario {
             sched_period: 10 * DUR_SEC,
             faults: FaultPlan::none(),
             scripted_faults: Vec::new(),
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
@@ -69,7 +99,13 @@ pub struct ScenarioReport {
     pub events_executed: u64,
     pub final_time: SimTime,
     /// Per-job EP tallies, recorded at each compute job's completion.
+    /// These are *logical*: banked salvaged sub-spans merge with the
+    /// re-executed remainder, so each pair of a job's range appears
+    /// exactly once (unlike [`Metrics::ep_pairs_executed`], which counts
+    /// executions including waste).
     pub ep_tallies: BTreeMap<JobId, EpTally>,
+    /// Range-steal lineage: child job → the parent it was split from.
+    pub steal_lineage: BTreeMap<JobId, JobId>,
 }
 
 impl ScenarioReport {
@@ -95,6 +131,17 @@ impl ScenarioReport {
             ("ep_jobs_tallied", Json::Num(self.ep_tallies.len() as f64)),
             ("ep_pairs_total", Json::Num(total.pairs as f64)),
             ("ep_nacc_total", Json::Num(total.nacc as f64)),
+            (
+                "ep_pairs_wasted",
+                Json::Num(self.metrics.ep_pairs_executed.saturating_sub(total.pairs) as f64),
+            ),
+            ("steal_lineage", {
+                let mut lin = crate::util::json::JsonObj::new();
+                for (child, parent) in &self.steal_lineage {
+                    lin.insert(&child.0.to_string(), Json::Num(parent.0 as f64));
+                }
+                Json::Obj(lin)
+            }),
         ])
     }
 }
@@ -109,6 +156,54 @@ pub struct ScenarioRun {
     /// The sink passed to [`run_scenario_logged`] (a null sink for plain
     /// [`run_scenario`] callers); a memory sink carries the typed records.
     pub logger: ScenarioLogger,
+}
+
+/// Live sub-span execution state for one EP job attempt.  Created when
+/// the attempt starts, dropped on completion or fault.  Timing constants
+/// (`attempt_pairs`, `compute_total`) are frozen at attempt start so
+/// checkpoint instants stay fixed even when a steal truncates `end`.
+#[derive(Debug, Clone)]
+struct EpRun {
+    /// Next unexecuted absolute pair index (advances span by span).
+    cursor: u64,
+    /// Exclusive end of the attempt's range (shrinks on a steal).
+    end: u64,
+    /// First pair of this attempt (the payload offset at start time).
+    attempt_offset: u64,
+    /// Pairs in the attempt at start time — the timing denominator.
+    attempt_pairs: u64,
+    /// Sub-span checkpoint interval in pairs.
+    interval: u64,
+    /// Instant compute began (start + MOM prologue).
+    compute_t0: SimTime,
+    /// Pure-compute duration of the attempt range at start time.
+    compute_total: SimTime,
+    /// A sub-span execution failed; completion reports exit 1.
+    failed: bool,
+}
+
+/// Simulated instant at which the attempt's cursor reaches `cursor`
+/// (linear interpolation over the attempt range, integer-exact at both
+/// ends so a clean run completes at `start + wrap_runtime(compute)`).
+fn checkpoint_time(run: &EpRun, cursor: u64) -> SimTime {
+    let done = (cursor - run.attempt_offset) as u128;
+    let total = run.attempt_pairs.max(1) as u128;
+    run.compute_t0 + (run.compute_total as u128 * done / total) as SimTime
+}
+
+/// Default sub-span checkpoint interval for a `count`-pair range:
+/// ~`count/16`, clamped so tiny ranges stay single-span and huge ranges
+/// still checkpoint at least every 4M pairs.
+fn default_checkpoint_interval(count: u64) -> u64 {
+    (count / 16).clamp(1024, 1 << 22)
+}
+
+/// First sub-span boundary strictly after `cursor`.  Boundaries sit at
+/// `attempt_offset + k*interval`; the result is clamped to `end`, so the
+/// last (possibly short) span ends exactly at the range end.
+fn next_boundary(cursor: u64, attempt_offset: u64, interval: u64, end: u64) -> u64 {
+    let k = (cursor - attempt_offset) / interval + 1;
+    attempt_offset.saturating_add(k.saturating_mul(interval)).min(end)
 }
 
 struct World {
@@ -126,6 +221,18 @@ struct World {
     boot_gen: BTreeMap<String, u64>,
     /// Per-job EP tallies (recorded at completion).
     ep_tallies: BTreeMap<JobId, EpTally>,
+    /// EP checkpoint/salvage/steal policy for this run.
+    recovery: RecoveryPolicy,
+    /// Live sub-span state per running EP attempt.
+    ep_runs: BTreeMap<JobId, EpRun>,
+    /// Banked tallies of executed sub-spans; survive salvage requeues and
+    /// become the job's logical tally at completion.
+    ep_banked: BTreeMap<JobId, EpTally>,
+    /// Each EP job's logical range (original offset, current count) — the
+    /// count shrinks when a steal splits the range off.
+    ep_logical: BTreeMap<JobId, (u64, u64)>,
+    /// Steal lineage: child job → parent it stole from.
+    lineage: BTreeMap<JobId, JobId>,
     /// Structured event sink (+ human mirror via `GRIDLAN_LOG`).
     logger: ScenarioLogger,
 }
@@ -169,6 +276,11 @@ pub fn run_scenario_logged(
         started_gen: BTreeMap::new(),
         boot_gen: BTreeMap::new(),
         ep_tallies: BTreeMap::new(),
+        recovery: scenario.recovery.clone(),
+        ep_runs: BTreeMap::new(),
+        ep_banked: BTreeMap::new(),
+        ep_logical: BTreeMap::new(),
+        lineage: BTreeMap::new(),
         logger,
     };
 
@@ -229,6 +341,7 @@ pub fn run_scenario_logged(
         events_executed: sim.executed(),
         final_time: sim.now(),
         ep_tallies: world.ep_tallies,
+        steal_lineage: world.lineage,
     };
     ScenarioRun { report, gridlan: world.g, engine: world.engine, logger: world.logger }
 }
@@ -436,8 +549,196 @@ fn run_sched(sim: &mut Simulator<World>, w: &mut World) {
         let duration = Mom::wrap_runtime(compute);
         w.logger.log(now, EventKind::Start { job: id.0, run_ns: duration });
         w.started_gen.insert(id, now);
-        sim.schedule_in(duration, move |s, w| job_done(s, w, id, now));
+        // EP attempts execute sub-span by sub-span as the DES advances: a
+        // chain of checkpoint events runs each span on the engine and
+        // banks its tally, so a mid-range fault salvages completed spans.
+        // The final span lands at exactly `compute_t0 + compute`, so a
+        // clean run completes at the same instant as the old single-event
+        // path (`start + wrap_runtime(compute)`).
+        let chained = match parse_pair_range(&payload) {
+            Some((po, pc)) if pc > 0 => {
+                let interval = if w.recovery.checkpoint_interval > 0 {
+                    w.recovery.checkpoint_interval
+                } else {
+                    default_checkpoint_interval(pc)
+                };
+                w.ep_logical.entry(id).or_insert((po, pc));
+                let run = EpRun {
+                    cursor: po,
+                    end: po + pc,
+                    attempt_offset: po,
+                    attempt_pairs: pc,
+                    interval,
+                    compute_t0: now + crate::rm::mom::PROLOGUE,
+                    compute_total: compute,
+                    failed: false,
+                };
+                let first = next_boundary(po, po, interval, po + pc);
+                let at = checkpoint_time(&run, first);
+                w.ep_runs.insert(id, run);
+                sim.schedule_at(at, move |s, w| ep_progress(s, w, id, now, first));
+                true
+            }
+            _ => false,
+        };
+        if !chained {
+            sim.schedule_in(duration, move |s, w| job_done(s, w, id, now));
+        }
     }
+    if w.recovery.steal {
+        try_steal(sim, w, now);
+    }
+}
+
+/// One link of an EP attempt's checkpoint chain: execute the sub-span
+/// `[cursor, target)` on the engine, bank its tally, and schedule either
+/// the next checkpoint or (past the last span) the MOM epilogue +
+/// completion.  Staleness is guarded exactly like `job_done`: a requeue
+/// removes the start generation, so in-flight links land dead.
+fn ep_progress(sim: &mut Simulator<World>, w: &mut World, id: JobId, started: SimTime, target: u64) {
+    if w.started_gen.get(&id) != Some(&started) {
+        return;
+    }
+    let Some(run) = w.ep_runs.get(&id).cloned() else { return };
+    // A steal may have truncated the range to exactly this boundary.
+    let target = target.min(run.end);
+    let mut failed = run.failed;
+    if !failed && target > run.cursor {
+        let span = target - run.cursor;
+        match w.engine.run_pairs(run.cursor, span) {
+            Ok(t) => {
+                w.ep_banked.entry(id).or_default().merge(&t);
+                w.m.ep_pairs_executed += span;
+            }
+            Err(_) => failed = true,
+        }
+    }
+    if let Some(r) = w.ep_runs.get_mut(&id) {
+        r.cursor = target;
+        r.failed = failed;
+    }
+    if target < run.end {
+        w.m.ep_checkpoints += 1;
+        w.logger.log(
+            sim.now(),
+            EventKind::Checkpoint {
+                job: id.0,
+                cursor: target,
+                pairs_done: target - run.attempt_offset,
+            },
+        );
+        let next = next_boundary(target, run.attempt_offset, run.interval, run.end);
+        let at = checkpoint_time(&run, next);
+        sim.schedule_at(at, move |s, w| ep_progress(s, w, id, started, next));
+    } else {
+        sim.schedule_in(crate::rm::mom::EPILOGUE, move |s, w| job_done(s, w, id, started));
+    }
+}
+
+/// Straggler work stealing: with idle cores and an empty queue, split the
+/// slowest-finishing EP attempt's remainder at a sub-span boundary into a
+/// new single-core child job.  The projected finish times come from the
+/// per-node speed model (the attempt's compute rate was fixed by the
+/// slowest allocated core), so heterogeneous grids steal from slow nodes
+/// first; candidate order and tie-breaks are job-id deterministic.
+fn try_steal(sim: &mut Simulator<World>, w: &mut World, now: SimTime) {
+    use crate::rm::alloc::ResourceRequest;
+    let (busy, total) = w.g.pbs.pool_utilization(NodePool::Gridlan);
+    if total == 0 || busy >= total {
+        return;
+    }
+    // Don't steal while real work waits for those cores.
+    if w.g.pbs.jobs().any(|j| j.state == crate::rm::job::JobState::Queued && j.queue == "gridlan")
+    {
+        return;
+    }
+    // Best idle core's EP rate under the speed model.
+    let mut best_rate = 0.0f64;
+    for n in w.g.pbs.nodes() {
+        if n.free_cores() == 0 {
+            continue;
+        }
+        if let Some(c) = w.g.client(&n.name) {
+            best_rate = best_rate.max(c.guest_ep_rate(n.busy_cores + 1));
+        }
+    }
+    if best_rate <= 0.0 {
+        return;
+    }
+    // Victim: the attempt with the latest projected finish whose stolen
+    // half would complete on an idle core before the straggler finishes.
+    let mut victim: Option<(JobId, u64, u64, SimTime)> = None;
+    for (id, run) in &w.ep_runs {
+        if run.failed {
+            continue;
+        }
+        let rem = run.end.saturating_sub(run.cursor);
+        if rem < 2 * run.interval {
+            continue; // remainder must span at least two sub-spans
+        }
+        // Sub-span boundary nearest the middle of the remainder.
+        let mid = run.cursor + rem / 2;
+        let k = (mid - run.attempt_offset).div_ceil(run.interval);
+        let split = run.attempt_offset.saturating_add(k.saturating_mul(run.interval));
+        if split <= run.cursor || split >= run.end {
+            continue;
+        }
+        let stolen = run.end - split;
+        let parent_finish = checkpoint_time(run, run.end) + crate::rm::mom::EPILOGUE;
+        let child_est = now
+            + DUR_SEC
+            + crate::rm::mom::PROLOGUE
+            + crate::rm::mom::EPILOGUE
+            + (stolen as f64 * 1e3 / best_rate) as SimTime;
+        if child_est >= parent_finish {
+            continue; // not worth moving
+        }
+        match victim {
+            Some((_, _, _, best_finish)) if parent_finish <= best_finish => {}
+            _ => victim = Some((*id, split, stolen, parent_finish)),
+        }
+    }
+    let Some((pid, split, stolen, _)) = victim else { return };
+    let Some(parent) = w.g.pbs.job(pid) else { return };
+    let owner = parent.owner.clone();
+    let walltime = parent.walltime;
+    let (po, _) = match parse_pair_range(&parent.payload) {
+        Some(r) => r,
+        None => return,
+    };
+    let script = PbsScript {
+        name: Some(format!("steal-{}", pid.0)),
+        queue: Some("gridlan".into()),
+        request: ResourceRequest { nodes: 1, ppn: 1 },
+        walltime,
+        commands: vec!["./work.x".into()],
+    };
+    // Submit the child first; only a successful admission truncates the
+    // parent, so a rejected qsub can never lose part of the range.
+    let child_payload = format!("ep:{split}:{stolen}");
+    let Ok(cid) = w.g.pbs.qsub(&script, &owner, &child_payload, now) else { return };
+    w.g.pbs
+        .set_payload(pid, &format!("ep:{po}:{}", split - po))
+        .expect("steal victim is a live job");
+    if let Some(r) = w.ep_runs.get_mut(&pid) {
+        r.end = split;
+    }
+    if let Some(l) = w.ep_logical.get_mut(&pid) {
+        l.1 = split - l.0;
+    }
+    w.m.jobs_submitted += 1;
+    w.m.ep_steals += 1;
+    w.g.folder.register(&mut w.g.server_fs, cid, &script);
+    w.lineage.insert(cid, pid);
+    w.logger.log(
+        now,
+        EventKind::Submit { job: cid.0, owner, nodes: 1, ppn: 1, kind: "ep".to_string() },
+    );
+    w.logger.log(
+        now,
+        EventKind::Steal { parent: pid.0, child: cid.0, offset: split, count: stolen },
+    );
+    sim.schedule_in(DUR_SEC, |s, w| run_sched(s, w));
 }
 
 fn job_done(sim: &mut Simulator<World>, w: &mut World, id: JobId, started: SimTime) {
@@ -449,24 +750,29 @@ fn job_done(sim: &mut Simulator<World>, w: &mut World, id: JobId, started: SimTi
     if job.state != crate::rm::job::JobState::Running || job.started_at != Some(started) {
         return;
     }
-    // Real compute happens here, at completion time: a killed attempt
-    // never executed, so a requeued job re-executes its whole range on
-    // the later attempt — bit-identically, keeping the merge exact.
+    // EP compute already happened span by span along the checkpoint
+    // chain; completion just promotes the banked tally to the job's
+    // logical result.  Banked spans cover the job's logical range exactly
+    // once (salvaged spans + re-executed remainder), so the merge is
+    // bit-identical to a single scalar pass over the range.
     let payload = job.payload.clone();
     let mut exit_code = 0;
-    if let Some((offset, count)) = parse_pair_range(&payload) {
-        match w.engine.run_pairs(offset, count) {
-            Ok(tally) => {
-                if let Some(prev) = w.ep_tallies.insert(id, tally) {
-                    assert_eq!(prev, tally, "re-executed EP range must tally bit-identically");
-                }
-                w.m.ep_jobs_completed += 1;
-                w.m.ep_pairs_executed += count;
-            }
-            Err(_) => {
-                w.m.ep_jobs_failed += 1;
-                exit_code = 1;
-            }
+    if let Some((_offset, count)) = parse_pair_range(&payload) {
+        let run = w.ep_runs.remove(&id);
+        if run.as_ref().map(|r| r.failed).unwrap_or(false) {
+            w.ep_banked.remove(&id);
+            w.ep_logical.remove(&id);
+            w.m.ep_jobs_failed += 1;
+            exit_code = 1;
+        } else {
+            let tally = w.ep_banked.remove(&id).unwrap_or_default();
+            let logical = w.ep_logical.remove(&id).map(|(_, c)| c).unwrap_or(count);
+            assert_eq!(
+                tally.pairs, logical,
+                "banked sub-spans must cover job {id}'s logical range exactly"
+            );
+            w.ep_tallies.insert(id, tally);
+            w.m.ep_jobs_completed += 1;
         }
     }
     let rec = w.g.pbs.complete(id, exit_code, sim.now());
@@ -568,6 +874,24 @@ fn apply_fault(
         for id in &victims {
             w.m.jobs_requeued += 1;
             w.started_gen.remove(id);
+            // Partial-range recovery: bank the attempt's checkpointed
+            // sub-spans and requeue only the unexecuted remainder.  In
+            // naive mode (or after a backend failure) the bank is
+            // discarded and the full payload range re-executes.
+            if let Some(run) = w.ep_runs.remove(id) {
+                if run.failed || !w.recovery.salvage {
+                    w.ep_banked.remove(id);
+                } else {
+                    let salvaged = run.cursor - run.attempt_offset;
+                    if salvaged > 0 {
+                        w.m.ep_pairs_salvaged += salvaged;
+                        let rest = run.end - run.cursor;
+                        w.g.pbs
+                            .set_payload(*id, &format!("ep:{}:{rest}", run.cursor))
+                            .expect("requeued EP job is in the job table");
+                    }
+                }
+            }
             w.logger.log(now, EventKind::Requeue { job: id.0, client: client.to_string() });
         }
         w.m.core_secs_wasted += wasted;
@@ -754,6 +1078,11 @@ mod tests {
             started_gen: BTreeMap::new(),
             boot_gen: BTreeMap::new(),
             ep_tallies: BTreeMap::new(),
+            recovery: RecoveryPolicy::default(),
+            ep_runs: BTreeMap::new(),
+            ep_banked: BTreeMap::new(),
+            ep_logical: BTreeMap::new(),
+            lineage: BTreeMap::new(),
             logger: ScenarioLogger::null(),
         };
         w.g.connect_client("n01").unwrap();
@@ -935,5 +1264,319 @@ mod tests {
         assert_eq!(tally.q, oracle.q);
         assert_eq!(tally.pairs, oracle.pairs);
         assert!((tally.sx - oracle.sx).abs() < 1e-7);
+    }
+
+    #[test]
+    fn checkpoint_interval_and_boundary_arithmetic() {
+        // Auto interval: ~count/16, clamped to [1024, 4M].
+        assert_eq!(default_checkpoint_interval(100), 1024);
+        assert_eq!(default_checkpoint_interval(16 * 1024), 1024);
+        assert_eq!(default_checkpoint_interval(262_144), 16_384);
+        assert_eq!(default_checkpoint_interval(1 << 30), 1 << 22);
+        // Boundaries sit at attempt_offset + k*interval, clamped to end.
+        assert_eq!(next_boundary(0, 0, 1024, 4096), 1024);
+        assert_eq!(next_boundary(1024, 0, 1024, 4096), 2048);
+        assert_eq!(next_boundary(3072, 0, 1024, 4096), 4096, "last span ends at end");
+        assert_eq!(next_boundary(3072, 0, 1024, 4000), 4000, "short tail clamps to end");
+        assert_eq!(next_boundary(500, 0, 1024, 4096), 1024, "mid-span cursor rounds up");
+        // Non-zero attempt offset (a salvage-requeued remainder).
+        assert_eq!(next_boundary(5000, 5000, 1024, 8000), 6024);
+        assert_eq!(next_boundary(7900, 5000, 1024, 8000), 8000);
+        // checkpoint_time is integer-exact at both range ends and monotone.
+        let run = EpRun {
+            cursor: 0,
+            end: 1000,
+            attempt_offset: 0,
+            attempt_pairs: 1000,
+            interval: 100,
+            compute_t0: 500,
+            compute_total: 777,
+            failed: false,
+        };
+        assert_eq!(checkpoint_time(&run, 0), 500);
+        assert_eq!(checkpoint_time(&run, 1000), 500 + 777, "clean run ends exactly on time");
+        let mut prev = 0;
+        for k in 0..=10 {
+            let t = checkpoint_time(&run, k * 100);
+            assert!(t >= prev, "checkpoint instants must be monotone");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn checkpoint_chain_preserves_legacy_completion_instant() {
+        // A clean run must complete at start + wrap_runtime(compute)
+        // regardless of how many sub-spans the range is cut into: the
+        // single-span chain (interval >= count) is the legacy path, and
+        // the auto-interval 16-span chain must land on the same instant.
+        let run_with = |interval: u64| {
+            let mut g = Gridlan::build(Config::table1());
+            g.boot_all(0);
+            let trace = vec![EpSlice { proc: 0, pair_offset: 0, pair_count: 100_000 }
+                .trace_job(0, 3600 * DUR_SEC)];
+            let scenario = Scenario {
+                horizon: 3600 * DUR_SEC,
+                recovery: RecoveryPolicy { checkpoint_interval: interval, ..Default::default() },
+                ..Default::default()
+            };
+            run_scenario(g, trace, &scenario, EpEngine::scalar()).report
+        };
+        let single = run_with(100_000);
+        let chained = run_with(0);
+        assert_eq!(single.metrics.makespan, chained.metrics.makespan);
+        assert_eq!(single.metrics.ep_checkpoints, 0, "one span logs no checkpoints");
+        assert_eq!(chained.metrics.ep_checkpoints, 15, "16 spans log 15 checkpoints");
+        assert_eq!(single.ep_total(), chained.ep_total(), "partition must not change the tally");
+    }
+
+    /// Prebooted Table-1 grid, one EP job at t=1000s, every client crashed
+    /// `crash_ms` after the start instant.  Returns the finished run.
+    fn crash_one_ep_job(offset: u64, count: u64, crash_ms: u64, salvage: bool) -> ScenarioRun {
+        let mut g = Gridlan::build(Config::table1());
+        g.boot_all(0);
+        let at = 1000 * DUR_SEC;
+        let trace =
+            vec![EpSlice { proc: 0, pair_offset: offset, pair_count: count }
+                .trace_job(at, 3600 * DUR_SEC)];
+        let scripted: Vec<FaultEvent> = ["n01", "n02", "n03", "n04"]
+            .iter()
+            .map(|n| FaultEvent {
+                at: at + crash_ms * DUR_MS,
+                client: n.to_string(),
+                kind: FaultKind::VmCrash,
+                outage: 60 * DUR_SEC,
+            })
+            .collect();
+        let scenario = Scenario {
+            horizon: 2 * 3600 * DUR_SEC,
+            scripted_faults: scripted,
+            recovery: RecoveryPolicy { salvage, ..Default::default() },
+            ..Default::default()
+        };
+        run_scenario(g, trace, &scenario, EpEngine::scalar())
+    }
+
+    #[test]
+    fn mid_range_crash_salvages_checkpointed_spans() {
+        // Crash 400 ms after start: 350 ms of MOM prologue plus ~50 ms of
+        // compute — several sub-spans are checkpointed on every Table-1
+        // core speed.  Salvage banks them, the requeue carries only the
+        // remainder, and every logical pair executes exactly once.
+        let (offset, count) = (5_000u64, 2_000_000u64);
+        let run = crash_one_ep_job(offset, count, 400, true);
+        let m = &run.report.metrics;
+        assert_eq!(m.jobs_completed, 1, "{m:?}");
+        assert!(m.jobs_requeued >= 1, "crash must interrupt the running job: {m:?}");
+        assert!(m.ep_checkpoints > 0, "no sub-span ever checkpointed: {m:?}");
+        assert!(m.ep_pairs_salvaged > 0, "mid-compute crash must salvage spans: {m:?}");
+        assert!(m.ep_pairs_salvaged < count, "the whole range cannot be salvaged: {m:?}");
+        // The salvage invariant: executed == logical, zero waste.
+        assert_eq!(m.ep_pairs_executed, count, "salvage must not re-execute pairs");
+        assert_eq!(run.engine.pairs_executed(), count);
+        let tally = run.report.ep_tallies.values().next().expect("job tallied");
+        let oracle = ep_scalar(offset, count);
+        assert_eq!(tally.nacc, oracle.nacc);
+        assert_eq!(tally.q, oracle.q);
+        assert_eq!(tally.pairs, oracle.pairs);
+        assert!((tally.sx - oracle.sx).abs() < 1e-7);
+        assert!((tally.sy - oracle.sy).abs() < 1e-7);
+    }
+
+    #[test]
+    fn naive_mode_wastes_what_salvage_keeps() {
+        // Same crash, salvage off: the bank is discarded, the requeued
+        // attempt re-executes the full range, and the waste shows up as
+        // executed - logical.  The tally must still be exact — waste is a
+        // cost, never a correctness leak.
+        let (offset, count) = (5_000u64, 2_000_000u64);
+        let naive = crash_one_ep_job(offset, count, 400, false);
+        let m = &naive.report.metrics;
+        assert_eq!(m.jobs_completed, 1, "{m:?}");
+        assert_eq!(m.ep_pairs_salvaged, 0, "naive mode banks nothing across faults");
+        assert!(
+            m.ep_pairs_executed > count,
+            "naive re-execution must waste pairs: executed {} <= logical {count}",
+            m.ep_pairs_executed
+        );
+        let wasted = m.ep_pairs_executed - count;
+        assert!(wasted > 0);
+        let tally = naive.report.ep_tallies.values().next().expect("job tallied");
+        let oracle = ep_scalar(offset, count);
+        assert_eq!(tally.nacc, oracle.nacc);
+        assert_eq!(tally.pairs, oracle.pairs);
+        // Salvage eliminates that waste entirely at the same crash point.
+        let salvaged = crash_one_ep_job(offset, count, 400, true);
+        assert_eq!(
+            salvaged.report.metrics.ep_pairs_executed - count,
+            0,
+            "salvage must waste nothing"
+        );
+    }
+
+    /// A two-node grid with a 20x-slow single-core straggler: flat clocks
+    /// (base == turbo == all-core) so every rate is exact, one slice lands
+    /// on the slow core, and the steal window is wide.
+    fn straggler_config() -> Config {
+        use crate::config::ClientConfig;
+        use crate::host::client::ClientOs;
+        use crate::vm::cpu::CpuModel;
+        let mk = |name: &str, cores: u32, ppc: f64| ClientConfig {
+            name: name.into(),
+            os: ClientOs::Linux,
+            cpu: CpuModel {
+                name: format!("flat-{name}"),
+                cores,
+                base_ghz: 3.0,
+                max_turbo_ghz: 3.0,
+                all_core_ghz: 3.0,
+                pairs_per_cycle: ppc,
+            },
+            hypervisor: None,
+            switch_hops: 2,
+            stack_us: 120.0,
+            link_mbps: 1000.0,
+        };
+        let mut cfg = Config::table1();
+        cfg.clients = vec![mk("fast", 4, 0.004), mk("slow", 1, 0.00002)];
+        cfg
+    }
+
+    fn run_straggler_flood(steal: bool) -> ScenarioRun {
+        let mut g = Gridlan::build(straggler_config());
+        g.boot_all(0);
+        let trace: Vec<TraceJob> = (0..5)
+            .map(|i| {
+                EpSlice { proc: i, pair_offset: i as u64 * 200_000, pair_count: 200_000 }
+                    .trace_job(0, 3600 * DUR_SEC)
+            })
+            .collect();
+        let scenario = Scenario {
+            horizon: 3600 * DUR_SEC,
+            recovery: RecoveryPolicy { steal, ..Default::default() },
+            ..Default::default()
+        };
+        run_scenario(g, trace, &scenario, EpEngine::scalar())
+    }
+
+    #[test]
+    fn steal_splits_the_straggler_and_beats_no_steal_makespan() {
+        let baseline = run_straggler_flood(false);
+        assert_eq!(baseline.report.metrics.ep_steals, 0);
+        assert!(baseline.report.steal_lineage.is_empty());
+
+        let stolen = run_straggler_flood(true);
+        let m = &stolen.report.metrics;
+        assert!(m.ep_steals >= 1, "idle fast cores must steal from the straggler: {m:?}");
+        assert_eq!(m.jobs_completed, 5 + m.ep_steals, "every child job completes");
+        assert!(!stolen.report.steal_lineage.is_empty());
+        for (child, parent) in &stolen.report.steal_lineage {
+            assert_ne!(child, parent);
+            assert!(
+                stolen.report.ep_tallies.contains_key(child)
+                    && stolen.report.ep_tallies.contains_key(parent),
+                "both halves of a split must complete and tally"
+            );
+        }
+        // Stealing moves work, it never duplicates it.
+        assert_eq!(m.ep_pairs_executed, 1_000_000, "no pair executes twice under stealing");
+        assert_eq!(stolen.engine.pairs_executed(), 1_000_000);
+        let total = stolen.report.ep_total();
+        let oracle = ep_scalar(0, 1_000_000);
+        assert_eq!(total.nacc, oracle.nacc);
+        assert_eq!(total.q, oracle.q);
+        assert_eq!(total.pairs, oracle.pairs);
+        assert!((total.sx - oracle.sx).abs() < 1e-7);
+        // The point of the exercise: the straggler's tail shrinks.
+        assert!(
+            m.makespan < baseline.report.metrics.makespan,
+            "steal makespan {} must beat no-steal {}",
+            m.makespan,
+            baseline.report.metrics.makespan
+        );
+    }
+
+    #[test]
+    fn steal_threshold_honors_the_speed_model() {
+        // With stealing on but every node equally fast and busy, the
+        // profit test (child must finish before the straggler would) finds
+        // no victim: a short remainder is never worth the MOM overheads.
+        let mut g = Gridlan::build(Config::table1());
+        g.boot_all(0);
+        let trace = vec![EpSlice { proc: 0, pair_offset: 0, pair_count: 500_000 }
+            .trace_job(0, 3600 * DUR_SEC)];
+        let scenario = Scenario {
+            horizon: 3600 * DUR_SEC,
+            recovery: RecoveryPolicy { steal: true, ..Default::default() },
+            ..Default::default()
+        };
+        let run = run_scenario(g, trace, &scenario, EpEngine::scalar());
+        let m = &run.report.metrics;
+        // ~35 ms of compute against ~1.55 s of steal overhead: no steal.
+        assert_eq!(m.ep_steals, 0, "unprofitable steal must be rejected: {m:?}");
+        assert_eq!(m.jobs_completed, 1);
+        assert_eq!(m.ep_pairs_executed, 500_000);
+    }
+
+    #[test]
+    fn prop_random_crash_schedules_keep_tallies_exact() {
+        use crate::util::prop::{check, expect, Outcome};
+        // Random crash instants (prologue, mid-compute, epilogue, or after
+        // completion) under both recovery modes: the merged tally must
+        // equal the scalar oracle bit-for-bit on counters, salvage must
+        // never re-execute a pair, and naive mode may only over-execute.
+        check(6, |g| {
+            let offset = g.u64_in(0..10_000);
+            let count = g.u64_in(1_000_000..3_000_000);
+            let crash_ms = g.u64_in(0..800);
+            let salvage = g.u64_in(0..2) == 0;
+            let run = crash_one_ep_job(offset, count, crash_ms, salvage);
+            let m = &run.report.metrics;
+            if m.jobs_completed != 1 {
+                return Outcome::Fail(format!(
+                    "offset={offset} count={count} crash_ms={crash_ms} salvage={salvage}: \
+                     completed {} != 1",
+                    m.jobs_completed
+                ));
+            }
+            let tally = run.report.ep_tallies.values().next().expect("job tallied").clone();
+            let oracle = ep_scalar(offset, count);
+            if tally.nacc != oracle.nacc
+                || tally.q != oracle.q
+                || tally.pairs != oracle.pairs
+                || (tally.sx - oracle.sx).abs() >= 1e-7
+            {
+                return Outcome::Fail(format!(
+                    "offset={offset} count={count} crash_ms={crash_ms} salvage={salvage}: \
+                     tally diverged from oracle (nacc {} vs {})",
+                    tally.nacc, oracle.nacc
+                ));
+            }
+            if run.engine.pairs_executed() != m.ep_pairs_executed {
+                return Outcome::Fail(format!(
+                    "engine executed {} but metrics counted {}",
+                    run.engine.pairs_executed(),
+                    m.ep_pairs_executed
+                ));
+            }
+            if salvage {
+                expect(
+                    m.ep_pairs_executed == count,
+                    &format!(
+                        "salvage re-executed pairs: executed {} != logical {count} \
+                         (offset={offset} crash_ms={crash_ms})",
+                        m.ep_pairs_executed
+                    ),
+                )
+            } else {
+                expect(
+                    m.ep_pairs_executed >= count,
+                    &format!(
+                        "executed {} < logical {count} — pairs went missing \
+                         (offset={offset} crash_ms={crash_ms})",
+                        m.ep_pairs_executed
+                    ),
+                )
+            }
+        });
     }
 }

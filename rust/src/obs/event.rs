@@ -33,6 +33,13 @@ pub enum EventKind {
     Fault { client: String, kind: String, outage_ns: u64 },
     /// A running job was thrown back in the queue by a node loss.
     Requeue { job: u64, client: String },
+    /// A running EP job finished a sub-span: `cursor` is the absolute
+    /// pair index execution has reached, `pairs_done` the pairs banked
+    /// so far this attempt.
+    Checkpoint { job: u64, cursor: u64, pairs_done: u64 },
+    /// A straggler's remaining range `[offset, offset+count)` was split
+    /// off `parent` into new job `child`.
+    Steal { parent: u64, child: u64, offset: u64, count: u64 },
 }
 
 impl EventKind {
@@ -45,6 +52,8 @@ impl EventKind {
             EventKind::Complete { .. } => "complete",
             EventKind::Fault { .. } => "fault",
             EventKind::Requeue { .. } => "requeue",
+            EventKind::Checkpoint { .. } => "checkpoint",
+            EventKind::Steal { .. } => "steal",
         }
     }
 
@@ -113,6 +122,17 @@ impl ScenarioEvent {
                 o.insert("job", Json::Num(*job as f64));
                 o.insert("client", Json::Str(client.clone()));
             }
+            EventKind::Checkpoint { job, cursor, pairs_done } => {
+                o.insert("job", Json::Num(*job as f64));
+                o.insert("cursor", Json::Num(*cursor as f64));
+                o.insert("pairs_done", Json::Num(*pairs_done as f64));
+            }
+            EventKind::Steal { parent, child, offset, count } => {
+                o.insert("parent", Json::Num(*parent as f64));
+                o.insert("child", Json::Num(*child as f64));
+                o.insert("offset", Json::Num(*offset as f64));
+                o.insert("count", Json::Num(*count as f64));
+            }
         }
         Json::Obj(o)
     }
@@ -147,6 +167,12 @@ impl ScenarioEvent {
             }
             EventKind::Requeue { job, client } => {
                 format!("job {job} requeued off {client}")
+            }
+            EventKind::Checkpoint { job, cursor, pairs_done } => {
+                format!("job {job} checkpointed at pair {cursor} ({pairs_done} done)")
+            }
+            EventKind::Steal { parent, child, offset, count } => {
+                format!("job {child} stole [{offset},+{count}) from job {parent}")
             }
         }
     }
@@ -199,6 +225,17 @@ impl ScenarioEvent {
             "requeue" => EventKind::Requeue {
                 job: req_u64(&j, "job")?,
                 client: req_str(&j, "client")?,
+            },
+            "checkpoint" => EventKind::Checkpoint {
+                job: req_u64(&j, "job")?,
+                cursor: req_u64(&j, "cursor")?,
+                pairs_done: req_u64(&j, "pairs_done")?,
+            },
+            "steal" => EventKind::Steal {
+                parent: req_u64(&j, "parent")?,
+                child: req_u64(&j, "child")?,
+                offset: req_u64(&j, "offset")?,
+                count: req_u64(&j, "count")?,
             },
             other => return Err(format!("unknown event kind {other:?}")),
         };
@@ -345,6 +382,14 @@ mod tests {
                 },
             ),
             ScenarioEvent::new(500, EventKind::Requeue { job: 1, client: "n02".into() }),
+            ScenarioEvent::new(
+                550,
+                EventKind::Checkpoint { job: 1, cursor: 12_288, pairs_done: 8_192 },
+            ),
+            ScenarioEvent::new(
+                600,
+                EventKind::Steal { parent: 1, child: 9, offset: 12_288, count: 4_096 },
+            ),
         ]
     }
 

@@ -24,6 +24,10 @@ pub struct EventRollup {
     pub completed_ok: u64,
     pub faults: u64,
     pub requeues: u64,
+    /// Sub-span checkpoints recorded for running EP jobs.
+    pub checkpoints: u64,
+    /// Straggler range-steal operations.
+    pub steals: u64,
     /// Per-completion queue wait, in seconds.
     pub wait_secs: Summary,
     /// Timestamp of the last record (sim ns).
@@ -49,6 +53,8 @@ impl EventRollup {
                 }
                 EventKind::Fault { .. } => r.faults += 1,
                 EventKind::Requeue { .. } => r.requeues += 1,
+                EventKind::Checkpoint { .. } => r.checkpoints += 1,
+                EventKind::Steal { .. } => r.steals += 1,
             }
         }
         r
@@ -94,6 +100,8 @@ impl EventRollup {
         t.row(&["completed ok".into(), self.completed_ok.to_string()]);
         t.row(&["faults".into(), self.faults.to_string()]);
         t.row(&["requeues".into(), self.requeues.to_string()]);
+        t.row(&["checkpoints".into(), self.checkpoints.to_string()]);
+        t.row(&["steals".into(), self.steals.to_string()]);
         t.row(&["mean wait".into(), secs(self.mean_wait_secs())]);
         t.row(&["p99 wait".into(), secs(self.wait_secs.p99())]);
         t.row(&["completion rate".into(), format!("{:.3}", self.completion_rate())]);
@@ -134,6 +142,14 @@ mod tests {
             ),
             ScenarioEvent::new(50, EventKind::Requeue { job: 1, client: "n01".into() }),
             ScenarioEvent::new(
+                45,
+                EventKind::Checkpoint { job: 1, cursor: 4_096, pairs_done: 4_096 },
+            ),
+            ScenarioEvent::new(
+                60,
+                EventKind::Steal { parent: 1, child: 2, offset: 4_096, count: 1_024 },
+            ),
+            ScenarioEvent::new(
                 90,
                 EventKind::Schedule { job: 1, alloc: vec![("n02".into(), 2)] },
             ),
@@ -156,6 +172,8 @@ mod tests {
         assert_eq!(r.completed_ok, 1);
         assert_eq!(r.faults, 1);
         assert_eq!(r.requeues, 1);
+        assert_eq!(r.checkpoints, 1);
+        assert_eq!(r.steals, 1);
         assert_eq!(r.last_t, 200);
         assert!((r.mean_wait_secs() - 3.0).abs() < 1e-12);
     }

@@ -453,6 +453,20 @@ impl PbsServer {
         self.set_node_power(name, NodePower::Online);
     }
 
+    /// Rewrite a job's opaque payload in place.  The recovery layer uses
+    /// this to shrink an EP job's range to the unexecuted remainder — on a
+    /// salvage requeue (checkpointed sub-spans are banked, the requeued
+    /// attempt carries only `ep:<cursor>:<rest>`) and on a straggler steal
+    /// (the running parent is truncated at the split point).  Touches
+    /// nothing but the payload string: state, allocation, the free index
+    /// and the running-set mirror are all left alone.
+    pub fn set_payload(&mut self, id: JobId, payload: &str) -> Result<(), String> {
+        let job =
+            self.jobs.get_mut(&id).ok_or_else(|| format!("set_payload: unknown job {id}"))?;
+        job.payload = payload.to_string();
+        Ok(())
+    }
+
     /// Busy/total cores in a pool (for the metrics endpoint).
     pub fn pool_utilization(&self, pool: NodePool) -> (u32, u32) {
         let mut busy = 0;
@@ -683,6 +697,24 @@ mod tests {
         s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 200);
         s.audit_free_index();
         assert_eq!(s.job(id).unwrap().state, JobState::Running);
+    }
+
+    #[test]
+    fn set_payload_rewrites_only_the_payload() {
+        let mut s = server_with_grid();
+        let id = s.qsub(&ep_script(1, 2), "u", "ep:0:4096", 0).unwrap();
+        s.schedule_cycle(NodePool::Gridlan, &FifoScheduler, 1);
+        let before_alloc = s.job(id).unwrap().allocation.clone();
+        s.set_payload(id, "ep:1024:3072").unwrap();
+        let j = s.job(id).unwrap();
+        assert_eq!(j.payload, "ep:1024:3072");
+        assert_eq!(j.state, JobState::Running, "state untouched");
+        assert_eq!(j.allocation, before_alloc, "allocation untouched");
+        s.audit_free_index();
+        // The completion record carries the rewritten range.
+        let rec = s.complete(id, 0, 100);
+        assert_eq!(rec.payload, "ep:1024:3072");
+        assert!(s.set_payload(JobId(999), "x").is_err());
     }
 
     #[test]

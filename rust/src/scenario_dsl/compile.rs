@@ -109,6 +109,7 @@ impl ScenarioSpec {
             sched_period: self.sched_period,
             faults: self.storm.as_ref().map(|s| s.to_plan()).unwrap_or_else(FaultPlan::none),
             scripted_faults: expand_faults(self),
+            recovery: self.recovery.clone(),
         };
 
         CompiledScenario {
@@ -128,18 +129,24 @@ impl ScenarioSpec {
 fn build_config(spec: &ScenarioSpec) -> Config {
     match &spec.nodes {
         NodesSpec::Table1 { .. } => Config::table1(),
-        NodesSpec::Custom { cores, switch_hops, stack_us, link_mbps, .. } => {
+        NodesSpec::Custom {
+            count, cores, switch_hops, stack_us, link_mbps, slow_nodes, slow_factor, ..
+        } => {
             let mut cfg = Config::table1();
             cfg.clients.clear();
-            for name in spec.nodes.names() {
+            for (i, name) in spec.nodes.names().into_iter().enumerate() {
+                // The last `slow_nodes` clients are stragglers: same chip,
+                // 1/slow_factor the per-cycle EP throughput.
+                let slow = (i as u32) >= count - slow_nodes;
+                let ppc = if slow { 0.0045 / slow_factor } else { 0.0045 };
                 cfg.clients.push(ClientConfig {
                     cpu: CpuModel {
-                        name: format!("custom-{name}"),
+                        name: format!("custom-{name}{}", if slow { "-slow" } else { "" }),
                         cores: *cores,
                         base_ghz: 3.0,
                         max_turbo_ghz: 3.4,
                         all_core_ghz: 3.1,
-                        pairs_per_cycle: 0.0045,
+                        pairs_per_cycle: ppc,
                     },
                     name,
                     os: ClientOs::Linux,
@@ -307,6 +314,38 @@ mod tests {
         assert_eq!(c.config.clients[15].name, "n16");
         assert!(c.config.clients.iter().all(|cl| cl.cpu.cores == 4));
         assert_eq!(c.config.clients[0].switch_hops, 1);
+    }
+
+    #[test]
+    fn recovery_policy_flows_into_the_scenario() {
+        let c = spec(
+            r#"{"seed": 4, "recovery": {"salvage": false, "checkpoint_interval_pairs": 4096,
+                "steal": true}}"#,
+        )
+        .compile();
+        assert!(!c.scenario.recovery.salvage);
+        assert_eq!(c.scenario.recovery.checkpoint_interval, 4096);
+        assert!(c.scenario.recovery.steal);
+        // Absent block: the runner defaults (salvage on, auto interval).
+        let d = spec(r#"{"seed": 4}"#).compile();
+        assert!(d.scenario.recovery.salvage && !d.scenario.recovery.steal);
+        assert_eq!(d.scenario.recovery.checkpoint_interval, 0);
+    }
+
+    #[test]
+    fn slow_nodes_derate_the_tail_of_a_custom_grid() {
+        let c = spec(
+            r#"{"seed": 5, "nodes": {"count": 3, "cores": 2, "slow_nodes": 1,
+                "slow_factor": 16}}"#,
+        )
+        .compile();
+        assert_eq!(c.config.clients.len(), 3);
+        let fast = &c.config.clients[0].cpu;
+        let slow = &c.config.clients[2].cpu;
+        assert_eq!(c.config.clients[2].name, "n03");
+        assert!(slow.name.ends_with("-slow"));
+        assert!((fast.pairs_per_cycle / slow.pairs_per_cycle - 16.0).abs() < 1e-12);
+        assert_eq!(c.config.clients[1].cpu.pairs_per_cycle, fast.pairs_per_cycle);
     }
 
     #[test]

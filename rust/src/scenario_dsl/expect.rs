@@ -33,8 +33,15 @@ pub struct Expect {
     /// Merged EP tally must equal the scalar oracle over the declared
     /// pair ranges.
     pub ep_tally_exact: bool,
-    /// Exact count of EP pairs executed (excluding wasted re-execution).
+    /// Exact count of EP pairs *executed* on the backend — this INCLUDES
+    /// wasted re-execution after faults (under salvage recovery a clean
+    /// or faulted run both execute exactly the logical pair count).
     pub ep_pairs_executed: Option<u64>,
+    /// Upper bound on wasted pairs: executed minus the merged logical
+    /// tally.  `0` asserts perfect salvage (no pair ran twice).
+    pub max_wasted_pairs: Option<u64>,
+    /// At least this many straggler range-steals happened.
+    pub min_steals: Option<u64>,
     pub max_makespan_secs: Option<f64>,
     pub min_goodput: Option<f64>,
     pub max_goodput: Option<f64>,
@@ -60,6 +67,8 @@ impl Expect {
                 "min_watchdog_restarts",
                 "ep_tally_exact",
                 "ep_pairs_executed",
+                "max_wasted_pairs",
+                "min_steals",
                 "max_makespan_secs",
                 "min_goodput",
                 "max_goodput",
@@ -74,6 +83,8 @@ impl Expect {
             min_watchdog_restarts: get_count(o, path, "min_watchdog_restarts")?,
             ep_tally_exact: get_bool(o, path, "ep_tally_exact")?.unwrap_or(false),
             ep_pairs_executed: get_count(o, path, "ep_pairs_executed")?,
+            max_wasted_pairs: get_count(o, path, "max_wasted_pairs")?,
+            min_steals: get_count(o, path, "min_steals")?,
             max_makespan_secs: get_num(o, path, "max_makespan_secs")?,
             min_goodput: get_num(o, path, "min_goodput")?,
             max_goodput: get_num(o, path, "max_goodput")?,
@@ -118,6 +129,16 @@ impl Expect {
         }
         if let Some(want) = self.ep_pairs_executed {
             r.eq("ep_pairs_executed", m.ep_pairs_executed, want);
+        }
+        if let Some(want) = self.max_wasted_pairs {
+            // Waste = executions beyond the merged logical range.
+            let wasted = m.ep_pairs_executed.saturating_sub(facts.ep_total.pairs);
+            r.push(wasted <= want, format!("max_wasted_pairs <= {want}"), || {
+                format!("{wasted} pairs were re-executed waste")
+            });
+        }
+        if let Some(want) = self.min_steals {
+            r.ge("min_steals", m.ep_steals, want);
         }
         if self.ep_tally_exact {
             let mut oracle = EpTally::default();
@@ -313,6 +334,8 @@ mod tests {
                 "min_watchdog_restarts": 1,
                 "ep_tally_exact": true,
                 "ep_pairs_executed": 240000,
+                "max_wasted_pairs": 0,
+                "min_steals": 1,
                 "min_goodput": 0.5
             }"#,
         )
@@ -321,6 +344,30 @@ mod tests {
         assert!(e.all_jobs_terminal && e.ep_tally_exact);
         assert_eq!(e.jobs_completed, Some(8));
         assert_eq!(e.ep_pairs_executed, Some(240_000));
+        assert_eq!(e.max_wasted_pairs, Some(0));
+        assert_eq!(e.min_steals, Some(1));
         assert!(!e.is_empty());
+    }
+
+    #[test]
+    fn wasted_pairs_and_steal_checks() {
+        // Executed 12_000 pairs but the merged logical range was only
+        // 10_000 — 2_000 pairs of post-fault waste.
+        let mut f = facts(2, 1, 1);
+        f.metrics.ep_pairs_executed = 12_000;
+        f.ep_total.pairs = 10_000;
+        f.metrics.ep_steals = 2;
+        let loose = Expect {
+            max_wasted_pairs: Some(2_000),
+            min_steals: Some(2),
+            ..Default::default()
+        };
+        assert!(loose.check(&f, &[]).passed());
+        let tight = Expect { max_wasted_pairs: Some(0), ..Default::default() };
+        let r = tight.check(&f, &[]);
+        assert!(!r.passed());
+        assert!(r.failures().next().unwrap().line.contains("2000 pairs"), "{r:?}");
+        let greedy = Expect { min_steals: Some(3), ..Default::default() };
+        assert!(!greedy.check(&f, &[]).passed());
     }
 }

@@ -14,6 +14,7 @@
 use std::fmt;
 
 use crate::config::SchedPolicy;
+use crate::coordinator::scenario::RecoveryPolicy;
 use crate::host::faults::{FaultKind, FaultPlan};
 use crate::scenario_dsl::expect::Expect;
 use crate::sim::clock::{from_secs_f64, SimTime, DUR_SEC};
@@ -158,7 +159,9 @@ pub enum NodesSpec {
     /// The paper's Table-1 testbed (4 clients, 26 cores).
     Table1 { prebooted: bool },
     /// A synthetic homogeneous deployment: `count` clients of `cores`
-    /// cores each, Linux, default hypervisor.
+    /// cores each, Linux, default hypervisor.  The last `slow_nodes`
+    /// clients run at `1/slow_factor` EP throughput (heterogeneous
+    /// straggler experiments — the analogue of Table 1's n04).
     Custom {
         count: u32,
         cores: u32,
@@ -166,6 +169,8 @@ pub enum NodesSpec {
         switch_hops: u32,
         stack_us: f64,
         link_mbps: f64,
+        slow_nodes: u32,
+        slow_factor: f64,
     },
 }
 
@@ -212,12 +217,24 @@ fn parse_nodes(j: Option<&Json>) -> Result<NodesSpec, DslError> {
     check_keys(
         o,
         "nodes",
-        &["preset", "count", "cores", "prebooted", "switch_hops", "stack_us", "link_mbps"],
+        &[
+            "preset",
+            "count",
+            "cores",
+            "prebooted",
+            "switch_hops",
+            "stack_us",
+            "link_mbps",
+            "slow_nodes",
+            "slow_factor",
+        ],
     )?;
     let prebooted = get_bool(o, "nodes", "prebooted")?.unwrap_or(false);
     match get_str(o, "nodes", "preset")?.as_deref() {
         Some("table1") => {
-            for k in ["count", "cores", "switch_hops", "stack_us", "link_mbps"] {
+            for k in
+                ["count", "cores", "switch_hops", "stack_us", "link_mbps", "slow_nodes", "slow_factor"]
+            {
                 if o.contains(k) {
                     return Err(DslError::at(
                         join("nodes", k),
@@ -245,6 +262,17 @@ fn parse_nodes(j: Option<&Json>) -> Result<NodesSpec, DslError> {
             let switch_hops = get_count(o, "nodes", "switch_hops")?.unwrap_or(2);
             let stack_us = get_num(o, "nodes", "stack_us")?.unwrap_or(120.0);
             let link_mbps = get_num(o, "nodes", "link_mbps")?.unwrap_or(1000.0);
+            let slow_nodes = get_count(o, "nodes", "slow_nodes")?.unwrap_or(0);
+            if slow_nodes >= count {
+                return Err(DslError::at(
+                    "nodes.slow_nodes",
+                    "must leave at least one full-speed node (slow_nodes < count)",
+                ));
+            }
+            let slow_factor = get_num(o, "nodes", "slow_factor")?.unwrap_or(8.0);
+            if slow_factor < 1.0 {
+                return Err(DslError::at("nodes.slow_factor", "must be >= 1"));
+            }
             Ok(NodesSpec::Custom {
                 count: count as u32,
                 cores: cores as u32,
@@ -252,6 +280,8 @@ fn parse_nodes(j: Option<&Json>) -> Result<NodesSpec, DslError> {
                 switch_hops: switch_hops as u32,
                 stack_us,
                 link_mbps,
+                slow_nodes: slow_nodes as u32,
+                slow_factor,
             })
         }
     }
@@ -689,6 +719,26 @@ fn parse_workload(j: &Json, path: &str, nodes: &NodesSpec) -> Result<WorkloadSpe
     }
 }
 
+// ------------------------------------------------------------ recovery
+
+/// Parse the `recovery` block into the runner's [`RecoveryPolicy`]:
+/// `salvage` (default true) banks checkpointed sub-spans across faults,
+/// `checkpoint_interval_pairs` (default 0 = auto ~count/16) sets the
+/// sub-span size, and `steal` (default false) splits stragglers'
+/// remainders onto idle cores.
+fn parse_recovery(j: Option<&Json>) -> Result<RecoveryPolicy, DslError> {
+    let Some(j) = j else { return Ok(RecoveryPolicy::default()) };
+    let o = j.as_obj().ok_or_else(|| DslError::at("recovery", "must be an object"))?;
+    check_keys(o, "recovery", &["salvage", "checkpoint_interval_pairs", "steal"])?;
+    let d = RecoveryPolicy::default();
+    Ok(RecoveryPolicy {
+        salvage: get_bool(o, "recovery", "salvage")?.unwrap_or(d.salvage),
+        checkpoint_interval: get_count(o, "recovery", "checkpoint_interval_pairs")?
+            .unwrap_or(d.checkpoint_interval),
+        steal: get_bool(o, "recovery", "steal")?.unwrap_or(d.steal),
+    })
+}
+
 // -------------------------------------------------------------- engine
 
 /// Which compute backend runs EP payloads.
@@ -731,6 +781,8 @@ pub struct ScenarioSpec {
     pub sched_period: SimTime,
     pub engine: EngineSpec,
     pub nodes: NodesSpec,
+    /// EP checkpoint/salvage/steal policy (the `recovery` block).
+    pub recovery: RecoveryPolicy,
     pub faults: Vec<FaultSpec>,
     pub storm: Option<StormSpec>,
     pub workloads: Vec<WorkloadSpec>,
@@ -763,6 +815,7 @@ impl ScenarioSpec {
                 "sched_period_secs",
                 "engine",
                 "nodes",
+                "recovery",
                 "faults",
                 "storm",
                 "workloads",
@@ -793,6 +846,7 @@ impl ScenarioSpec {
         }
         let engine = parse_engine(root)?;
         let nodes = parse_nodes(root.get("nodes"))?;
+        let recovery = parse_recovery(root.get("recovery"))?;
         let names = nodes.names();
 
         let mut faults = Vec::new();
@@ -829,6 +883,7 @@ impl ScenarioSpec {
             sched_period,
             engine,
             nodes,
+            recovery,
             faults,
             storm,
             workloads,
@@ -859,8 +914,48 @@ mod tests {
         assert_eq!(s.sched_period, 10 * DUR_SEC);
         assert_eq!(s.engine, EngineSpec::Scalar);
         assert_eq!(s.nodes, NodesSpec::Table1 { prebooted: false });
+        assert_eq!(s.recovery, RecoveryPolicy::default());
+        assert!(s.recovery.salvage && !s.recovery.steal);
         assert!(s.faults.is_empty() && s.workloads.is_empty() && s.storm.is_none());
         assert!(s.expect.is_empty());
+    }
+
+    #[test]
+    fn recovery_block_parses_strictly() {
+        let s = ScenarioSpec::parse(&minimal(
+            r#""recovery": {"salvage": false, "checkpoint_interval_pairs": 8192, "steal": true}"#,
+        ))
+        .unwrap();
+        assert!(!s.recovery.salvage);
+        assert_eq!(s.recovery.checkpoint_interval, 8192);
+        assert!(s.recovery.steal);
+        let e = parse_err(&minimal(r#""recovery": {"salvge": false}"#));
+        assert_eq!(e.path, "recovery.salvge");
+        let e = parse_err(&minimal(r#""recovery": {"steal": "yes"}"#));
+        assert_eq!(e.path, "recovery.steal");
+    }
+
+    #[test]
+    fn slow_nodes_parse_and_validate() {
+        let s = ScenarioSpec::parse(&minimal(
+            r#""nodes": {"count": 3, "cores": 2, "slow_nodes": 1, "slow_factor": 16}"#,
+        ))
+        .unwrap();
+        match s.nodes {
+            NodesSpec::Custom { slow_nodes, slow_factor, .. } => {
+                assert_eq!(slow_nodes, 1);
+                assert_eq!(slow_factor, 16.0);
+            }
+            other => panic!("wrong nodes: {other:?}"),
+        }
+        let e = parse_err(&minimal(r#""nodes": {"count": 2, "cores": 1, "slow_nodes": 2}"#));
+        assert_eq!(e.path, "nodes.slow_nodes");
+        let e = parse_err(&minimal(
+            r#""nodes": {"count": 2, "cores": 1, "slow_nodes": 1, "slow_factor": 0.5}"#,
+        ));
+        assert_eq!(e.path, "nodes.slow_factor");
+        let e = parse_err(&minimal(r#""nodes": {"preset": "table1", "slow_nodes": 1}"#));
+        assert_eq!(e.path, "nodes.slow_nodes");
     }
 
     #[test]
